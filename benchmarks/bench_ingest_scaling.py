@@ -1,0 +1,258 @@
+"""Paper Fig 3 (ingest scaling + saturation) and Fig 4 (backpressure
+regimes).
+
+Two layers, both reported:
+
+1. MEASURED: real multi-threaded ingest on the real store — per-client
+   MB/s (the paper's 1.1 MB/s-per-client figure, our CPU's equivalent),
+   tablet service rate, and a small W x S sweep. One CPU core caps the
+   *absolute* numbers; the per-op costs are real.
+
+2. CALIBRATED SIMULATION: the paper's 24-node cluster sweep (clients up to
+   dozens, 1-8 tablet servers) does not fit on one core, so the Fig 3/4
+   curves are produced by a discrete-time queueing model whose two
+   parameters (client production rate, tablet service rate) are the
+   MEASURED values from layer 1. Reproduction targets: ingest rate linear
+   in client count at low load; saturation level set by tablet-server
+   count; rate variance (backpressure) rising sharply near saturation —
+   the three regimes of Fig 4.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import EventStore, web_proxy_schema
+from repro.core.ingest import BatchWriter, IngestMetrics, rate_series
+from repro.pipeline.sources import SyntheticWebProxySource, parse_web_proxy_lines
+
+
+# --------------------------------------------------------------- measured
+def measure_client_rate(n_rows: int = 40_000) -> Dict:
+    """Un-throttled single client: parse + encode + batch-write."""
+    src = SyntheticWebProxySource(seed=11)
+    store = EventStore(web_proxy_schema(), n_shards=4, flush_rows=1 << 22)  # no compaction
+    lines = src.gen_lines(n_rows, 0, 3600)
+    nbytes = sum(len(l) for l in lines)
+    m = IngestMetrics()
+    w = BatchWriter(store, batch_rows=8192, metrics=m)
+    t0 = time.perf_counter()
+    ts, cols = parse_web_proxy_lines(lines)
+    w.add(ts, cols, nbytes=nbytes)
+    w.close()
+    dt = time.perf_counter() - t0
+    return {"rows_per_s": n_rows / dt, "mb_per_s": nbytes / dt / 1e6, "seconds": dt}
+
+
+def measure_tablet_rate(n_rows: int = 200_000, flush_rows: int = 16384) -> Dict:
+    """Server-side service rate: pre-encoded inserts incl. compactions."""
+    store = EventStore(web_proxy_schema(), n_shards=1, flush_rows=flush_rows, max_runs=6)
+    src = SyntheticWebProxySource(seed=12)
+    lines = src.gen_lines(50_000, 0, 3600)
+    ts, colvals = parse_web_proxy_lines(lines)
+    cols = store.encode_events(ts, colvals)
+    t0 = time.perf_counter()
+    done = 0
+    while done < n_rows:
+        store.ingest_encoded(ts, cols)
+        done += len(ts)
+    dt = time.perf_counter() - t0
+    bp = store.backpressure_stats()
+    return {"rows_per_s": done / dt, "seconds": dt, **bp}
+
+
+def real_sweep(workers_list=(1, 2, 4), n_shards: int = 4, rows_per_worker: int = 20_000) -> List[Dict]:
+    """Real threaded ingest (GIL-bound ceiling — reported as such)."""
+    out = []
+    src = SyntheticWebProxySource(seed=13)
+    for n_w in workers_list:
+        store = EventStore(web_proxy_schema(), n_shards=n_shards, flush_rows=32768)
+        lines_per = [src.gen_lines(rows_per_worker, 0, 3600) for _ in range(n_w)]
+        metrics = [IngestMetrics() for _ in range(n_w)]
+
+        def work(i):
+            w = BatchWriter(store, batch_rows=8192, metrics=metrics[i])
+            ls = lines_per[i]
+            for j in range(0, len(ls), 4096):
+                chunk = ls[j : j + 4096]
+                ts, cols = parse_web_proxy_lines(chunk)
+                w.add(ts, cols, nbytes=sum(len(l) for l in chunk))
+            w.close()
+
+        threads = [threading.Thread(target=work, args=(i,)) for i in range(n_w)]
+        t0 = time.perf_counter()
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        dt = time.perf_counter() - t0
+        total = n_w * rows_per_worker
+        out.append(
+            {
+                "workers": n_w,
+                "shards": n_shards,
+                "rows_per_s": total / dt,
+                "mb_per_s": sum(m.bytes for m in metrics) / dt / 1e6,
+                "blocked_s": sum(m.blocked_seconds for m in metrics),
+            }
+        )
+    return out
+
+
+# -------------------------------------------------------------- simulated
+@dataclass
+class SimResult:
+    workers: int
+    servers: int
+    throughput: float  # rows/s steady state
+    offered: float
+    variance_ratio: float  # std/mean of instantaneous rate
+    blocked_frac: float
+    series: np.ndarray
+
+
+def simulate(
+    n_workers: int,
+    n_servers: int,
+    client_rate: float,
+    server_rate: float,
+    sim_s: float = 120.0,
+    dt: float = 0.1,
+    queue_cap_rows: float = 50_000.0,
+    seed: int = 0,
+) -> SimResult:
+    """Discrete-time queueing model of the ingest path.
+
+    Clients produce at client_rate (jittered) and round-robin-shard across
+    servers (the paper's uniform random sharding). Each server drains its
+    queue at server_rate, with periodic compaction stalls whose duration
+    scales with data ingested since the last stall (the LSM merge cost).
+    A full queue blocks the clients that route to it — backpressure."""
+    rng = np.random.default_rng(seed)
+    steps = int(sim_s / dt)
+    q = np.zeros(n_servers)
+    since_compact = np.zeros(n_servers)
+    stall = np.zeros(n_servers)
+    produced_series = np.zeros(steps)  # client-observed ingest rate (Fig 4 signal)
+    blocked_steps = 0
+    compact_every = server_rate * 4.0  # rows between stalls
+    for i in range(steps):
+        want = n_workers * client_rate * dt * rng.uniform(0.9, 1.1)
+        # Backpressure: clients block while their shard's queue is full —
+        # per-server admission since sharding is uniform.
+        room = np.maximum(queue_cap_rows - q, 0.0)
+        admit = np.minimum(want / n_servers, room)
+        produced = admit.sum()
+        if produced < want * 0.98:
+            blocked_steps += 1
+        q += admit
+        service = server_rate * dt * rng.uniform(0.85, 1.15, n_servers)
+        service = np.where(stall > 0, 0.0, service)  # stalled servers do not drain
+        stall = np.maximum(stall - dt, 0.0)
+        take = np.minimum(q, service)
+        q -= take
+        since_compact += take
+        need = since_compact > compact_every * rng.uniform(0.8, 1.2, n_servers)
+        # Compaction stall grows with merge debt AND queue depth (major
+        # compactions merge everything that piled up).
+        stall = np.where(need, (since_compact + q) / (server_rate * 5.0), stall)
+        since_compact = np.where(need, 0.0, since_compact)
+        produced_series[i] = produced / dt
+    half = steps // 2
+    steady = produced_series[half:]
+    return SimResult(
+        workers=n_workers,
+        servers=n_servers,
+        throughput=float(steady.mean()),
+        offered=n_workers * client_rate,
+        variance_ratio=float(steady.std() / max(steady.mean(), 1e-9)),
+        blocked_frac=blocked_steps / steps,
+        series=produced_series,
+    )
+
+
+def fig3_sweep(client_rate: float, server_rate: float) -> List[SimResult]:
+    out = []
+    for servers in (1, 2, 4, 8):
+        for workers in (1, 2, 4, 8, 12, 16, 24, 32, 48, 64):
+            out.append(simulate(workers, servers, client_rate, server_rate, seed=workers * 131 + servers))
+    return out
+
+
+def fig4_regimes(client_rate: float, server_rate: float, servers: int = 4) -> List[SimResult]:
+    """Three regimes: well below capacity / near capacity / saturated."""
+    cap = servers * server_rate
+    out = []
+    for frac in (0.3, 0.85, 1.15):
+        workers = max(int(round(cap * frac / client_rate)), 1)
+        out.append(simulate(workers, servers, client_rate, server_rate, sim_s=240.0, seed=7))
+    return out
+
+
+def run() -> Dict:
+    client = measure_client_rate()
+    tablet = measure_tablet_rate()
+    sweep_real = real_sweep()
+    sims = fig3_sweep(client["rows_per_s"], tablet["rows_per_s"])
+    regimes = fig4_regimes(client["rows_per_s"], tablet["rows_per_s"])
+    return {
+        "client": client,
+        "tablet": tablet,
+        "real_sweep": sweep_real,
+        "fig3": sims,
+        "fig4": regimes,
+    }
+
+
+def emit_csv(res: Dict) -> List[str]:
+    lines = [
+        f"fig3_client_rate,{1e6 / res['client']['rows_per_s']:.2f},mb_per_s={res['client']['mb_per_s']:.2f}",
+        f"fig3_tablet_rate,{1e6 / res['tablet']['rows_per_s']:.2f},rows_per_s={res['tablet']['rows_per_s']:.0f}",
+    ]
+    for r in res["real_sweep"]:
+        lines.append(
+            f"fig3_real_w{r['workers']}_s{r['shards']},{1e6 * r['workers'] / max(r['rows_per_s'], 1):.2f},"
+            f"rows_per_s={r['rows_per_s']:.0f};mb_per_s={r['mb_per_s']:.2f}"
+        )
+    for s in res["fig3"]:
+        lines.append(
+            f"fig3_sim_w{s.workers}_s{s.servers},{1e6 / max(s.throughput, 1):.3f},"
+            f"thru={s.throughput:.0f};offered={s.offered:.0f};var={s.variance_ratio:.3f}"
+        )
+    for s, name in zip(res["fig4"], ("low", "near", "saturated")):
+        lines.append(
+            f"fig4_{name},{1e6 / max(s.throughput, 1):.3f},"
+            f"var_ratio={s.variance_ratio:.3f};blocked={s.blocked_frac:.3f};workers={s.workers}"
+        )
+    return lines
+
+
+def validate(res: Dict) -> List[str]:
+    fails = []
+    # Linear scaling at low load: sim throughput for (w, s=8) ~ w * client.
+    c = res["client"]["rows_per_s"]
+    for s in res["fig3"]:
+        if s.servers == 8 and s.workers <= 4:
+            if abs(s.throughput - s.offered) > 0.15 * s.offered:
+                fails.append(f"not linear at low load: w={s.workers} thru={s.throughput:.0f} offered={s.offered:.0f}")
+    # Saturation set by server count: max throughput ratio s=8 vs s=1 ~ 8x.
+    max1 = max(s.throughput for s in res["fig3"] if s.servers == 1)
+    max8 = max(s.throughput for s in res["fig3"] if s.servers == 8)
+    if not 4.0 < max8 / max1 < 12.0:
+        fails.append(f"saturation not set by server count: max8/max1={max8 / max1:.2f}")
+    # Variance regimes (Fig 4): the paper's claim is low variance well
+    # below capacity and HIGH variance at/near saturation ("dips" appear
+    # near the limit, "high variation" at saturation). Near-vs-saturated
+    # are both hot regimes and not strictly ordered — at deep saturation
+    # the admission-limited rate can steady out slightly.
+    v = [s.variance_ratio for s in res["fig4"]]
+    if not (v[0] < 0.5 * min(v[1], v[2])):
+        fails.append(f"variance did not rise toward saturation: {v}")
+    blocked = [s.blocked_frac for s in res["fig4"]]
+    if not (blocked[0] < 0.05 and blocked[2] > 0.5):
+        fails.append(f"backpressure blocking regimes wrong: {blocked}")
+    return fails

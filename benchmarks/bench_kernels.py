@@ -1,0 +1,71 @@
+"""Kernel microbenchmarks: throughput of the three store kernels (jnp
+reference backend — the production CPU path; Pallas runs interpret-mode on
+CPU and is validated for correctness in tests, not raced here)."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import And, Eq, EventStore, Not, Or, web_proxy_schema
+from repro.core.filter import compile_tree
+from repro.kernels.aggregate_combine import combine_sorted_counts
+from repro.kernels.filter_scan import filter_scan
+from repro.kernels.merge_intersect import intersect_sorted
+
+
+def run() -> Dict:
+    rng = np.random.default_rng(5)
+    store = EventStore(web_proxy_schema(), n_shards=1)
+    n = 500_000
+    vals = {
+        "domain": rng.choice(["a.com", "b.com", "c.com", "d.com"], size=n).tolist(),
+        "method": rng.choice(["GET", "POST"], size=n).tolist(),
+        "status": rng.choice(["200", "404", "500"], size=n).tolist(),
+    }
+    ts = np.sort(rng.integers(0, 3600, n))
+    cols = store.encode_events(ts, vals)
+    tree = And(Or(Eq("domain", "a.com"), Eq("domain", "b.com")), Not(Eq("status", "404")))
+    prog = compile_tree(store, tree)
+    filter_scan(cols[:1024], prog)  # warm jit
+    t0 = time.perf_counter()
+    reps = 5
+    for _ in range(reps):
+        mask = filter_scan(cols, prog)
+    dt_f = (time.perf_counter() - t0) / reps
+
+    a = np.unique(rng.integers(0, 1 << 52, 400_000).astype(np.int64))
+    b = np.unique(
+        np.concatenate([rng.choice(a, 50_000, replace=False), rng.integers(0, 1 << 52, 200_000).astype(np.int64)])
+    )
+    intersect_sorted(a[:1024], b[:1024])
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        inter = intersect_sorted(a, b)
+    dt_i = (time.perf_counter() - t0) / reps
+
+    keys = np.sort(rng.integers(0, 50_000, 1_000_000).astype(np.int64))
+    cnt = rng.integers(1, 4, 1_000_000).astype(np.int32)
+    combine_sorted_counts(keys[:1024], cnt[:1024])
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        uk, uc = combine_sorted_counts(keys, cnt)
+    dt_c = (time.perf_counter() - t0) / reps
+
+    return {
+        "filter_rows_per_s": len(cols) / dt_f,
+        "filter_us": dt_f * 1e6,
+        "intersect_keys_per_s": len(a) / dt_i,
+        "intersect_us": dt_i * 1e6,
+        "combine_rows_per_s": len(keys) / dt_c,
+        "combine_us": dt_c * 1e6,
+    }
+
+
+def emit_csv(res: Dict) -> List[str]:
+    return [
+        f"kernel_filter_scan,{res['filter_us']:.0f},rows_per_s={res['filter_rows_per_s']:.3g}",
+        f"kernel_merge_intersect,{res['intersect_us']:.0f},keys_per_s={res['intersect_keys_per_s']:.3g}",
+        f"kernel_aggregate_combine,{res['combine_us']:.0f},rows_per_s={res['combine_rows_per_s']:.3g}",
+    ]

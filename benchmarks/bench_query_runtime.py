@@ -1,0 +1,57 @@
+"""Paper Table II: total query runtime to completion for the four schemes.
+
+Validation targets: batching overhead on total runtime is small (the paper
+calls it 'negligible for interactive applications'); index total runtime
+scales with selectivity (C << B << A)."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from repro.core import Eq, QueryProcessor
+
+from .common import BenchStore, paper_queries, timed
+
+SCHEMES = ["scan", "batched_scan", "index", "batched_index"]
+
+
+def run(bs: BenchStore) -> List[Dict]:
+    queries = paper_queries(bs)
+    out = []
+    for qname, domain in queries.items():
+        for scheme in SCHEMES:
+            tree = Eq("domain", domain)
+            best = None
+            for _ in range(2):  # first pass warms jit caches
+                qp = QueryProcessor(bs.store)
+                dt, rows = timed(
+                    lambda: sum(b.n for b in qp.run_scheme(scheme, bs.t_start, bs.t_stop, tree))
+                )
+                best = (dt, rows)
+            out.append(
+                {"query": qname, "domain": domain, "scheme": scheme,
+                 "total_s": best[0], "rows": best[1]}
+            )
+    return out
+
+
+def emit_csv(results: List[Dict]) -> List[str]:
+    return [
+        f"table2_runtime_{r['query']}_{r['scheme']},{r['total_s'] * 1e6:.0f},rows={r['rows']}"
+        for r in results
+    ]
+
+
+def validate(results: List[Dict]) -> List[str]:
+    fails = []
+    by = {(r["query"], r["scheme"]): r for r in results}
+    for q in ["A", "B", "C"]:
+        scan, bscan = by[(q, "scan")]["total_s"], by[(q, "batched_scan")]["total_s"]
+        if bscan > 2.5 * scan + 0.5:
+            fails.append(f"Q{q}: batching overhead excessive: scan={scan:.2f} batched={bscan:.2f}")
+    idx = {q: by[(q, "index")]["total_s"] for q in "ABC"}
+    # Ordering with slack: sub-millisecond runtimes are noise-dominated.
+    tol = 1e-3
+    if not (idx["C"] <= idx["B"] * 1.5 + tol and idx["B"] <= idx["A"] * 1.5 + tol):
+        fails.append(f"index runtime not ordered by selectivity: {idx}")
+    return fails

@@ -1,0 +1,77 @@
+"""Shared benchmark fixtures: a populated store + the paper's Query A/B/C
+selectivity tiers."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core import EventStore, web_proxy_schema
+from repro.core.ingest import BatchWriter, IngestMetrics
+from repro.pipeline.sources import SyntheticWebProxySource, parse_web_proxy_lines
+
+FOUR_HOURS = 4 * 3600
+
+
+@dataclass
+class BenchStore:
+    store: EventStore
+    source: SyntheticWebProxySource
+    t_start: int
+    t_stop: int
+    n_rows: int
+
+
+def build_bench_store(
+    n_rows: int = 120_000,
+    n_shards: int = 8,
+    t_stop: int = FOUR_HOURS,
+    seed: int = 3,
+    flush_rows: int = 32768,
+) -> BenchStore:
+    """Ingest n_rows of synthetic web-proxy traffic over a 4-hour window
+    (the paper's query experiments use a 4-hour range of web traffic)."""
+    src = SyntheticWebProxySource(seed=seed)
+    store = EventStore(web_proxy_schema(), n_shards=n_shards, flush_rows=flush_rows)
+    writer = BatchWriter(store, batch_rows=8192)
+    chunk = 20_000
+    for i in range(0, n_rows, chunk):
+        n = min(chunk, n_rows - i)
+        lines = src.gen_lines(n, 0, t_stop)
+        ts, cols = parse_web_proxy_lines(lines)
+        writer.add(ts, cols, nbytes=sum(len(l) for l in lines))
+    writer.close()
+    store.flush_all()
+    store.compact_all()
+    return BenchStore(store, src, 0, t_stop, n_rows)
+
+
+def paper_queries(bs: BenchStore) -> Dict[str, str]:
+    """Query A: most popular domain; B: somewhat popular; C: unpopular —
+    matching the paper's selectivity tiers. The C pick is the least popular
+    domain that still has >= ~50 hits so 'time to 100th entry' is
+    measurable."""
+    from repro.core import Eq, QueryProcessor
+
+    counts = {}
+    for q in np.linspace(0, 0.5, 100):
+        dom = bs.source.domain_by_popularity(q)
+        c = bs.store.agg_count("domain", dom, bs.t_start, bs.t_stop)
+        counts[dom] = c
+    ranked = sorted(counts.items(), key=lambda kv: -kv[1])
+    top = ranked[0][1]
+    a = ranked[0][0]
+    b = next(
+        (d for d, c in ranked if c <= top * 0.15 and c > max(top * 0.02, 100)),
+        ranked[len(ranked) // 4][0],
+    )
+    c = next((d for d, c in reversed(ranked) if c >= 30), ranked[-1][0])
+    return {"A": a, "B": b, "C": c}
+
+
+def timed(fn, *args, **kw) -> Tuple[float, object]:
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return time.perf_counter() - t0, out

@@ -1,0 +1,67 @@
+"""Benchmark harness — one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+
+Prints ``name,us_per_call,derived`` CSV lines and a validation summary of
+the paper's qualitative claims. Tables map to the paper as:
+
+    fig3_*    Fig 3   ingest scaling vs clients x servers (+ saturation)
+    fig4_*    Fig 4   backpressure regimes (rate variance)
+    table1_*  Table I query responsiveness (time-to-first-result)
+    table2_*  Table II query total runtime
+    kernel_*  (ours)  store kernel throughput
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="smaller datasets (CI-sized)")
+    ap.add_argument("--rows", type=int, default=None, help="bench store size")
+    args = ap.parse_args()
+
+    from . import bench_ingest_scaling, bench_kernels, bench_query_responsiveness, bench_query_runtime
+    from .common import build_bench_store
+
+    lines = []
+    failures = []
+
+    print("# building bench store ...", file=sys.stderr, flush=True)
+    n_rows = args.rows or (30_000 if args.quick else 120_000)
+    bs = build_bench_store(n_rows=n_rows)
+
+    print("# table I / fig 5: query responsiveness ...", file=sys.stderr, flush=True)
+    r1 = bench_query_responsiveness.run(bs)
+    lines += bench_query_responsiveness.emit_csv(r1)
+    failures += [f"responsiveness: {f}" for f in bench_query_responsiveness.validate(r1)]
+
+    print("# table II: query runtime ...", file=sys.stderr, flush=True)
+    r2 = bench_query_runtime.run(bs)
+    lines += bench_query_runtime.emit_csv(r2)
+    failures += [f"runtime: {f}" for f in bench_query_runtime.validate(r2)]
+
+    print("# fig 3/4: ingest scaling + backpressure ...", file=sys.stderr, flush=True)
+    r3 = bench_ingest_scaling.run()
+    lines += bench_ingest_scaling.emit_csv(r3)
+    failures += [f"ingest: {f}" for f in bench_ingest_scaling.validate(r3)]
+
+    print("# kernels ...", file=sys.stderr, flush=True)
+    r4 = bench_kernels.run()
+    lines += bench_kernels.emit_csv(r4)
+
+    print("name,us_per_call,derived")
+    for line in lines:
+        print(line)
+
+    print(f"\n# paper-claim validation: {len(failures)} failure(s)", file=sys.stderr)
+    for f in failures:
+        print(f"#   FAIL {f}", file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

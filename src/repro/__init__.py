@@ -1,0 +1,15 @@
+"""repro — a JAX reproduction of "Evaluating Accumulo Performance for a
+Scalable Cyber Data Processing Pipeline" (Sawyer & O'Gwynn, 2014), grown into
+a multi-pod training/serving framework whose data pipeline IS the paper's
+system.
+
+x64 note: the store's packed row keys are 53–63 bit integers (the TPU-native
+adaptation of Accumulo's lexicographic byte keys), so we enable x64 globally.
+All model code pins dtypes explicitly (bf16/f32/int32); tests assert no f64
+leaks into model params, activations, or lowered HLO.
+"""
+from jax import config as _config
+
+_config.update("jax_enable_x64", True)
+
+__version__ = "1.0.0"

@@ -1,0 +1,1 @@
+from .base import SHAPES, ModelConfig, ShapeConfig  # noqa: F401

@@ -1,0 +1,11 @@
+"""The paper's primary contribution: the LLCySA Accumulo pipeline —
+sharded key-value event store (3 tables/source), parallel ingest with
+backpressure, adaptive query batching (Algs 1-2), and the density-heuristic
+query planner. See DESIGN.md for the TPU adaptation table."""
+from . import batching, filter, keypack, planner, query, scan, schema, store, tables  # noqa: F401
+from .batching import AdaptiveBatcher, run_batched_query  # noqa: F401
+from .filter import And, Cmp, Eq, In, Match, Node, Not, Or, TrueNode  # noqa: F401
+from .planner import QueryPlan, plan_query  # noqa: F401
+from .query import QueryProcessor, QueryStats  # noqa: F401
+from .schema import EventSchema, FieldSpec, web_proxy_schema  # noqa: F401
+from .store import EventStore  # noqa: F401

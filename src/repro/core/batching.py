@@ -1,0 +1,156 @@
+"""Adaptive query batching — paper §III-A, Algorithms 1 and 2, verbatim.
+
+Instead of executing a query over its whole time range [t_start, t_stop],
+the range is partitioned into batches [p_i, p_i + b_i] sized to return
+approximately k_i results. After each batch the observed (runtime T_i,
+result count r_i) adapt the next batch:
+
+    k_{i+1} <- c * k_i                       (grow desired count)
+    That_{i+1} <- k_{i+1} * (T_i / r_i)      (estimate runtime)
+    if That > T_max:  k_{i+1} <- T_max * (r_i / T_i)   (too large)
+    elif That < T_min: k_{i+1} <- T_min * (r_i / T_i)  (too small)
+    b_{i+1} <- min(k_{i+1} * (b_i / r_i), t_stop - p_i)
+    p_{i+1} <- p_i + b_i + eps
+
+Defaults (paper): k_0 = 10, c = 1.5, T_max = 30 s, T_min = 1 s. b_0 is
+pre-computed per table from historical hit rates r/b. eps is the minimum
+time resolution (1 s here: integer-second timestamps).
+
+Deviation (documented): Alg 1 divides by r_i, undefined when a batch
+returns zero rows. On r_i == 0 we keep k and grow b geometrically by c —
+the least-surprising completion consistent with the algorithm's intent.
+
+This same batcher drives BOTH the store's query processor (its original
+role) and the serving engine's request scheduler (repro.serving.batcher) —
+the paper's technique applied beyond the paper.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Iterator, List, Tuple
+
+DEFAULT_K0 = 10.0
+DEFAULT_C = 1.5
+DEFAULT_T_MAX = 30.0
+DEFAULT_T_MIN = 1.0
+DEFAULT_EPS = 1
+
+
+@dataclass
+class BatchRecord:
+    index: int
+    p: float  # batch start position
+    b: float  # batch size (time units)
+    k: float  # desired result count when issued
+    runtime: float = 0.0
+    rows: int = 0
+
+
+@dataclass
+class AdaptiveBatcher:
+    """Algorithm 1 state machine. One instance per executing query."""
+
+    t_start: float
+    t_stop: float
+    b0: float  # initial batch size (per-table historical hit rate)
+    k0: float = DEFAULT_K0
+    c: float = DEFAULT_C
+    t_max: float = DEFAULT_T_MAX
+    t_min: float = DEFAULT_T_MIN
+    eps: float = DEFAULT_EPS
+    history: List[BatchRecord] = field(default_factory=list)
+
+    def __post_init__(self):
+        if self.t_stop < self.t_start:
+            raise ValueError("t_stop < t_start")
+        self._p = float(self.t_start)
+        self._k = float(self.k0)
+        self._b = max(min(float(self.b0), self.t_stop - self._p), self.eps)
+        self._i = 0
+
+    @property
+    def done(self) -> bool:
+        # Alg 2 line 1: while p_i < t_stop  (<= so a zero-width final range
+        # [t, t] still executes once when t_start == t_stop).
+        return self._p > self.t_stop if self._i > 0 else False
+
+    def next_range(self) -> Tuple[float, float]:
+        """Time range [p_i, p_i + b_i] for the next batch (inclusive)."""
+        return self._p, min(self._p + self._b, self.t_stop)
+
+    def update(self, runtime: float, rows: int) -> None:
+        """Alg 1 UPDATE(T_i, r_i)."""
+        rec = BatchRecord(self._i, self._p, self._b, self._k, runtime, rows)
+        self.history.append(rec)
+        t_i = max(float(runtime), 1e-9)
+        if rows > 0:
+            k_next = self.c * self._k  # line 2
+            t_hat = k_next * (t_i / rows)  # line 3
+            if t_hat > self.t_max:  # line 4
+                k_next = self.t_max * (rows / t_i)  # line 5: too large
+            elif t_hat < self.t_min:  # line 6
+                k_next = self.t_min * (rows / t_i)  # line 7: too small
+            b_next = k_next * (self._b / rows)  # line 9
+        else:
+            # r_i == 0 guard (see module docstring).
+            k_next = self._k
+            b_next = self._b * self.c
+        b_next = min(b_next, self.t_stop - self._p)  # line 9 clamp
+        self._p = self._p + self._b + self.eps  # line 10
+        self._b = max(b_next, self.eps)
+        self._k = max(k_next, 1.0)
+        self._i += 1
+
+
+def run_batched_query(
+    t_start: float,
+    t_stop: float,
+    b0: float,
+    query: Callable[[float, float], Tuple[float, int]],
+    **kw,
+) -> AdaptiveBatcher:
+    """Algorithm 2: execute `query(p, p + b)` over adapting batches until the
+    position passes t_stop. `query` returns (runtime_seconds, n_rows)."""
+    batcher = AdaptiveBatcher(t_start=t_start, t_stop=t_stop, b0=b0, **kw)
+    while not batcher.done:
+        lo, hi = batcher.next_range()
+        runtime, rows = query(lo, hi)
+        batcher.update(runtime, rows)
+    return batcher
+
+
+def iter_batches(
+    t_start: float, t_stop: float, b0: float, **kw
+) -> Iterator[Tuple[Tuple[float, float], Callable[[float, int], None]]]:
+    """Generator form used by the query processor: yields
+    ((lo, hi), report) pairs; caller must invoke report(runtime, rows) before
+    advancing."""
+    batcher = AdaptiveBatcher(t_start=t_start, t_stop=t_stop, b0=b0, **kw)
+    while not batcher.done:
+        rng = batcher.next_range()
+        reported = {}
+
+        def report(runtime: float, rows: int, _r=reported):
+            _r["x"] = (runtime, rows)
+
+        yield rng, report
+        if "x" not in reported:
+            raise RuntimeError("iter_batches: caller did not report batch stats")
+        batcher.update(*reported["x"])
+
+
+class HitRateTracker:
+    """Per-table historical hit rate r/b used to seed b_0 (paper: 'b_0
+    pre-computed for the particular Accumulo table being queried based on
+    the typical hit-rates of previous queries on that table')."""
+
+    def __init__(self, default_rate: float = 1.0, alpha: float = 0.2):
+        self._rate = default_rate  # rows per time unit
+        self._alpha = alpha
+
+    def observe(self, rows: int, b: float) -> None:
+        if b > 0:
+            self._rate = (1 - self._alpha) * self._rate + self._alpha * (rows / b)
+
+    def initial_b(self, k0: float = DEFAULT_K0) -> float:
+        return max(k0 / max(self._rate, 1e-9), 1.0)

@@ -1,0 +1,232 @@
+"""Distributed query execution — the paper's tablet-server scan on the
+production TPU mesh.
+
+The host-side EventStore (store.py) is the single-node reference; this
+module is the scale-out data plane: every device of the (data, model) mesh
+acts as one tablet server holding a fixed-capacity sorted columnar tablet,
+and a query executes as ONE jitted shard_map program:
+
+    time-range restriction   sorted rev_ts -> per-tablet searchsorted
+    filter                   the same postfix predicate program the
+                             Pallas filter_scan kernel executes
+    project + count          local; global count via psum
+    top-k newest             local top-k, then a gathered cross-tablet
+                             merge on the host (BatchScanner semantics:
+                             unordered across tablets)
+
+The adaptive batcher (Algs 1-2) drives this exactly like the host path:
+each batch is one device-program invocation over a time sub-range — the
+paper's design, 256 tablets wide. dryrun.py lowers + compiles it on the
+single-pod and multi-pod meshes as the extra `llcysa-store` cells.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from . import keypack
+from .filter import FilterProgram, compile_tree
+from .store import EventStore
+
+INVALID_TS = jnp.int32(-1)
+
+
+@dataclass
+class DistStore:
+    """Device-resident tablet grid.
+
+    rev_ts:  (T, R) int32   reversed timestamps, ascending per tablet
+                            (newest first), padded with TS_MAX+... sentinel
+    cols:    (T, R, F) int32 dictionary codes, -1 padded
+    counts:  (T,) int32     live rows per tablet
+    T = number of tablets = number of mesh devices; R = tablet capacity.
+    """
+
+    rev_ts: jax.Array
+    cols: jax.Array
+    counts: jax.Array
+    mesh: Mesh
+
+    @property
+    def n_tablets(self) -> int:
+        return self.rev_ts.shape[0]
+
+    @property
+    def capacity(self) -> int:
+        return self.rev_ts.shape[1]
+
+
+def tablet_specs(mesh: Mesh) -> Dict[str, P]:
+    """Tablets shard over ALL mesh axes (every chip is a tablet server)."""
+    axes = tuple(mesh.axis_names)
+    return {
+        "rev_ts": P(axes, None),
+        "cols": P(axes, None, None),
+        "counts": P(axes),
+    }
+
+
+def dist_store_shapes(mesh: Mesh, rows_per_tablet: int, n_fields: int):
+    """Abstract ShapeDtypeStructs for the dry-run (no allocation)."""
+    t = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+    return {
+        "rev_ts": jax.ShapeDtypeStruct((t, rows_per_tablet), jnp.int32),
+        "cols": jax.ShapeDtypeStruct((t, rows_per_tablet, n_fields), jnp.int32),
+        "counts": jax.ShapeDtypeStruct((t,), jnp.int32),
+    }
+
+
+def from_event_store(store: EventStore, mesh: Mesh, capacity: Optional[int] = None) -> DistStore:
+    """Scatter a host EventStore's event tables onto the mesh (row-hash
+    re-sharding onto T tablets — the paper's uniform random sharding)."""
+    t = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+    rows_k, rows_c = [], []
+    for tab in store.event_tablets:
+        for run in tab.snapshot_runs():
+            _, rts, h = keypack.unpack_event_key(run.keys)
+            rows_k.append(np.stack([rts, h], 1))
+            rows_c.append(run.cols)
+    if rows_k:
+        rk = np.concatenate(rows_k)
+        rc = np.concatenate(rows_c)
+    else:
+        rk = np.zeros((0, 2), np.int64)
+        rc = np.zeros((0, store.schema.n_fields), np.int32)
+    assign = (rk[:, 1] % t).astype(np.int64)  # hash-uniform tablet choice
+    cap = capacity or max(int(np.bincount(assign, minlength=t).max()), 1)
+    rev = np.full((t, cap), np.iinfo(np.int32).max, np.int32)
+    cols = np.full((t, cap, store.schema.n_fields), -1, np.int32)
+    counts = np.zeros((t,), np.int32)
+    for ti in range(t):
+        m = assign == ti
+        n = int(m.sum())
+        if n > cap:
+            raise ValueError(f"tablet {ti} overflow: {n} > {cap}")
+        order = np.argsort(rk[m][:, 0], kind="stable")
+        rev[ti, :n] = rk[m][:, 0][order]
+        cols[ti, :n] = rc[m][order]
+        counts[ti] = n
+    specs = tablet_specs(mesh)
+    put = lambda arr, sp: jax.device_put(arr, NamedSharding(mesh, sp))
+    return DistStore(
+        rev_ts=put(rev, specs["rev_ts"]),
+        cols=put(cols, specs["cols"]),
+        counts=put(counts, specs["counts"]),
+        mesh=mesh,
+    )
+
+
+def _program_eval(cols, opcodes, arg0, arg1, codesets):
+    """Postfix predicate program over (R, F) codes — identical semantics
+    to kernels/filter_scan (jnp form, shard-local)."""
+    from ..kernels.filter_scan.ref import filter_scan_ref
+
+    return filter_scan_ref(cols, opcodes, arg0, arg1, codesets)
+
+
+def build_scan_step(mesh: Mesh, n_fields: int, prog_len: int, set_shape: Tuple[int, int], top_k: int = 128):
+    """Jitted distributed scan: (store, program, t-range) -> (global count,
+    per-tablet top-k newest matches). One invocation per adaptive batch."""
+    axes = tuple(mesh.axis_names)
+    specs = tablet_specs(mesh)
+
+    def tablet_scan(rev_ts, cols, counts, opcodes, arg0, arg1, codesets, rts_lo, rts_hi):
+        # Local tablet: (1, R), (1, R, F), (1,) after shard_map slicing.
+        rev_l = rev_ts[0]
+        cols_l = cols[0]
+        n = counts[0]
+        r = rev_l.shape[0]
+        # Range restriction on sorted rev_ts: [lo, hi) via searchsorted.
+        a = jnp.searchsorted(rev_l, rts_lo, side="left")
+        b = jnp.searchsorted(rev_l, rts_hi, side="left")
+        idx = jnp.arange(r, dtype=jnp.int32)
+        in_range = (idx >= a) & (idx < b) & (idx < n)
+        hit = _program_eval(cols_l, opcodes, arg0, arg1, codesets) & in_range
+        count = hit.sum(dtype=jnp.int32)
+        # Top-k newest matches (smallest rev_ts == newest; rows sorted).
+        rank = jnp.where(hit, idx, r)
+        top = jnp.sort(rank)[:top_k]
+        valid = top < r
+        safe = jnp.clip(top, 0, r - 1)
+        out_ts = jnp.where(valid, rev_l[safe], INVALID_TS)
+        out_cols = jnp.where(valid[:, None], cols_l[safe], -1)
+        total = jax.lax.psum(count, axes)
+        return total, out_ts[None], out_cols[None]
+
+    smapped = shard_map(
+        tablet_scan,
+        mesh=mesh,
+        in_specs=(
+            specs["rev_ts"], specs["cols"], specs["counts"],
+            P(None), P(None), P(None), P(None, None),  # program: replicated
+            P(), P(),
+        ),
+        out_specs=(P(), P(axes, None), P(axes, None, None)),
+        check_rep=False,
+    )
+    return jax.jit(smapped)
+
+
+class DistQueryProcessor:
+    """Adaptive-batched queries over the mesh — Algs 1-2 driving the
+    distributed scan step."""
+
+    def __init__(self, store: EventStore, dist: DistStore, top_k: int = 128):
+        self.store = store
+        self.dist = dist
+        self.top_k = top_k
+        self._step_cache: Dict[Tuple[int, Tuple[int, int]], object] = {}
+
+    def _step(self, prog: FilterProgram):
+        from ..kernels.filter_scan.ops import pad_program
+
+        opc, a0, a1, cs = pad_program(prog)
+        key = (len(opc), cs.shape)
+        if key not in self._step_cache:
+            self._step_cache[key] = build_scan_step(
+                self.dist.mesh, self.store.schema.n_fields, len(opc), cs.shape, self.top_k
+            )
+        return self._step_cache[key], (opc, a0, a1, cs)
+
+    def scan_range(self, tree, t0: int, t1: int):
+        """One range scan across all tablets. Returns (global_count,
+        top-k rows per tablet as (ts, cols) numpy arrays)."""
+        prog = compile_tree(self.store, tree)
+        step, (opc, a0, a1, cs) = self._step(prog)
+        rts_lo = jnp.int32(keypack.rev_ts(t1))
+        rts_hi = jnp.int32(keypack.rev_ts(t0) + 1)
+        total, top_ts, top_cols = step(
+            self.dist.rev_ts, self.dist.cols, self.dist.counts,
+            jnp.asarray(opc), jnp.asarray(a0), jnp.asarray(a1), jnp.asarray(cs),
+            rts_lo, rts_hi,
+        )
+        ts = np.asarray(top_ts)
+        valid = ts != int(INVALID_TS)
+        return int(total), keypack.unrev_ts(ts[valid]), np.asarray(top_cols)[valid]
+
+    def execute_batched(self, tree, t_start: int, t_stop: int, stats=None):
+        """Algorithm 2 over the distributed scan."""
+        from .batching import AdaptiveBatcher
+        import time as _time
+
+        batcher = AdaptiveBatcher(
+            t_start=t_start, t_stop=t_stop, b0=self.store.rows_per_second() and 10.0 / self.store.rows_per_second()
+        )
+        results = []
+        while not batcher.done:
+            lo, hi = batcher.next_range()
+            t0 = _time.perf_counter()
+            count, ts, cols = self.scan_range(tree, int(lo), int(hi))
+            batcher.update(_time.perf_counter() - t0, count)
+            results.append((count, ts, cols))
+            if stats is not None:
+                stats.batches += 1
+                stats.rows += count
+        return results

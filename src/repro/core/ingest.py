@@ -1,0 +1,107 @@
+"""BatchWriter — client-side ingest batching (paper §II).
+
+"Entries are sent to Accumulo using the BatchWriter API class, which
+automatically batches and sends bulk updates to the database instance for
+efficiency." Each parallel ingest worker owns one BatchWriter. The writer
+buffers parsed events and flushes them to the store in bulk; flushes that
+trip a tablet major compaction BLOCK the caller — that is the backpressure
+the paper measures as ingest-rate variance (§IV-A).
+
+The paper's sizing guidance is enforced here: "experiments have indicated
+that N [shards] should be at least as large as half the number of parallel
+client processes used for ingest" — `check_shard_guidance`.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from .store import EventStore
+
+
+@dataclass
+class IngestMetrics:
+    """Per-writer telemetry; the benchmark harness aggregates across
+    writers into the Fig 3/4 curves."""
+
+    rows: int = 0
+    bytes: int = 0
+    flushes: int = 0
+    blocked_seconds: float = 0.0
+    flush_seconds: float = 0.0
+    # (wall_time, rows_flushed) samples — the instantaneous-rate series.
+    samples: List = field(default_factory=list)
+
+
+def check_shard_guidance(n_shards: int, n_clients: int) -> bool:
+    """Paper: N >= clients / 2."""
+    return n_shards >= n_clients / 2
+
+
+class BatchWriter:
+    """Buffers parsed events; flushes in bulk to the sharded store."""
+
+    def __init__(
+        self,
+        store: EventStore,
+        batch_rows: int = 4096,
+        metrics: Optional[IngestMetrics] = None,
+    ):
+        self.store = store
+        self.batch_rows = batch_rows
+        self.metrics = metrics if metrics is not None else IngestMetrics()
+        self._ts: List[np.ndarray] = []
+        self._vals: List[Dict[str, Sequence[str]]] = []
+        self._rows = 0
+
+    def add(self, ts: np.ndarray, values: Dict[str, Sequence[str]], nbytes: int = 0) -> None:
+        """Queue a parsed batch of events (ts int seconds + field values).
+        nbytes: raw input size, for MB/s accounting."""
+        self._ts.append(np.asarray(ts, dtype=np.int64))
+        self._vals.append(values)
+        self._rows += len(ts)
+        self.metrics.bytes += nbytes
+        if self._rows >= self.batch_rows:
+            self.flush()
+
+    def flush(self) -> None:
+        if not self._rows:
+            return
+        ts = np.concatenate(self._ts)
+        merged: Dict[str, List[str]] = {}
+        for v in self._vals:
+            for k, vv in v.items():
+                merged.setdefault(k, []).extend(vv)
+        n = len(ts)
+        self._ts, self._vals, self._rows = [], [], 0
+        t0 = time.perf_counter()
+        blocked = self.store.ingest(ts, merged)
+        dt = time.perf_counter() - t0
+        m = self.metrics
+        m.rows += n
+        m.flushes += 1
+        m.blocked_seconds += blocked
+        m.flush_seconds += dt
+        m.samples.append((time.perf_counter(), n))
+
+    def close(self) -> None:
+        self.flush()
+
+
+def rate_series(metrics_list: Sequence[IngestMetrics], bucket_s: float = 0.25):
+    """Aggregate flush samples across writers into an instantaneous
+    rows/sec time series (the paper's Fig 4 signal)."""
+    samples = sorted(s for m in metrics_list for s in m.samples)
+    if not samples:
+        return np.zeros(0), np.zeros(0)
+    t0 = samples[0][0]
+    t_end = samples[-1][0]
+    n_b = max(int((t_end - t0) / bucket_s) + 1, 1)
+    rate = np.zeros(n_b)
+    for t, rows in samples:
+        rate[min(int((t - t0) / bucket_s), n_b - 1)] += rows
+    return np.arange(n_b) * bucket_s, rate / bucket_s

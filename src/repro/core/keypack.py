@@ -1,0 +1,142 @@
+"""Packed fixed-width binary row keys — the TPU adaptation of Accumulo's
+lexicographic string keys (paper §II, Fig 1).
+
+Accumulo sorts variable-length byte-string keys on JVM tablet servers. A TPU
+data plane wants fixed-width integer keys so that "range scan = contiguous
+slice of a sorted vector" survives as a vectorized searchsorted. We pack the
+paper's three key schemes into int64:
+
+  event key   :  shard(7b) | rev_ts(30b) | hash(16b)            = 53 bits
+  index key   :  field(10b) | value(22b) | rev_ts(30b)          = 62 bits
+                 (shard implicit: index entries co-live with their tablet,
+                  the event key is carried in a sibling column — the paper's
+                  "row ID stored in the index table's column qualifier")
+  agg key     :  field(10b) | value(22b) | bucket(30b)          = 62 bits
+
+rev_ts = TS_MAX - ts gives the paper's "reversed timestamp to provide
+first-class support for filtering entries by time range" — most recent
+entries sort first within a shard. The 16-bit hash is the paper's "short
+hash to prevent collisions".
+
+On TPU, int64 lowers to 2x32-bit lanes; the Pallas kernels therefore operate
+on the unpacked int32 lanes / dictionary codes, never on the packed key.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+SHARD_BITS = 7
+TS_BITS = 30
+HASH_BITS = 16
+FIELD_BITS = 10
+VALUE_BITS = 22
+BUCKET_BITS = 30
+
+MAX_SHARDS = 1 << SHARD_BITS
+TS_MAX = (1 << TS_BITS) - 1
+HASH_MAX = (1 << HASH_BITS) - 1
+MAX_FIELDS = 1 << FIELD_BITS
+MAX_VALUES = 1 << VALUE_BITS
+BUCKET_MAX = (1 << BUCKET_BITS) - 1
+
+# Epoch offset so that 30-bit second timestamps cover 2000-01-01 .. ~2034.
+EPOCH_OFFSET = 946684800  # 2000-01-01T00:00:00Z
+
+_EV_SHARD_SHIFT = TS_BITS + HASH_BITS
+_EV_TS_SHIFT = HASH_BITS
+_IX_FIELD_SHIFT = VALUE_BITS + TS_BITS
+_IX_VALUE_SHIFT = TS_BITS
+_AG_FIELD_SHIFT = VALUE_BITS + BUCKET_BITS
+_AG_VALUE_SHIFT = BUCKET_BITS
+
+
+def rev_ts(ts):
+    """Reversed timestamp: newest-first sort order within a shard."""
+    return TS_MAX - ts
+
+
+def unrev_ts(rts):
+    return TS_MAX - rts
+
+
+def pack_event_key(shard, rts, h):
+    """shard | rev_ts | hash -> int64. Accepts scalars or numpy arrays."""
+    shard = np.asarray(shard, dtype=np.int64)
+    rts = np.asarray(rts, dtype=np.int64)
+    h = np.asarray(h, dtype=np.int64)
+    return (shard << _EV_SHARD_SHIFT) | (rts << _EV_TS_SHIFT) | h
+
+
+def unpack_event_key(key):
+    key = np.asarray(key, dtype=np.int64)
+    shard = key >> _EV_SHARD_SHIFT
+    rts = (key >> _EV_TS_SHIFT) & TS_MAX
+    h = key & HASH_MAX
+    return shard, rts, h
+
+
+def event_key_range(shard, t_start, t_stop):
+    """[lo, hi) of packed event keys for events with ts in [t_start, t_stop],
+    within one shard. Because timestamps are reversed, t_stop maps to the low
+    end of the key range."""
+    rts_lo = rev_ts(t_stop)
+    rts_hi = rev_ts(t_start)
+    lo = pack_event_key(shard, rts_lo, 0)
+    hi = pack_event_key(shard, rts_hi, HASH_MAX) + 1
+    return lo, hi
+
+
+def pack_index_key(field, value, rts):
+    field = np.asarray(field, dtype=np.int64)
+    value = np.asarray(value, dtype=np.int64)
+    rts = np.asarray(rts, dtype=np.int64)
+    return (field << _IX_FIELD_SHIFT) | (value << _IX_VALUE_SHIFT) | rts
+
+
+def unpack_index_key(key):
+    key = np.asarray(key, dtype=np.int64)
+    field = key >> _IX_FIELD_SHIFT
+    value = (key >> _IX_VALUE_SHIFT) & (MAX_VALUES - 1)
+    rts = key & TS_MAX
+    return field, value, rts
+
+
+def index_key_range(field, value, t_start, t_stop):
+    """[lo, hi) of packed index keys for one (field, value) over a time
+    range."""
+    lo = pack_index_key(field, value, rev_ts(t_stop))
+    hi = pack_index_key(field, value, rev_ts(t_start)) + 1
+    return lo, hi
+
+
+def pack_agg_key(field, value, bucket):
+    field = np.asarray(field, dtype=np.int64)
+    value = np.asarray(value, dtype=np.int64)
+    bucket = np.asarray(bucket, dtype=np.int64)
+    return (field << _AG_FIELD_SHIFT) | (value << _AG_VALUE_SHIFT) | bucket
+
+
+def unpack_agg_key(key):
+    key = np.asarray(key, dtype=np.int64)
+    field = key >> _AG_FIELD_SHIFT
+    value = (key >> _AG_VALUE_SHIFT) & (MAX_VALUES - 1)
+    bucket = key & BUCKET_MAX
+    return field, value, bucket
+
+
+def short_hash(*cols):
+    """Deterministic 16-bit mixing hash over int arrays (fnv-ish). The paper
+    appends a short hash purely to avoid key collisions between events with
+    identical (shard, timestamp)."""
+    acc = np.uint64(0xCBF29CE484222325)
+    for c in cols:
+        c = np.asarray(c).astype(np.uint64)
+        acc = (acc ^ c) * np.uint64(0x100000001B3)
+        acc ^= acc >> np.uint64(29)
+    return (acc & np.uint64(HASH_MAX)).astype(np.int64)
+
+
+def assign_shards(n, n_shards, rng):
+    """The paper's sharding: 'prepending the row ID with a random zero-padded
+    shard number between 0 and N-1' — uniform random shard per entry."""
+    return rng.integers(0, n_shards, size=n, dtype=np.int64)

@@ -1,0 +1,112 @@
+"""Query planner — paper §III-B, the four heuristics, verbatim.
+
+"Query planning in this context is more accurately described as access path
+selection" — the planner decides which equality conditions run as index
+scans (key sets intersected/unioned at the client) and which run as tablet
+server filters, using densities d_i from the aggregate table and a global
+threshold w that "determines a threshold to avoid intersections between
+sets of significantly different sizes".
+
+Heuristics (quoted from the paper):
+  1. root is Eq                         -> index scan.
+  2. root is OR, all children Eq        -> index scan every child, union.
+  3. root is AND                        -> index scan every Eq child with
+       d_i < w * min_i d_i; intersect key sets; pass to event scanner with
+       the remaining syntax tree as a filter.
+  4. otherwise                          -> full tablet-server filtering.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+from .filter import And, Eq, Node, Or, TrueNode
+from .store import EventStore
+
+DEFAULT_W = 10.0  # paper: "a global, empirically derived parameter"
+
+
+@dataclass
+class IndexCond:
+    field: str
+    value: str
+    density: float  # d_i: estimated matching rows in the time range
+
+
+@dataclass
+class QueryPlan:
+    mode: str  # 'index' | 'filter'
+    combine: str  # 'intersect' | 'union' (index mode)
+    index_conds: List[IndexCond] = field(default_factory=list)
+    residual: Optional[Node] = None  # tablet-server filter after index step
+
+    def describe(self) -> str:
+        if self.mode == "filter":
+            return "full tablet-server filter"
+        conds = ", ".join(f"{c.field}={c.value}(d={c.density:.0f})" for c in self.index_conds)
+        res = "none" if isinstance(self.residual, TrueNode) or self.residual is None else "tree"
+        return f"index[{self.combine}]({conds}) residual={res}"
+
+
+def _density(store: EventStore, cond: Eq, t_start: int, t_stop: int) -> float:
+    """d_i — 'a density estimate related to the inverse of selectivity',
+    read from the aggregate table over the query's time range."""
+    return float(store.agg_count(cond.field, cond.value, t_start, t_stop))
+
+
+def plan_query(
+    store: EventStore,
+    tree: Optional[Node],
+    t_start: int,
+    t_stop: int,
+    w: float = DEFAULT_W,
+    use_index: bool = True,
+) -> QueryPlan:
+    if tree is None or isinstance(tree, TrueNode):
+        return QueryPlan(mode="filter", combine="intersect", residual=TrueNode())
+    if not use_index:
+        return QueryPlan(mode="filter", combine="intersect", residual=tree)
+
+    # Heuristic 1: root equality condition.
+    if isinstance(tree, Eq) and store.schema.is_indexed(tree.field):
+        d = _density(store, tree, t_start, t_stop)
+        return QueryPlan(
+            mode="index",
+            combine="intersect",
+            index_conds=[IndexCond(tree.field, tree.value, d)],
+            residual=TrueNode(),
+        )
+
+    # Heuristic 2: root OR with all-equality children.
+    if isinstance(tree, Or) and all(
+        isinstance(c, Eq) and store.schema.is_indexed(c.field) for c in tree.children
+    ):
+        conds = [
+            IndexCond(c.field, c.value, _density(store, c, t_start, t_stop))
+            for c in tree.children
+        ]
+        return QueryPlan(mode="index", combine="union", index_conds=conds, residual=TrueNode())
+
+    # Heuristic 3: root AND — index the rare equality children.
+    if isinstance(tree, And):
+        eq_children = [
+            c
+            for c in tree.children
+            if isinstance(c, Eq) and store.schema.is_indexed(c.field)
+        ]
+        if eq_children:
+            dens = {c: _density(store, c, t_start, t_stop) for c in eq_children}
+            d_min = min(dens.values())
+            selected = [c for c in eq_children if dens[c] < w * max(d_min, 1.0)]
+            if selected:
+                rest = tuple(c for c in tree.children if c not in selected)
+                residual: Node = And(*rest) if rest else TrueNode()
+                return QueryPlan(
+                    mode="index",
+                    combine="intersect",
+                    index_conds=[IndexCond(c.field, c.value, dens[c]) for c in selected],
+                    residual=residual,
+                )
+
+    # Heuristic 4: everything else — tablet-server filtering.
+    return QueryPlan(mode="filter", combine="intersect", residual=tree)

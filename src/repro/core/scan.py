@@ -1,0 +1,110 @@
+"""Scanners — range reads against the sharded store.
+
+Paper semantics reproduced:
+  * Scanner: "given a starting and ending row ID range ... will only return
+    those entries whose row IDs fall within that range" — here a packed-key
+    range per shard resolved by vectorized searchsorted.
+  * BatchScanner: "due to sharding, all queries utilize the BatchScanner,
+    which makes no guarantee on the ordering of results ... results are
+    returned from each tablet server as they become available" — we iterate
+    shards and yield per-shard row blocks; cross-shard order is unspecified.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from . import keypack
+from .store import EventStore, join_key64
+
+
+@dataclass
+class RowBlock:
+    """A block of event rows from one shard (columnar)."""
+
+    shard: int
+    keys: np.ndarray  # int64 [n] packed event keys
+    cols: np.ndarray  # int32 [n, n_fields] dictionary codes
+
+    @property
+    def n(self) -> int:
+        return int(self.keys.shape[0])
+
+    def ts(self) -> np.ndarray:
+        _, rts, _ = keypack.unpack_event_key(self.keys)
+        return keypack.unrev_ts(rts)
+
+
+def scan_events(
+    store: EventStore,
+    t_start: int,
+    t_stop: int,
+    shards: Optional[Sequence[int]] = None,
+) -> Iterator[RowBlock]:
+    """BatchScanner over the event table restricted to a time range
+    (timestamps in [t_start, t_stop], inclusive — the paper's queries are
+    always time-restricted)."""
+    for s in shards if shards is not None else range(store.n_shards):
+        lo, hi = keypack.event_key_range(s, t_start, t_stop)
+        keys, cols = store.event_tablets[s].scan_range(int(lo), int(hi))
+        if keys.size:
+            yield RowBlock(s, keys, cols)
+
+
+def index_scan(
+    store: EventStore,
+    field: str,
+    value_codes: np.ndarray,
+    t_start: int,
+    t_stop: int,
+    shards: Optional[Sequence[int]] = None,
+) -> List[np.ndarray]:
+    """Index-table lookup: event keys (per shard, sorted) for rows where
+    `field` has any of `value_codes`, within the time range. This is the
+    paper's 'index table encodes field names and values in the row ID to
+    allow fast look-ups by column value'."""
+    fid = store.schema.field_id(field)
+    out: List[np.ndarray] = []
+    for s in shards if shards is not None else range(store.n_shards):
+        tab = store.index_tablets[s]
+        parts = []
+        for code in np.atleast_1d(value_codes):
+            lo = keypack.pack_index_key(fid, int(code), keypack.rev_ts(t_stop))
+            hi = keypack.pack_index_key(fid, int(code), keypack.rev_ts(t_start)) + 1
+            _, payload = tab.scan_range(int(lo), int(hi))
+            if payload.size:
+                parts.append(join_key64(payload[:, 0], payload[:, 1]))
+        if parts:
+            ek = np.concatenate(parts)
+            ek.sort()
+            out.append(ek)
+        else:
+            out.append(np.empty(0, np.int64))
+    return out
+
+
+def fetch_rows_by_keys(
+    store: EventStore, shard: int, event_keys: np.ndarray
+) -> RowBlock:
+    """Point-lookups of event rows given packed keys (sorted), within one
+    shard — the 'resulting row IDs passed to an event table scanner' step of
+    the paper's query plan (Fig 2)."""
+    tab = store.event_tablets[shard]
+    runs = tab.snapshot_runs()
+    found_k: List[np.ndarray] = []
+    found_c: List[np.ndarray] = []
+    for r in runs:
+        pos = np.searchsorted(r.keys, event_keys)
+        pos_c = np.clip(pos, 0, max(r.n - 1, 0))
+        hit = (pos < r.n) & (r.keys[pos_c] == event_keys) if r.n else np.zeros(len(event_keys), bool)
+        if hit.any():
+            found_k.append(event_keys[hit])
+            found_c.append(r.cols[pos_c[hit]])
+    if not found_k:
+        return RowBlock(shard, np.empty(0, np.int64), np.empty((0, tab.width), np.int32))
+    keys = np.concatenate(found_k)
+    cols = np.concatenate(found_c)
+    order = np.argsort(keys, kind="stable")
+    return RowBlock(shard, keys[order], cols[order])

@@ -1,0 +1,134 @@
+"""Event schema + per-field string dictionaries.
+
+Accumulo is schemaless: entries are (row, colq) -> value byte strings. The
+paper's events are parsed log lines — "a set of fields and values" (§II) —
+with dozens of string-typed attributes. A TPU data plane cannot compare
+variable-length strings, so each field gets a host-side dictionary mapping
+string -> int32 code (codes are dense, per-field). The device-side event
+table is columnar: one int32 code vector per field. This is the standard
+dictionary-encoding move (Parquet/Arrow) applied to the D4M schema.
+
+The dictionary is also how the paper's index table works here: an index
+entry's packed key embeds (field_id, value_code), and equality conditions
+resolve strings -> codes before touching the device.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field as dc_field
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from . import keypack
+
+
+class FieldDictionary:
+    """Bidirectional str <-> int32 code map for one field. Thread-safe:
+    parallel ingest workers (paper §II: 'multiple ingest worker processes')
+    encode concurrently."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self._fwd: Dict[str, int] = {}
+        self._rev: List[str] = []
+        self._lock = threading.Lock()
+
+    def encode(self, value: str) -> int:
+        code = self._fwd.get(value)
+        if code is not None:
+            return code
+        with self._lock:
+            code = self._fwd.get(value)
+            if code is None:
+                code = len(self._rev)
+                if code >= keypack.MAX_VALUES:
+                    raise ValueError(
+                        f"field {self.name!r}: dictionary overflow "
+                        f"(> {keypack.MAX_VALUES} distinct values)"
+                    )
+                self._fwd[value] = code
+                self._rev.append(value)
+            return code
+
+    def encode_many(self, values: Sequence[str]) -> np.ndarray:
+        return np.fromiter(
+            (self.encode(v) for v in values), dtype=np.int32, count=len(values)
+        )
+
+    def lookup(self, value: str) -> Optional[int]:
+        """Code for a value if it has ever been ingested, else None (a query
+        for a never-seen value matches nothing)."""
+        return self._fwd.get(value)
+
+    def decode(self, code: int) -> str:
+        return self._rev[int(code)]
+
+    def decode_many(self, codes) -> List[str]:
+        return [self._rev[int(c)] for c in codes]
+
+    def prefix_codes(self, prefix: str) -> np.ndarray:
+        """All codes whose string value starts with `prefix` — host-side
+        resolution of the paper's regex/match conditions (see DESIGN.md:
+        TPUs have no string unit; pattern conditions resolve to code sets)."""
+        return np.asarray(
+            [c for s, c in self._fwd.items() if s.startswith(prefix)],
+            dtype=np.int32,
+        )
+
+    def __len__(self):
+        return len(self._rev)
+
+
+@dataclass(frozen=True)
+class FieldSpec:
+    name: str
+    indexed: bool = True  # paper: equality conditions on indexed fields use the index table
+
+
+@dataclass
+class EventSchema:
+    """One data source ('event type' in LLCySA — web proxy, DHCP, ...)."""
+
+    source: str
+    fields: List[FieldSpec]
+    _field_ids: Dict[str, int] = dc_field(default_factory=dict)
+
+    def __post_init__(self):
+        if len(self.fields) >= keypack.MAX_FIELDS:
+            raise ValueError("too many fields")
+        self._field_ids = {f.name: i for i, f in enumerate(self.fields)}
+
+    def field_id(self, name: str) -> int:
+        return self._field_ids[name]
+
+    def field_names(self) -> List[str]:
+        return [f.name for f in self.fields]
+
+    def is_indexed(self, name: str) -> bool:
+        return self.fields[self._field_ids[name]].indexed
+
+    @property
+    def n_fields(self) -> int:
+        return len(self.fields)
+
+
+def web_proxy_schema() -> EventSchema:
+    """The paper's experimental data source (§IV): web proxy logs — 'each
+    event occurrence represents a single HTTP request and has dozens of
+    attributes'. We model the prominent ones."""
+    names = [
+        "src_ip",
+        "dst_ip",
+        "domain",
+        "url_path",
+        "method",
+        "status",
+        "user_agent",
+        "content_type",
+        "bytes_out",
+        "bytes_in",
+        "referer",
+        "scheme",
+    ]
+    return EventSchema("web_proxy", [FieldSpec(n) for n in names])

@@ -1,0 +1,229 @@
+"""Tablets: sorted columnar storage for one shard of one table.
+
+Accumulo's tablet server keeps an in-memory map (memtable) that is flushed
+to sorted ISAM files (minor compaction) and periodically merges files (major
+compaction). We keep the same LSM structure — it is what produces the
+paper's ingest backpressure dynamics (§IV-A: "tablet servers create
+backpressure by blocking ingest processes while memory-cached entries must
+be written to disk"):
+
+    memtable  (unsorted append buffer, host)
+      --flush/minor-compact-->  new SortedRun (jnp.sort on device)
+    runs > max_runs
+      --major-compact (BLOCKING = backpressure)--> single merged run
+
+Scans search every run (runs are few: <= max_runs). All data-plane compute
+(sort, merge, searchsorted, filter, combine) runs under jit; host Python
+only orchestrates, exactly as Accumulo's Java orchestrates its iterators.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import keypack
+
+KEY_PAD = np.iinfo(np.int64).max  # +inf key: pads sorted runs
+
+
+@jax.jit
+def _sort_run(keys, cols):
+    """Sort a (keys, cols) batch by key — minor compaction."""
+    order = jnp.argsort(keys)
+    return keys[order], cols[order]
+
+
+@jax.jit
+def _merge_runs(keys_list, cols_list):
+    """k-way merge of sorted runs — major compaction. Concatenate + sort is
+    O(n log n) but runs fully on-device; a dedicated merge kernel is a noted
+    perf follow-up (the paper's costs are dominated by the write path)."""
+    keys = jnp.concatenate(keys_list)
+    cols = jnp.concatenate(cols_list)
+    order = jnp.argsort(keys)
+    return keys[order], cols[order]
+
+
+@jax.jit
+def _combine_sorted(keys, vals):
+    """Combiner (paper §II: 'aggregated on the server side using Accumulo's
+    combiner framework'): sum vals of equal adjacent keys in a sorted run.
+    Returns (unique_keys_padded, summed_vals, n_unique)."""
+    n = keys.shape[0]
+    is_head = jnp.concatenate([jnp.ones((1,), bool), keys[1:] != keys[:-1]])
+    seg = jnp.cumsum(is_head) - 1
+    sums = jax.ops.segment_sum(vals, seg, num_segments=n)
+    n_unique = is_head.sum()
+    # Scatter unique keys to the front, pad the tail.
+    idx = jnp.where(is_head, seg, n - 1)
+    ukeys = jnp.full((n,), KEY_PAD, dtype=keys.dtype).at[idx].set(
+        jnp.where(is_head, keys, KEY_PAD)
+    )
+    return ukeys, sums, n_unique
+
+
+@dataclass
+class SortedRun:
+    """One immutable sorted file (ISAM analogue)."""
+
+    keys: np.ndarray  # int64 [n], ascending
+    cols: np.ndarray  # int32 [n, width] payload columns
+
+    @property
+    def n(self) -> int:
+        return int(self.keys.shape[0])
+
+    def range_slice(self, lo: int, hi: int) -> Tuple[int, int]:
+        """Row span [a, b) with lo <= key < hi — the vectorized form of an
+        Accumulo range scan inside one file."""
+        a = int(np.searchsorted(self.keys, lo, side="left"))
+        b = int(np.searchsorted(self.keys, hi, side="left"))
+        return a, b
+
+
+class Tablet:
+    """One shard of one table. Thread-safe for concurrent BatchWriter
+    flushes (paper: many parallel ingest clients per tablet server)."""
+
+    def __init__(
+        self,
+        shard: int,
+        width: int,
+        flush_rows: int = 32768,
+        max_runs: int = 8,
+    ):
+        self.shard = shard
+        self.width = width
+        self.flush_rows = flush_rows
+        self.max_runs = max_runs
+        self.runs: List[SortedRun] = []
+        self._mem_keys: List[np.ndarray] = []
+        self._mem_cols: List[np.ndarray] = []
+        self._mem_rows = 0
+        self.lock = threading.Lock()
+        # Telemetry for the ingest-scaling experiments.
+        self.minor_compactions = 0
+        self.major_compactions = 0
+        self.blocked_seconds = 0.0
+        self.rows_ingested = 0
+
+    # ------------------------------------------------------------- ingest
+    def insert(self, keys: np.ndarray, cols: np.ndarray) -> float:
+        """Append a batch of entries. Returns seconds spent blocked on
+        compaction (the backpressure signal)."""
+        import time
+
+        assert cols.shape == (keys.shape[0], self.width), (cols.shape, self.width)
+        blocked = 0.0
+        with self.lock:
+            self._mem_keys.append(np.asarray(keys, dtype=np.int64))
+            self._mem_cols.append(np.asarray(cols, dtype=np.int32))
+            self._mem_rows += len(keys)
+            self.rows_ingested += len(keys)
+            if self._mem_rows >= self.flush_rows:
+                t0 = time.perf_counter()
+                self._minor_compact()
+                if len(self.runs) > self.max_runs:
+                    # Major compaction blocks the writer that tripped it —
+                    # Accumulo's backpressure, reproduced.
+                    self._major_compact()
+                    blocked = time.perf_counter() - t0
+                    self.blocked_seconds += blocked
+        return blocked
+
+    def _minor_compact(self) -> None:
+        keys = np.concatenate(self._mem_keys)
+        cols = np.concatenate(self._mem_cols)
+        self._mem_keys, self._mem_cols, self._mem_rows = [], [], 0
+        k, c = _sort_run(keys, cols)
+        self.runs.append(SortedRun(np.asarray(k), np.asarray(c)))
+        self.minor_compactions += 1
+
+    def _major_compact(self) -> None:
+        k, c = _merge_runs(
+            [jnp.asarray(r.keys) for r in self.runs],
+            [jnp.asarray(r.cols) for r in self.runs],
+        )
+        self.runs = [SortedRun(np.asarray(k), np.asarray(c))]
+        self.major_compactions += 1
+
+    def flush(self) -> None:
+        """Force memtable to a run (used at end of ingest)."""
+        with self.lock:
+            if self._mem_rows:
+                self._minor_compact()
+
+    def compact(self) -> None:
+        with self.lock:
+            if self._mem_rows:
+                self._minor_compact()
+            if len(self.runs) > 1:
+                self._major_compact()
+
+    # -------------------------------------------------------------- reads
+    @property
+    def n_rows(self) -> int:
+        with self.lock:
+            return sum(r.n for r in self.runs) + self._mem_rows
+
+    def snapshot_runs(self) -> List[SortedRun]:
+        """Runs visible to a scan. Accumulo scans see flushed files plus the
+        in-memory map; we flush-on-read for simplicity (scans are rare
+        relative to inserts in this pipeline)."""
+        with self.lock:
+            if self._mem_rows:
+                self._minor_compact()
+            return list(self.runs)
+
+    def scan_range(self, lo: int, hi: int) -> Tuple[np.ndarray, np.ndarray]:
+        """All entries with lo <= key < hi, sorted by key."""
+        runs = self.snapshot_runs()
+        parts_k, parts_c = [], []
+        for r in runs:
+            a, b = r.range_slice(lo, hi)
+            if b > a:
+                parts_k.append(r.keys[a:b])
+                parts_c.append(r.cols[a:b])
+        if not parts_k:
+            return (
+                np.empty(0, np.int64),
+                np.empty((0, self.width), np.int32),
+            )
+        keys = np.concatenate(parts_k)
+        cols = np.concatenate(parts_c)
+        if len(runs) > 1:
+            order = np.argsort(keys, kind="stable")
+            keys, cols = keys[order], cols[order]
+        return keys, cols
+
+
+class AggregateTablet(Tablet):
+    """Aggregate table tablet: cols = [count]. Major compaction additionally
+    combines (sums) duplicate keys, matching Accumulo's combiner-on-compaction
+    semantics."""
+
+    def __init__(self, shard: int, **kw):
+        super().__init__(shard, width=1, **kw)
+
+    def _major_compact(self) -> None:
+        k, c = _merge_runs(
+            [jnp.asarray(r.keys) for r in self.runs],
+            [jnp.asarray(r.cols) for r in self.runs],
+        )
+        ukeys, sums, n_unique = _combine_sorted(k, c[:, 0])
+        n = int(n_unique)
+        self.runs = [
+            SortedRun(np.asarray(ukeys)[:n], np.asarray(sums)[:n, None].astype(np.int32))
+        ]
+        self.major_compactions += 1
+
+    def count_range(self, lo: int, hi: int) -> int:
+        """Total count over an aggregate-key range (combines across runs +
+        any not-yet-combined duplicates)."""
+        _, cols = self.scan_range(lo, hi)
+        return int(cols[:, 0].sum()) if cols.size else 0

@@ -1,0 +1,10 @@
+"""Distribution layer: mesh axis conventions, partition-rule trees for
+params / optimizer state / caches / batches, activation-constraint hooks,
+and gradient compression."""
+from .sharding import (  # noqa: F401
+    batch_specs,
+    cache_specs,
+    dp_axes,
+    param_specs,
+    zero1_specs,
+)

@@ -1,0 +1,79 @@
+"""Trace-time sharding-constraint context.
+
+Model code stays mesh-agnostic; the launcher wraps tracing in
+`sharding_context(mesh, rules)` and the model calls `constrain(name, x)` at
+the few points where GSPMD needs a hint (activation residual stream, MoE
+expert buffers, loss logits chunks). Outside a context these are no-ops, so
+smoke tests and single-device runs never touch mesh machinery.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Dict, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_CTX: contextvars.ContextVar = contextvars.ContextVar("repro_sharding_ctx", default=None)
+
+
+@contextlib.contextmanager
+def sharding_context(mesh: Mesh, rules: Dict[str, P]):
+    token = _CTX.set((mesh, rules))
+    try:
+        yield
+    finally:
+        _CTX.reset(token)
+
+
+def constrain(name: str, x):
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = rules.get(name)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def current_mesh() -> Optional[Mesh]:
+    """The mesh being traced under, if any (used by modules that switch to
+    explicit shard_map implementations, e.g. MoE dispatch)."""
+    ctx = _CTX.get()
+    return None if ctx is None else ctx[0]
+
+
+def default_rules(
+    cfg, mesh: Mesh, global_batch: int, seq_parallel: bool = False, seq_len: int = 0
+) -> Dict[str, P]:
+    """Standard rule set built from the same divisibility logic as
+    sharding.py. seq_parallel: Megatron-style sequence parallelism — the
+    residual stream (and hence the scan's saved activation stacks) lives
+    S-sharded over 'model' between blocks; GSPMD turns the TP all-reduces
+    into all-gather/reduce-scatter pairs around each block."""
+    from .sharding import dp_axes, dp_size, model_axis_size
+
+    dp = dp_axes(mesh)
+    b = dp if global_batch % dp_size(mesh) == 0 else None
+    nm = model_axis_size(mesh)
+    vocab_ok = cfg.vocab_size % nm == 0
+    experts_ok = cfg.n_experts and cfg.n_experts % nm == 0
+    sp = seq_parallel and seq_len > 0 and seq_len % nm == 0
+    rules = {
+        "activations": P(b, "model" if sp else None, None),
+        "logits_chunk": P(b, None, "model" if vocab_ok else None),
+        "microbatch_2d": P(b, None),
+        "microbatch_3d": P(b, None, None),
+    }
+    if experts_ok:
+        rules["moe_buf"] = P("model", None, None)
+    if any(k.startswith("ssm") for k in cfg.layer_pattern):
+        from ..models.ssm import spec_from_cfg
+
+        spec = spec_from_cfg(cfg)
+        if spec.n_heads % nm == 0 and spec.d_inner % nm == 0:
+            rules["ssm_x4"] = P(b, None, "model", None)
+            rules["ssm_heads3"] = P(b, None, "model")
+    return rules

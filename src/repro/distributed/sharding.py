@@ -1,0 +1,234 @@
+"""Partition-rule trees: cfg + mesh -> PartitionSpec pytrees.
+
+Axis conventions (DESIGN.md): batch shards over dp = ('pod','data') (or
+('data',) single-pod); tensor/expert parallelism over 'model'. Rules are
+divisibility-guarded: anything that does not divide evenly over 'model'
+replicates (the Megatron "don't shard what doesn't divide" fallback) —
+qwen1.5's 20 heads on a 16-way model axis is the live example.
+
+KV caches: kv-head sharding over 'model' when kv_heads divides; otherwise
+the cache SEQUENCE dim shards over 'model' and GSPMD synthesizes the
+flash-decoding-style partial-softmax collectives (measured in §Roofline).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from ..models import ssm as ssm_mod
+
+PyTree = Any
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def model_axis_size(mesh: Mesh) -> int:
+    return mesh.shape.get("model", 1)
+
+
+def dp_size(mesh: Mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in dp_axes(mesh)]))
+
+
+def _div(n: int, m: int) -> bool:
+    return m > 0 and n % m == 0
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh) -> Dict:
+    """PartitionSpec tree mirroring init_params' structure."""
+    nm = model_axis_size(mesh)
+    hd = cfg.head_dim_
+    heads_div = _div(cfg.n_heads * hd, nm) and _div(cfg.n_heads, nm)
+    kv_div = _div(cfg.n_kv_heads, nm)
+    ff_div = _div(cfg.d_ff, nm)
+    vocab_div = _div(cfg.vocab_size, nm)
+    experts_div = _div(cfg.n_experts, nm)
+
+    def attn_specs(kind: str) -> Dict:
+        s = {
+            "norm": P(None),
+            "wq": P(None, "model") if heads_div else P(None, None),
+            "wk": P(None, "model") if kv_div else P(None, None),
+            "wv": P(None, "model") if kv_div else P(None, None),
+            "wo": P("model", None) if heads_div else P(None, None),
+        }
+        if cfg.qkv_bias:
+            s["bq"] = P("model") if heads_div else P(None)
+            s["bk"] = P("model") if kv_div else P(None)
+            s["bv"] = P("model") if kv_div else P(None)
+        if cfg.qk_norm:
+            s["q_norm"] = P(None)
+            s["k_norm"] = P(None)
+        if cfg.sandwich_norm:
+            s["post_norm"] = P(None)
+        if kind == "cross":
+            s["gate_attn"] = P()
+            s["gate_mlp"] = P()
+        return s
+
+    def mlp_specs() -> Dict:
+        s: Dict[str, Any] = {"mlp_norm": P(None)}
+        if cfg.n_experts:
+            e = "model" if experts_div else None
+            s["moe"] = {
+                "router": P(None, None),
+                "wi_gate": P(e, None, None),
+                "wi_up": P(e, None, None),
+                "wo": P(e, None, None),
+            }
+        elif cfg.mlp_type == "glu":
+            s["wi_gate"] = P(None, "model") if ff_div else P(None, None)
+            s["wi_up"] = P(None, "model") if ff_div else P(None, None)
+            s["wo_mlp"] = P("model", None) if ff_div else P(None, None)
+        else:
+            s["wi"] = P(None, "model") if ff_div else P(None, None)
+            s["wo_mlp"] = P("model", None) if ff_div else P(None, None)
+        if cfg.sandwich_norm:
+            s["post_mlp_norm"] = P(None)
+        return s
+
+    def ssm_specs() -> Dict:
+        spec = ssm_mod.spec_from_cfg(cfg)
+        din_div = _div(spec.d_inner, nm) and _div(spec.n_heads, nm)
+        m = "model" if din_div else None
+        return {
+            "norm": P(None),
+            "ssm": {
+                "in_z": P(None, m),
+                "in_x": P(None, m),
+                "in_B": P(None, None),
+                "in_C": P(None, None),
+                "in_dt": P(None, m),
+                "conv_x_w": P(None, m),
+                "conv_x_b": P(m),
+                "conv_B_w": P(None, None),
+                "conv_B_b": P(None),
+                "conv_C_w": P(None, None),
+                "conv_C_b": P(None),
+                "dt_bias": P(m),
+                "A_log": P(m),
+                "D": P(m),
+                "norm": P(m),
+                "out_proj": P(m, None),
+            },
+        }
+
+    def layer_specs(kind: str) -> Dict:
+        if kind in ("ssm", "ssm_shared_attn"):
+            return ssm_specs()
+        return {**attn_specs(kind), **mlp_specs()}
+
+    def add_group_dim(tree):
+        return jax.tree_util.tree_map(
+            lambda p: P(None, *p), tree, is_leaf=lambda x: isinstance(x, P)
+        )
+
+    specs: Dict[str, Any] = {
+        "final_norm": P(None),
+        "groups": tuple(add_group_dim(layer_specs(k)) for k in cfg.layer_pattern),
+    }
+    if cfg.embed_input:
+        specs["embed"] = P("model", None) if vocab_div else P(None, None)
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = P(None, "model") if vocab_div else P(None, None)
+    if cfg.shared_attn_heads:
+        sa_div = _div(cfg.shared_attn_heads, nm) and _div(cfg.shared_attn_kv_heads, nm)
+        sff_div = _div(cfg.shared_attn_d_ff, nm)
+        m = "model" if sa_div else None
+        f = "model" if sff_div else None
+        specs["shared_attn"] = {
+            "norm": P(None),
+            "wq": P(None, m),
+            "wk": P(None, m),
+            "wv": P(None, m),
+            "wo": P(m, None),
+            "mlp_norm": P(None),
+            "wi_gate": P(None, f),
+            "wi_up": P(None, f),
+            "wo_mlp": P(f, None),
+        }
+    return specs
+
+
+def batch_specs(cfg: ModelConfig, mesh: Mesh, global_batch: int) -> Dict:
+    """Specs for train/serve input batches (keys optional per family)."""
+    dp = dp_axes(mesh)
+    bspec = dp if _div(global_batch, dp_size(mesh)) else None
+    out = {
+        "inputs": P(bspec, None),
+        "targets": P(bspec, None),
+        "embeds": P(bspec, None, None),
+        "vision_states": P(bspec, None, None),
+    }
+    return out
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh, global_batch: int) -> Tuple:
+    """Specs mirroring init_caches' structure (tuple per pattern pos)."""
+    nm = model_axis_size(mesh)
+    dp = dp_axes(mesh)
+    b = dp if _div(global_batch, dp_size(mesh)) else None
+    kv_div = _div(cfg.n_kv_heads, nm)
+    per_pos = []
+    for kind in cfg.layer_pattern:
+        if kind in ("ssm", "ssm_shared_attn"):
+            spec = ssm_mod.spec_from_cfg(cfg)
+            h_div = _div(spec.n_heads, nm)
+            c: Dict[str, Any] = {
+                "state": P(None, b, "model" if h_div else None, None, None),
+                "conv": P(None, b, None, None),
+            }
+            if kind == "ssm_shared_attn":
+                sa_kv_div = _div(cfg.shared_attn_kv_heads, nm)
+                c["sa"] = {
+                    "k": P(None, b, None, "model", None) if sa_kv_div else P(None, b, "model", None, None),
+                    "v": P(None, b, None, "model", None) if sa_kv_div else P(None, b, "model", None, None),
+                }
+            per_pos.append(c)
+        elif kind == "cross":
+            s = P(None, b, None, "model", None) if kv_div else P(None, b, None, None, None)
+            per_pos.append({"k": s, "v": s})
+        else:
+            s = (
+                P(None, b, None, "model", None)
+                if kv_div
+                else P(None, b, "model", None, None)  # sequence-sharded cache
+            )
+            per_pos.append({"k": s, "v": s})
+    return tuple(per_pos)
+
+
+def zero1_specs(param_spec_tree, shapes, mesh: Mesh):
+    """ZeRO-1: additionally shard optimizer-state leaves over dp on the
+    first replicated axis that divides. Applied to Adam m/v (f32), which
+    dominate training memory. `shapes`: ShapeDtypeStruct tree matching the
+    spec tree."""
+    dps = dp_size(mesh)
+    dp = dp_axes(mesh)
+
+    def upgrade(spec: P, x) -> P:
+        shape = x.shape
+        parts = list(spec) + [None] * (len(shape) - len(spec))
+        for i, (p, dim) in enumerate(zip(parts, shape)):
+            if p is None and dim > 0 and dim % dps == 0:
+                parts[i] = dp
+                return P(*parts)
+        return spec
+
+    return jax.tree_util.tree_map(
+        upgrade, param_spec_tree, shapes, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+def to_named(tree, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

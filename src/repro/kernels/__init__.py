@@ -1,0 +1,20 @@
+"""Pallas TPU kernels for the store's compute hot-spots — the pieces the
+paper implements as server-side Accumulo iterators/combiners:
+
+  filter_scan        server-side filter iterator (WholeRowIterator subclass)
+                     -> vectorized predicate program over columnar VMEM tiles
+  merge_intersect    client-side index key-set intersection (query plan AND)
+                     -> blockwise binary-search membership over sorted keys
+  aggregate_combine  combiner framework (count aggregation)
+                     -> block-segmented sum over sorted (key, count) runs
+
+Each subpackage: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+public wrapper; on CPU defaults to the vectorized jnp reference since
+interpret-mode Pallas is an emulation, on TPU to the kernel), ref.py
+(pure-jnp oracle used for allclose validation).
+
+All kernels operate on int32 lanes only (dictionary codes / split key
+lanes) — the packed int64 keys never enter a kernel, by design (TPU-native
+layout; see DESIGN.md hardware-adaptation table).
+"""
+from . import aggregate_combine, filter_scan, merge_intersect  # noqa: F401

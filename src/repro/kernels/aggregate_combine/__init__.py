@@ -1,0 +1,1 @@
+from .ops import combine_sorted_counts  # noqa: F401

@@ -1,0 +1,77 @@
+"""Pallas TPU kernel: the Accumulo combiner, as a block-segmented sum.
+
+The paper's aggregate table "maintains a count of particular value
+occurrences by time interval", with counts pre-summed by ingest workers and
+finished "on the server side using Accumulo's combiner framework" (§II).
+After a major compaction the table is a sorted run of (key, count) entries
+possibly containing duplicate keys; the combiner sums counts per unique key.
+
+Kernel: grid over (BLOCK,)-tiles of the sorted run. Within a tile it
+computes head flags (key != previous key), per-segment sums via a prefix-sum
+difference (cumsum(count) gathered at segment ends), and writes
+  heads  (BLOCK,) bool   — segment starts, relative to the tile only
+  sums   (BLOCK,) int32  — at head positions, the tile-local segment total
+
+Cross-tile stitching (a key straddling a tile boundary) is O(n_tiles) and
+runs in the ops.py epilogue — the canonical two-level reduction split.
+Keys are (hi, lo) int32 lanes; equality needs no unsigned trickery.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 4096
+
+
+def _kernel(hi_ref, lo_ref, cnt_ref, heads_ref, sums_ref):
+    hi = hi_ref[...]
+    lo = lo_ref[...]
+    cnt = cnt_ref[...].astype(jnp.int32)
+    n = hi.shape[0]
+    prev_hi = jnp.concatenate([jnp.full((1,), -1, hi.dtype), hi[:-1]])
+    prev_lo = jnp.concatenate([jnp.full((1,), -1, lo.dtype), lo[:-1]])
+    heads = (hi != prev_hi) | (lo != prev_lo)
+    heads = heads.at[0].set(True)
+    # Per-segment sums from an inclusive prefix sum: for the segment that
+    # starts at i and ends at j (inclusive), sum = pfx[j] - pfx[i] + cnt[i].
+    pfx = jnp.cumsum(cnt)
+    seg_id = jnp.cumsum(heads.astype(jnp.int32)) - 1
+    # Segment end position for each row's segment = max row index per seg.
+    seg_end = jax.ops.segment_max(
+        jnp.arange(n, dtype=jnp.int32), seg_id, num_segments=n
+    )
+    end_for_row = jnp.take(seg_end, seg_id, axis=0)
+    seg_sum_at_head = jnp.take(pfx, end_for_row, axis=0) - pfx + cnt
+    sums_ref[...] = jnp.where(heads, seg_sum_at_head, 0)
+    heads_ref[...] = heads
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block"))
+def combine_blocks_pallas(hi, lo, cnt, *, interpret: bool = True, block: int = BLOCK):
+    """hi/lo/cnt (n,) int32, n % block == 0, sorted by (hi, lo).
+    Returns (heads bool (n,), tile-local head sums int32 (n,))."""
+    n = hi.shape[0]
+    assert n % block == 0
+    grid = (n // block,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.bool_),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(hi, lo, cnt)

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the combiner: full-array segmented sum over a sorted
+(key, count) run. Matches core/tables.py::_combine_sorted semantics."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def combine_sorted_ref(hi, lo, cnt):
+    """Returns (heads bool (n,), per-segment total at head positions)."""
+    n = hi.shape[0]
+    prev_hi = jnp.concatenate([jnp.full((1,), -1, hi.dtype), hi[:-1]])
+    prev_lo = jnp.concatenate([jnp.full((1,), -1, lo.dtype), lo[:-1]])
+    heads = (hi != prev_hi) | (lo != prev_lo)
+    heads = heads.at[0].set(True)
+    seg = jnp.cumsum(heads.astype(jnp.int32)) - 1
+    sums = jax.ops.segment_sum(cnt.astype(jnp.int32), seg, num_segments=n)
+    at_head = jnp.where(heads, jnp.take(sums, seg, axis=0), 0)
+    return heads, at_head

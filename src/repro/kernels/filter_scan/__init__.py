@@ -1,0 +1,1 @@
+from .ops import filter_scan  # noqa: F401

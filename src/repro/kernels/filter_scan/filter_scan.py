@@ -1,0 +1,134 @@
+"""Pallas TPU kernel: server-side filter iterator.
+
+Accumulo evaluates filter conditions row-by-row in a JVM iterator
+(WholeRowIterator subclass — paper §III-B). The TPU-native equivalent
+evaluates a compiled postfix predicate program (see core/filter.py) over a
+VMEM-resident columnar tile of dictionary codes, producing a match bitmap
+for the whole tile at once.
+
+Tiling: the event-table run is laid out (rows, fields_padded) int32 with
+fields padded to a lane multiple (128). Each grid step processes a
+(BLOCK_ROWS, F_pad) tile; the program arrays (a few hundred bytes) and the
+codeset table replicate into every block. The boolean evaluation stack
+lives in registers as a loop-carried (MAX_STACK, BLOCK_ROWS) value —
+program depth is bounded at compile time.
+
+VMEM budget per block @ BLOCK_ROWS=1024, F_pad=128, M<=256, S<=16:
+  tile 1024*128*4 = 512 KiB, codesets <=16 KiB, stack 8*1024 bool -> well
+  inside a v5e core's VMEM alongside double-buffering.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from ...core.filter import (
+    MAX_STACK,
+    OP_AND,
+    OP_NOP,
+    OP_NOT,
+    OP_PUSH_EQ,
+    OP_PUSH_IN,
+    OP_PUSH_TRUE,
+    OP_OR,
+)
+
+BLOCK_ROWS = 1024
+LANE = 128
+
+
+def _kernel(cols_ref, opcodes_ref, arg0_ref, arg1_ref, codesets_ref, mask_ref):
+    cols = cols_ref[...]  # (BR, F_pad) int32
+    opcodes = opcodes_ref[...]  # (P,) int32
+    arg0 = arg0_ref[...]
+    arg1 = arg1_ref[...]
+    codesets = codesets_ref[...]  # (S, M) int32, -1 padded
+    br = cols.shape[0]
+    n_ops = opcodes.shape[0]
+
+    def push(stack, sp, v):
+        return lax.dynamic_update_index_in_dim(stack, v, sp, axis=0), sp + 1
+
+    def step(i, carry):
+        stack, sp = carry
+        op = opcodes[i]
+        f = arg0[i]
+        arg = arg1[i]
+        col = lax.dynamic_index_in_dim(cols, f, axis=1, keepdims=False)  # (BR,)
+        cset = lax.dynamic_index_in_dim(codesets, arg, axis=0, keepdims=False)
+
+        def do_nop(s, p):
+            return s, p
+
+        def do_eq(s, p):
+            return push(s, p, col == arg)
+
+        def do_in(s, p):
+            hit = jnp.any((col[:, None] == cset[None, :]) & (cset[None, :] >= 0), axis=1)
+            return push(s, p, hit)
+
+        def do_true(s, p):
+            return push(s, p, jnp.ones((br,), jnp.bool_))
+
+        def do_and(s, p):
+            a = lax.dynamic_index_in_dim(s, p - 2, axis=0, keepdims=False)
+            b = lax.dynamic_index_in_dim(s, p - 1, axis=0, keepdims=False)
+            return lax.dynamic_update_index_in_dim(s, a & b, p - 2, axis=0), p - 1
+
+        def do_or(s, p):
+            a = lax.dynamic_index_in_dim(s, p - 2, axis=0, keepdims=False)
+            b = lax.dynamic_index_in_dim(s, p - 1, axis=0, keepdims=False)
+            return lax.dynamic_update_index_in_dim(s, a | b, p - 2, axis=0), p - 1
+
+        def do_not(s, p):
+            a = lax.dynamic_index_in_dim(s, p - 1, axis=0, keepdims=False)
+            return lax.dynamic_update_index_in_dim(s, ~a, p - 1, axis=0), p
+
+        branches = [do_nop, do_eq, do_in, do_true, do_and, do_or, do_not]
+        # OP_* values are 0..6 in the order above.
+        return lax.switch(op, branches, stack, sp)
+
+    stack0 = jnp.zeros((MAX_STACK, br), jnp.bool_)
+    stack, _ = lax.fori_loop(0, n_ops, step, (stack0, jnp.int32(0)))
+    mask_ref[...] = stack[0]
+
+
+# Sanity: opcode numbering must match the branch table above.
+assert (OP_NOP, OP_PUSH_EQ, OP_PUSH_IN, OP_PUSH_TRUE, OP_AND, OP_OR, OP_NOT) == (
+    0,
+    1,
+    2,
+    3,
+    4,
+    5,
+    6,
+)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_rows"))
+def filter_scan_pallas(
+    cols, opcodes, arg0, arg1, codesets, *, interpret: bool = True, block_rows: int = BLOCK_ROWS
+):
+    """cols (n, f_pad) int32 [n % block_rows == 0, f_pad % 128 == 0];
+    program arrays (p,); codesets (s, m). Returns bool (n,) match mask."""
+    n, f_pad = cols.shape
+    assert n % block_rows == 0, (n, block_rows)
+    grid = (n // block_rows,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, f_pad), lambda i: (i, 0)),
+            pl.BlockSpec(opcodes.shape, lambda i: (0,)),
+            pl.BlockSpec(arg0.shape, lambda i: (0,)),
+            pl.BlockSpec(arg1.shape, lambda i: (0,)),
+            pl.BlockSpec(codesets.shape, lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.bool_),
+        interpret=interpret,
+    )(cols, opcodes, arg0, arg1, codesets)

@@ -1,0 +1,1 @@
+from .ops import intersect_sorted, union_sorted  # noqa: F401

@@ -1,0 +1,92 @@
+"""Pallas TPU kernel: sorted key-set intersection.
+
+The paper's query planner executes equality conditions as index-table scans
+and combines the resulting row-ID sets "via intersection or union" at the
+client (§III-B, Fig 2). The hot case is intersection of two sorted event-key
+vectors. Keys are 53-bit packed integers carried as (hi, lo) int32 lanes —
+the kernel never touches 64-bit lanes (TPU-native; int64 would lower to
+emulated pairs anyway).
+
+Algorithm: grid over A in (BLOCK,) tiles; the full B lane-pair is VMEM
+resident (index-scan result sets are adaptively batched to ~k rows, so B is
+small — ops.py enforces the documented cap). For each a in the tile, a
+vectorized branchless binary search over B (log2(m) fori steps, B padded to
+a power of two with +INF sentinels) finds the candidate slot; membership is
+an exact (hi, lo) compare. Comparison is lexicographic with the lo lane
+compared as unsigned (x ^ 0x80000000 trick).
+
+Output: per-element membership bitmap; compaction happens in ops.py (jnp),
+keeping the kernel shape-static.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+BLOCK = 2048
+SIGN = -0x80000000  # int32 sign bit, as a weak-typed Python literal
+
+
+def _as_unsigned_order(lo):
+    """Map int32 bit patterns to an order-preserving signed value for
+    unsigned comparison: u(a) < u(b)  <=>  (a ^ SIGN) < (b ^ SIGN)."""
+    return lo ^ SIGN
+
+
+def _kernel(a_hi_ref, a_lo_ref, b_hi_ref, b_lo_ref, out_ref):
+    a_hi = a_hi_ref[...]  # (BLOCK,)
+    a_lo = _as_unsigned_order(a_lo_ref[...])
+    b_hi = b_hi_ref[...]  # (M,) padded to pow2 with INT32_MAX sentinels
+    b_lo = _as_unsigned_order(b_lo_ref[...])
+    m = b_hi.shape[0]
+    n_steps = max(m.bit_length() - 1, 0)  # m is a power of two
+
+    # Branchless lower-bound binary search, vectorized over the A tile.
+    lo_idx = jnp.zeros(a_hi.shape, jnp.int32)
+
+    def step(s, lo_idx):
+        half = jnp.int32(m) >> (s + 1)
+        mid = lo_idx + half
+        mh = jnp.take(b_hi, mid, axis=0)
+        ml = jnp.take(b_lo, mid, axis=0)
+        # b[mid] < a  (lexicographic on (hi, lo-unsigned))
+        lt = (mh < a_hi) | ((mh == a_hi) & (ml < a_lo))
+        return jnp.where(lt, mid, lo_idx)
+
+    lo_idx = lax.fori_loop(0, n_steps, step, lo_idx)
+    # lo_idx is the last index with b[idx] < a (or 0); candidate = idx and
+    # idx+1 both checked for exact equality.
+    cand0_h = jnp.take(b_hi, lo_idx, axis=0)
+    cand0_l = jnp.take(b_lo, lo_idx, axis=0)
+    nxt = jnp.minimum(lo_idx + 1, m - 1)
+    cand1_h = jnp.take(b_hi, nxt, axis=0)
+    cand1_l = jnp.take(b_lo, nxt, axis=0)
+    hit = ((cand0_h == a_hi) & (cand0_l == a_lo)) | ((cand1_h == a_hi) & (cand1_l == a_lo))
+    out_ref[...] = hit
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block"))
+def intersect_mask_pallas(a_hi, a_lo, b_hi, b_lo, *, interpret: bool = True, block: int = BLOCK):
+    """a_* (n,) int32 [n % block == 0]; b_* (m,) int32, m a power of two,
+    sorted ascending by (hi, lo-unsigned) and padded with INT32_MAX.
+    Returns bool (n,): a in b."""
+    n = a_hi.shape[0]
+    assert n % block == 0
+    grid = (n // block,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec(b_hi.shape, lambda i: (0,)),
+            pl.BlockSpec(b_lo.shape, lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.bool_),
+        interpret=interpret,
+    )(a_hi, a_lo, b_hi, b_lo)

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for merge_intersect: reconstruct packed int64 keys from
+the (hi, lo) lanes and use searchsorted membership."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _join(hi, lo):
+    return (hi.astype(jnp.int64) << 32) | (lo.astype(jnp.int64) & 0xFFFFFFFF)
+
+
+@jax.jit
+def intersect_mask_ref(a_hi, a_lo, b_hi, b_lo):
+    """Membership mask of a in b; b sorted ascending by (hi, lo-unsigned)."""
+    a = _join(a_hi, a_lo)
+    b = _join(b_hi, b_lo)
+    pos = jnp.searchsorted(b, a)
+    pos_c = jnp.clip(pos, 0, b.shape[0] - 1)
+    return (pos < b.shape[0]) & (b[pos_c] == a)

@@ -1,0 +1,3 @@
+"""Launchers: production mesh builders, AOT step builders (train / prefill
+/ decode), the multi-pod dry-run, HLO collective analysis, and roofline
+derivation."""

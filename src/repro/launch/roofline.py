@@ -1,0 +1,142 @@
+"""Assemble the §Dry-run / §Roofline tables from experiments/dryrun JSONs.
+
+    PYTHONPATH=src python -m repro.launch.roofline [--dir experiments/dryrun]
+                                                   [--baseline experiments/dryrun_baseline]
+
+Prints markdown tables: per (arch x shape) single-pod roofline terms,
+dominant bottleneck, useful-FLOP ratio, and (if --baseline) the
+before/after deltas of the perf iterations.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+from typing import Dict, List, Optional
+
+ARCH_ORDER = [
+    "gemma2-9b", "internlm2-20b", "qwen1.5-4b", "gemma3-12b", "musicgen-medium",
+    "moonshot-v1-16b-a3b", "phi3.5-moe-42b-a6.6b", "zamba2-2.7b",
+    "llama-3.2-vision-11b", "mamba2-780m",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(directory: str) -> Dict:
+    out = {}
+    for p in sorted(Path(directory).glob("*.json")):
+        if p.name.startswith("FAIL"):
+            continue
+        r = json.loads(p.read_text())
+        out[(r["arch"], r["shape"], r["mesh"])] = r
+    return out
+
+
+def fmt_s(x: float) -> str:
+    return f"{x:.2e}"
+
+
+def roofline_fraction(r: Dict) -> Optional[float]:
+    """Useful-compute fraction of the step's roofline-limited time:
+    MODEL_FLOPS-time / max(three terms). 1.0 = hardware-limit perfect."""
+    t = r["roofline"]
+    dom = max(t["compute_s"], t["memory_s"], t["collective_s"])
+    if dom <= 0:
+        return None
+    from .hlo_analysis import PEAK_FLOPS
+
+    useful = r["model_flops_per_device"] / PEAK_FLOPS
+    return useful / dom
+
+
+def table(results: Dict, mesh: str = "single_pod") -> List[str]:
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | bound | peak GiB "
+        "| HLO GFLOP/dev | useful/HLO | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = results.get((arch, shape, mesh))
+            if r is None:
+                if shape == "long_500k":
+                    lines.append(f"| {arch} | {shape} | — | — | — | skipped(full-attention) | — | — | — | — |")
+                continue
+            t = r["roofline"]
+            frac = roofline_fraction(r)
+            ratio = r.get("useful_flop_ratio")
+            lines.append(
+                f"| {arch} | {shape} | {fmt_s(t['compute_s'])} | {fmt_s(t['memory_s'])} "
+                f"| {fmt_s(t['collective_s'])} | {t['bottleneck'].replace('_s','')} "
+                f"| {r['memory']['peak_bytes']/2**30:.2f} "
+                f"| {r['cost']['flops_per_device']/1e9:.1f} "
+                f"| {(ratio if ratio else 0):.3f} | {(frac if frac else 0):.3f} |"
+            )
+    return lines
+
+
+def _peak_new_formula(rec: Dict) -> float:
+    """Recompute peak under the final formula (args + temps + non-aliased
+    outputs) so baseline snapshots (recorded pre-donation, alias absent)
+    compare like-for-like."""
+    m = rec["memory"]
+    alias = m.get("alias_bytes", 0)
+    return (m["argument_bytes"] + m["temp_bytes"] + max(m["output_bytes"] - alias, 0)) / 2**30
+
+
+def _collective_raw(rec: Dict) -> float:
+    """Loop-once collective bytes — the metric the baseline snapshot
+    recorded (the final records carry it as raw_bytes_loop_once)."""
+    c = rec["collectives"]
+    return float(c.get("raw_bytes_loop_once", c.get("total_bytes", 0.0)))
+
+
+def _xla_flops(rec: Dict) -> float:
+    return float(rec["cost"].get("xla_raw_flops", rec["cost"].get("flops_per_device", 0.0)))
+
+
+def delta_table(results: Dict, baseline: Dict, cells: List) -> List[str]:
+    lines = [
+        "| cell | metric | baseline | optimized | delta |",
+        "|---|---|---|---|---|",
+    ]
+    for (arch, shape, mesh) in cells:
+        b = baseline.get((arch, shape, mesh))
+        r = results.get((arch, shape, mesh))
+        if not b or not r:
+            continue
+        # Like-for-like metrics only (the final analysis is loop-weighted;
+        # the baseline snapshot is XLA-raw, so deltas use raw-vs-raw).
+        for label, get in [
+            ("peak GiB", _peak_new_formula),
+            ("XLA flops/dev (loop-once)", _xla_flops),
+            ("collective B/dev (loop-once)", _collective_raw),
+        ]:
+            b0, r0 = get(b), get(r)
+            if not b0 and not r0:
+                continue
+            d = (r0 - b0) / b0 * 100 if b0 else 0.0
+            lines.append(
+                f"| {arch}/{shape}/{mesh} | {label} | {b0:.4g} | {r0:.4g} | {d:+.1f}% |"
+            )
+    return lines
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--baseline", default=None)
+    ap.add_argument("--mesh", default="single_pod")
+    args = ap.parse_args()
+    results = load(args.dir)
+    print(f"## Roofline ({args.mesh}, {len(results)} cells loaded)\n")
+    print("\n".join(table(results, args.mesh)))
+    if args.baseline:
+        baseline = load(args.baseline)
+        cells = sorted({k for k in results} & {k for k in baseline})
+        print("\n## Perf deltas vs baseline\n")
+        print("\n".join(delta_table(results, baseline, cells)))
+
+
+if __name__ == "__main__":
+    main()

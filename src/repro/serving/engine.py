@@ -1,0 +1,141 @@
+"""Continuous-batching serve engine with adaptive admission.
+
+Slot-pool design (vLLM-lite): a fixed pool of `max_batch` sequence slots
+shares one padded KV cache; every decode iteration steps ALL active slots.
+Admission of waiting requests is governed by the paper's Alg 1 transplant
+(serving/batcher.py): rounds that run hot shrink admission toward the
+latency floor, fast rounds grow it geometrically.
+
+This engine is the real thing (used by examples/serve_lm.py on a small
+model); the dry-run's decode cells lower exactly the decode_step it calls.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..models.model import decode_step, init_caches, prefill
+from .batcher import AdaptiveRequestBatcher
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (L,) int32
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    submitted_at: float = field(default_factory=time.perf_counter)
+    first_token_at: Optional[float] = None
+    finished_at: Optional[float] = None
+    output: List[int] = field(default_factory=list)
+
+    @property
+    def ttft(self) -> Optional[float]:
+        return None if self.first_token_at is None else self.first_token_at - self.submitted_at
+
+
+class ServeEngine:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        max_batch: int = 8,
+        cache_len: int = 256,
+        batcher: Optional[AdaptiveRequestBatcher] = None,
+    ):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.cache_len = cache_len
+        self.batcher = batcher or AdaptiveRequestBatcher(max_batch=max_batch)
+        self.waiting: List[Request] = []
+        self.active: Dict[int, Request] = {}  # slot -> request
+        self._next_rid = 0
+        self.caches = init_caches(params, cfg, max_batch, cache_len)
+        self.cur_pos = jnp.zeros((max_batch,), jnp.int32)
+        self.live = jnp.zeros((max_batch,), jnp.bool_)
+        self.last_tok = jnp.zeros((max_batch, 1), jnp.int32)
+        self._decode = jax.jit(
+            lambda p, b, c, cp: decode_step(p, cfg, b, c, cp)
+        )
+        self._prefill_1 = jax.jit(
+            lambda p, b: prefill(p, cfg, b, cache_len=cache_len)
+        )
+        self.completed: List[Request] = []
+
+    # ------------------------------------------------------------- public
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 16, eos_id=None) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        self.waiting.append(Request(rid, np.asarray(prompt, np.int32), max_new_tokens, eos_id))
+        return rid
+
+    def run(self, max_rounds: int = 10_000) -> List[Request]:
+        """Serve until all submitted requests finish."""
+        rounds = 0
+        while (self.waiting or self.active) and rounds < max_rounds:
+            self.step_round()
+            rounds += 1
+        return self.completed
+
+    # ----------------------------------------------------------- internals
+    def _free_slots(self) -> List[int]:
+        return [s for s in range(self.max_batch) if s not in self.active]
+
+    def _admit(self, n: int) -> None:
+        """Prefill n waiting requests into free slots (one at a time: the
+        prompt lengths differ; production would bucket them)."""
+        for _ in range(n):
+            if not self.waiting:
+                return
+            slots = self._free_slots()
+            if not slots:
+                return
+            slot = slots[0]
+            req = self.waiting.pop(0)
+            _, caches_1, last_pos = self._prefill_1(
+                self.params, {"inputs": jnp.asarray(req.prompt[None, :])}
+            )
+            # Copy the single-row caches into this slot of the pool.
+            self.caches = jax.tree_util.tree_map(
+                lambda pool, one: pool.at[:, slot : slot + 1].set(one), self.caches, caches_1
+            )
+            self.cur_pos = self.cur_pos.at[slot].set(len(req.prompt))
+            self.last_tok = self.last_tok.at[slot, 0].set(int(req.prompt[-1]))
+            self.live = self.live.at[slot].set(True)
+            self.active[slot] = req
+
+    def step_round(self) -> None:
+        t0 = time.perf_counter()
+        self._admit(self.batcher.admit(len(self.waiting), len(self._free_slots())))
+        served = len(self.active)
+        if served:
+            logits, self.caches = self._decode(
+                self.params, {"inputs": self.last_tok}, self.caches, self.cur_pos
+            )
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # greedy
+            nxt_np = np.asarray(nxt)
+            now = time.perf_counter()
+            done_slots = []
+            for slot, req in self.active.items():
+                tok = int(nxt_np[slot])
+                if req.first_token_at is None:
+                    req.first_token_at = now
+                req.output.append(tok)
+                if (req.eos_id is not None and tok == req.eos_id) or len(
+                    req.output
+                ) >= req.max_new_tokens or int(self.cur_pos[slot]) + 1 >= self.cache_len - 1:
+                    req.finished_at = now
+                    done_slots.append(slot)
+            self.last_tok = nxt[:, None]
+            self.cur_pos = self.cur_pos + self.live.astype(jnp.int32)
+            for slot in done_slots:
+                self.completed.append(self.active.pop(slot))
+                self.live = self.live.at[slot].set(False)
+        self.batcher.update(time.perf_counter() - t0, served)

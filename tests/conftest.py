@@ -1,0 +1,7 @@
+# NOTE: no XLA_FLAGS here by design — smoke tests and benches must see the
+# single real CPU device; only launch/dryrun.py (and the subprocess spawned
+# by test_distributed.py) force placeholder device counts.
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,129 @@
+"""Attention primitives: flash vs naive (values + grads), decode masks,
+ring-buffer slot maps, q_offset continuation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.models.attention import (
+    decode_attention,
+    flash_attention,
+    ring_slot_positions,
+)
+
+
+def naive(q, k, v, causal=True, window=None, softcap=None, scale=None, q_offset=0):
+    b, s, h, d = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    t = k.shape[1]
+    scale = scale or 1.0 / np.sqrt(d)
+    qf = q.reshape(b, s, kh, g, d)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qf, k) * scale
+    if softcap:
+        logits = jnp.tanh(logits / softcap) * softcap
+    qi = q_offset + jnp.arange(s)[:, None]
+    kj = jnp.arange(t)[None, :]
+    m = jnp.ones((s, t), bool)
+    if causal:
+        m &= kj <= qi
+    if window:
+        m &= kj > qi - window
+    logits = jnp.where(m[None, None, None], logits, -2e30)
+    p = jax.nn.softmax(logits, -1)
+    return jnp.einsum("bkgqs,bskd->bqkgd", p, v).reshape(b, s, h, d)
+
+
+@given(
+    s=st.integers(3, 120),
+    h_and_kv=st.sampled_from([(1, 1), (4, 4), (4, 2), (8, 2)]),
+    causal=st.booleans(),
+    window=st.sampled_from([None, 4, 16]),
+    cap=st.sampled_from([None, 20.0]),
+    qc=st.sampled_from([16, 32, 128]),
+    seed=st.integers(0, 100),
+)
+@settings(max_examples=25, deadline=None)
+def test_flash_matches_naive_sweep(s, h_and_kv, causal, window, cap, qc, seed):
+    h, kv = h_and_kv
+    if window is not None and not causal:
+        window = None  # windowed non-causal not a used configuration
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (2, s, h, 16), jnp.float32)
+    k = jax.random.normal(ks[1], (2, s, kv, 16), jnp.float32)
+    v = jax.random.normal(ks[2], (2, s, kv, 16), jnp.float32)
+    got = flash_attention(
+        q, k, v, causal=causal, window=window, softcap_val=cap, q_chunk=qc, kv_block=16
+    )
+    want = naive(q, k, v, causal=causal, window=window, softcap=cap)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-4, atol=3e-5)
+
+
+def test_flash_grads_match_naive():
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (2, 48, 4, 16), jnp.float32)
+    k = jax.random.normal(ks[1], (2, 48, 2, 16), jnp.float32)
+    v = jax.random.normal(ks[2], (2, 48, 2, 16), jnp.float32)
+    w = jax.random.normal(ks[0], (2, 48, 4, 16), jnp.float32)  # cotangent-ish
+
+    def f_flash(q, k, v):
+        return (flash_attention(q, k, v, causal=True, window=8, softcap_val=30.0,
+                                q_chunk=16, kv_block=16) * w).sum()
+
+    def f_naive(q, k, v):
+        return (naive(q, k, v, causal=True, window=8, softcap=30.0) * w).sum()
+
+    gf = jax.grad(f_flash, argnums=(0, 1, 2))(q, k, v)
+    gn = jax.grad(f_naive, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gf, gn):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-3, atol=1e-5)
+
+
+def test_q_offset_continuation():
+    """Chunked prefill: attending from offset q rows over a longer KV must
+    equal the tail of full attention."""
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    S = 64
+    q = jax.random.normal(ks[0], (1, S, 2, 8), jnp.float32)
+    k = jax.random.normal(ks[1], (1, S, 2, 8), jnp.float32)
+    v = jax.random.normal(ks[2], (1, S, 2, 8), jnp.float32)
+    full = flash_attention(q, k, v, causal=True, q_chunk=16, kv_block=16)
+    tail = flash_attention(q[:, 48:], k, v, causal=True, q_offset=48, q_chunk=16, kv_block=16)
+    np.testing.assert_allclose(np.asarray(full[:, 48:]), np.asarray(tail), rtol=2e-4, atol=1e-5)
+
+
+def test_ring_slot_positions():
+    cur = jnp.asarray([0, 3, 7, 8, 19], jnp.int32)
+    pos = np.asarray(ring_slot_positions(cur, 8))
+    for bi, c in enumerate([0, 3, 7, 8, 19]):
+        for j in range(8):
+            p = pos[bi, j]
+            assert p % 8 == j
+            assert p <= c
+            assert p > c - 8
+    # unwritten slots (p < 0) only when cur < W-1
+    assert (pos[0] < 0).sum() == 7  # cur=0: only slot 0 valid
+    assert (pos[4] >= 0).all()  # cur=19 > W: all slots valid
+
+
+def test_decode_attention_ring_equals_linear():
+    """Masked ring-cache decode == linear-cache decode with a window."""
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    B, L, KH, D, W = 2, 32, 2, 8, 8
+    q = jax.random.normal(ks[0], (B, 1, 4, D), jnp.float32)
+    k_lin = jax.random.normal(ks[1], (B, L, KH, D), jnp.float32)
+    v_lin = jax.random.normal(ks[2], (B, L, KH, D), jnp.float32)
+    cur = jnp.asarray([17, 23], jnp.int32)
+    want = decode_attention(q, k_lin, v_lin, cur, window=W)
+    # Build the ring cache from the linear one.
+    k_ring = jnp.zeros((B, W, KH, D), jnp.float32)
+    v_ring = jnp.zeros((B, W, KH, D), jnp.float32)
+    for bi, c in enumerate([17, 23]):
+        for p in range(max(c - W + 1, 0), c + 1):
+            k_ring = k_ring.at[bi, p % W].set(k_lin[bi, p])
+            v_ring = v_ring.at[bi, p % W].set(v_lin[bi, p])
+    got = decode_attention(
+        q, k_ring, v_ring, cur, window=W, slot_positions=ring_slot_positions(cur, W)
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)

@@ -1,0 +1,90 @@
+"""Algorithm 1/2 property tests: the paper's adaptive batching."""
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.batching import AdaptiveBatcher, HitRateTracker, run_batched_query
+
+
+def collect(t_start, t_stop, b0, query, **kw):
+    batcher = run_batched_query(t_start, t_stop, b0, query, **kw)
+    return batcher.history
+
+
+@given(
+    t_stop=st.integers(0, 100_000),
+    b0=st.floats(1.0, 5000.0),
+    rate=st.floats(0.001, 50.0),
+    runtime=st.floats(1e-4, 5.0),
+)
+@settings(max_examples=60, deadline=None)
+def test_batches_tile_range_exactly(t_stop, b0, rate, runtime):
+    """Batch intervals [p, p+b] are disjoint, eps-separated, ordered, and
+    cover [t_start, t_stop]."""
+    def query(lo, hi):
+        return runtime, int((hi - lo) * rate)
+
+    hist = collect(0, t_stop, b0, query)
+    assert hist, "at least one batch"
+    assert hist[0].p == 0
+    prev_end = None
+    for rec in hist:
+        assert rec.b >= 0
+        if prev_end is not None:
+            assert rec.p == prev_end + 1  # eps = 1: no gap, no overlap
+        prev_end = rec.p + rec.b
+    assert prev_end >= t_stop  # full coverage
+
+
+def test_growth_factor_c():
+    """With plentiful results and mid-band runtimes, k grows by c."""
+    b = AdaptiveBatcher(t_start=0, t_stop=10**9, b0=100.0, t_min=0.0, t_max=1e9)
+    ks = [b._k]
+    for _ in range(5):
+        b.update(runtime=1.0, rows=int(b._k))  # hit exactly k rows
+        ks.append(b._k)
+    for a, bb in zip(ks, ks[1:]):
+        assert abs(bb / a - 1.5) < 1e-6
+
+
+def test_clamp_too_large():
+    """Estimated runtime above T_max shrinks k to T_max * rate."""
+    b = AdaptiveBatcher(t_start=0, t_stop=10**9, b0=100.0, t_min=1.0, t_max=30.0)
+    b.update(runtime=25.0, rows=10)  # rate = 0.4 rows/s; c*k = 15 -> 37.5s > 30
+    assert abs(b._k - 30.0 * (10 / 25.0)) < 1e-6
+
+
+def test_clamp_too_small():
+    """Estimated runtime below T_min grows k to T_min * rate."""
+    b = AdaptiveBatcher(t_start=0, t_stop=10**9, b0=100.0, t_min=1.0, t_max=30.0)
+    b.update(runtime=0.001, rows=10)  # c*k estimated at 0.0015s < 1s
+    assert abs(b._k - 1.0 * (10 / 0.001)) < 1e-3
+
+
+def test_empty_batches_grow_geometrically():
+    b = AdaptiveBatcher(t_start=0, t_stop=10**9, b0=64.0)
+    sizes = [b._b]
+    for _ in range(4):
+        b.update(runtime=0.01, rows=0)
+        sizes.append(b._b)
+    for a, bb in zip(sizes, sizes[1:]):
+        assert bb >= a  # monotone growth on empty results
+
+
+def test_paper_defaults():
+    b = AdaptiveBatcher(t_start=0, t_stop=100, b0=10)
+    assert b.k0 == 10.0 and b.c == 1.5 and b.t_max == 30.0 and b.t_min == 1.0
+
+
+def test_zero_width_range_runs_once():
+    hist = collect(5, 5, 10.0, lambda lo, hi: (0.01, 1))
+    assert len(hist) == 1
+    assert hist[0].p == 5
+
+
+def test_hit_rate_tracker_seeds_b0():
+    t = HitRateTracker(default_rate=2.0)
+    assert abs(t.initial_b(10.0) - 5.0) < 1e-9
+    for _ in range(50):
+        t.observe(rows=100, b=10.0)  # 10 rows/unit
+    assert abs(t.initial_b(10.0) - 1.0) < 0.5  # converged toward k0/rate

@@ -1,0 +1,51 @@
+"""HLO parsing: type byte counts and collective-bytes extraction."""
+from repro.launch.hlo_analysis import collective_stats, roofline_terms, type_bytes
+
+
+def test_type_bytes():
+    assert type_bytes("f32[16,128]{1,0}") == 16 * 128 * 4
+    assert type_bytes("bf16[2,3,4]") == 48
+    assert type_bytes("s64[]") == 8
+    assert type_bytes("(f32[2,2], s32[4])") == 32
+    assert type_bytes("pred[7]") == 7
+    assert type_bytes("token[]") == 0
+
+
+HLO = """
+HloModule test
+ENTRY main {
+  %p0 = f32[64,64]{1,0} parameter(0)
+  %p1 = f32[64,64]{1,0} parameter(1)
+  %ar = f32[64,64]{1,0} all-reduce(%p0), replica_groups={}
+  %ag-start = (f32[64,64], f32[128,64]) all-gather-start(%p1), dimensions={0}
+  %ag-done = f32[128,64]{1,0} all-gather-done(%ag-start)
+  %rs = f32[32,64]{1,0} reduce-scatter(%ar), dimensions={0}
+  %cp = f32[64,64]{1,0} collective-permute(%p0), source_target_pairs={{0,1}}
+  %a2a = f32[64,64]{1,0} all-to-all(%p1), dimensions={0}
+  ROOT %out = f32[32,64]{1,0} add(%rs, %rs)
+}
+"""
+
+
+def test_collective_stats_counts_each_kind_once():
+    st = collective_stats(HLO)
+    assert st.count_by_op == {
+        "all-reduce": 1,
+        "all-gather": 1,
+        "reduce-scatter": 1,
+        "collective-permute": 1,
+        "all-to-all": 1,
+    }
+    sz = 64 * 64 * 4
+    assert st.bytes_by_op["all-reduce"] == sz
+    assert st.bytes_by_op["all-gather"] == sz  # operand, not result
+    assert st.bytes_by_op["collective-permute"] == sz
+    assert st.total_count == 5
+
+
+def test_roofline_terms_bottleneck():
+    t = roofline_terms(197e12, 100e9, 1e9)  # 1s compute, ~0.12s mem, 0.02s coll
+    assert abs(t["compute_s"] - 1.0) < 1e-9
+    assert t["bottleneck"] == "compute_s"
+    t = roofline_terms(1e9, 819e9, 0)
+    assert t["bottleneck"] == "memory_s"

@@ -1,0 +1,81 @@
+"""Key packing: roundtrips and the sorted-key range-scan property that the
+whole store depends on."""
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import keypack
+
+
+@given(
+    shard=st.integers(0, keypack.MAX_SHARDS - 1),
+    rts=st.integers(0, keypack.TS_MAX),
+    h=st.integers(0, keypack.HASH_MAX),
+)
+def test_event_key_roundtrip(shard, rts, h):
+    key = keypack.pack_event_key(shard, rts, h)
+    s, r, hh = keypack.unpack_event_key(key)
+    assert (int(s), int(r), int(hh)) == (shard, rts, h)
+    assert int(key) >= 0  # positive int64: sorts correctly
+
+
+@given(
+    field=st.integers(0, keypack.MAX_FIELDS - 1),
+    value=st.integers(0, keypack.MAX_VALUES - 1),
+    rts=st.integers(0, keypack.TS_MAX),
+)
+def test_index_key_roundtrip(field, value, rts):
+    f, v, r = keypack.unpack_index_key(keypack.pack_index_key(field, value, rts))
+    assert (int(f), int(v), int(r)) == (field, value, rts)
+
+
+@given(st.data())
+@settings(max_examples=50)
+def test_key_order_matches_tuple_order(data):
+    """Packed int64 order == lexicographic (shard, rev_ts, hash) order."""
+    tups = data.draw(
+        st.lists(
+            st.tuples(
+                st.integers(0, keypack.MAX_SHARDS - 1),
+                st.integers(0, keypack.TS_MAX),
+                st.integers(0, keypack.HASH_MAX),
+            ),
+            min_size=2,
+            max_size=50,
+        )
+    )
+    keys = [int(keypack.pack_event_key(*t)) for t in tups]
+    assert sorted(range(len(tups)), key=lambda i: keys[i]) == sorted(
+        range(len(tups)), key=lambda i: tups[i]
+    )
+
+
+@given(
+    shard=st.integers(0, keypack.MAX_SHARDS - 1),
+    t0=st.integers(0, keypack.TS_MAX - 1),
+    span=st.integers(0, 10_000),
+    ts=st.integers(0, keypack.TS_MAX),
+    h=st.integers(0, keypack.HASH_MAX),
+)
+def test_event_range_covers_exactly_its_timestamps(shard, t0, span, ts, h):
+    """A key falls in event_key_range(shard, t0, t1) iff t0 <= ts <= t1 —
+    the paper's 'restrict by timestamp with essentially zero cost'."""
+    t1 = min(t0 + span, keypack.TS_MAX)
+    lo, hi = keypack.event_key_range(shard, t0, t1)
+    key = keypack.pack_event_key(shard, keypack.rev_ts(ts), h)
+    assert (int(lo) <= int(key) < int(hi)) == (t0 <= ts <= t1)
+
+
+def test_short_hash_spread():
+    rng = np.random.default_rng(0)
+    cols = rng.integers(0, 100, (20_000, 3))
+    h = keypack.short_hash(*(cols[:, i] for i in range(3)), np.arange(20_000))
+    # Should occupy most of the 16-bit space.
+    assert len(np.unique(h)) > 15_000
+
+
+def test_shard_assignment_uniform():
+    rng = np.random.default_rng(1)
+    s = keypack.assign_shards(100_000, 8, rng)
+    counts = np.bincount(s, minlength=8)
+    assert counts.min() > 100_000 / 8 * 0.9

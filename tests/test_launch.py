@@ -1,0 +1,54 @@
+"""Launch-layer unit tests: cell planning (the 40-cell assignment
+accounting), abstract input specs, and roofline report assembly."""
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import SHAPES
+from repro.launch.dryrun import plan_cells
+from repro.launch.roofline import roofline_fraction, table
+from repro.launch.steps import batch_shapes, cache_shapes
+from repro.models import get_config, list_archs
+
+
+def test_plan_cells_accounting():
+    """10 archs x 4 shapes = 40 assigned cells; long_500k runs only for the
+    2 sub-quadratic archs (8 documented skips) -> 32 pairs x 2 meshes."""
+    cells = plan_cells()
+    assert len(cells) == 64
+    pairs = {(a, s) for a, s, _ in cells}
+    assert len(pairs) == 32
+    long_cells = {a for a, s, _ in cells if s == "long_500k"}
+    assert long_cells == {"mamba2-780m", "zamba2-2.7b"}
+    assert {m for _, _, m in cells} == {"single_pod", "multi_pod"}
+
+
+def test_batch_shapes_per_family():
+    b = batch_shapes(get_config("gemma2-9b"), SHAPES["train_4k"])
+    assert b["inputs"].shape == (256, 4096) and b["targets"].shape == (256, 4096)
+    b = batch_shapes(get_config("musicgen-medium"), SHAPES["prefill_32k"])
+    assert "inputs" not in b and b["embeds"].shape == (32, 32768, 1536)
+    b = batch_shapes(get_config("llama-3.2-vision-11b"), SHAPES["decode_32k"])
+    assert b["inputs"].shape == (128, 1)
+    assert b["vision_states"].shape == (128, 1601, 4096)
+
+
+def test_cache_shapes_windowed_and_ssm():
+    c = cache_shapes(get_config("gemma2-9b"), SHAPES["decode_32k"])
+    # pattern (local, global): local ring cache is window-sized.
+    assert c[0]["k"].shape == (21, 128, 4096, 8, 256)
+    assert c[1]["k"].shape == (21, 128, 32768, 8, 256)
+    c = cache_shapes(get_config("mamba2-780m"), SHAPES["long_500k"])
+    assert c[0]["state"].shape == (48, 1, 48, 128, 64)  # O(1) in seq_len
+    c = cache_shapes(get_config("zamba2-2.7b"), SHAPES["long_500k"])
+    assert c[5]["sa"]["k"].shape == (9, 1, 524288, 32, 80)
+
+
+def test_roofline_report_reads_artifacts():
+    from repro.launch.roofline import load
+
+    results = load("experiments/dryrun")
+    assert len(results) >= 60
+    lines = table(results)
+    assert any("gemma2-9b" in l for l in lines)
+    rec = next(iter(results.values()))
+    assert roofline_fraction(rec) is None or roofline_fraction(rec) >= 0

@@ -1,0 +1,58 @@
+"""Serving: adaptive request batcher law + the continuous-batching engine."""
+import jax
+import numpy as np
+
+from repro.models import get_config, init_params
+from repro.serving import AdaptiveRequestBatcher, ServeEngine
+
+
+def test_batcher_grows_when_fast():
+    b = AdaptiveRequestBatcher(k0=1, c=1.5, t_min=0.05, t_max=0.5, max_batch=64)
+    for _ in range(10):
+        n = b.admit(waiting=100, free_slots=64)
+        b.update(runtime=0.001 * max(n, 1), served=n)  # very fast rounds
+    assert b.k > 8  # grew geometrically
+
+
+def test_batcher_shrinks_when_hot():
+    b = AdaptiveRequestBatcher(k0=32, c=1.5, t_min=0.05, t_max=0.5, max_batch=64)
+    for _ in range(6):
+        n = b.admit(waiting=100, free_slots=64)
+        b.update(runtime=0.2 * max(n, 1), served=n)  # 0.2 s per request!
+    # Steady state: k ~ t_max * rate = 0.5 / 0.2 = 2.5 requests.
+    assert b.k < 5
+
+
+def test_batcher_respects_slots_and_queue():
+    b = AdaptiveRequestBatcher(k0=50, max_batch=8)
+    assert b.admit(waiting=3, free_slots=8) == 3
+    assert b.admit(waiting=100, free_slots=2) == 2
+    assert b.admit(waiting=0, free_slots=8) == 0
+
+
+def test_engine_serves_all_requests():
+    cfg = get_config("llcysa-analytics-100m", smoke=True)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(cfg, params, max_batch=4, cache_len=48)
+    rng = np.random.default_rng(0)
+    n_req = 7
+    for _ in range(n_req):
+        eng.submit(rng.integers(0, cfg.vocab_size, int(rng.integers(3, 12))), max_new_tokens=5)
+    done = eng.run()
+    assert len(done) == n_req
+    assert all(len(r.output) == 5 for r in done)
+    assert all(r.ttft is not None and r.finished_at is not None for r in done)
+
+
+def test_engine_interleaves_requests():
+    """Continuous batching: later requests finish without waiting for the
+    whole first wave (slot reuse)."""
+    cfg = get_config("llcysa-analytics-100m", smoke=True)
+    params = init_params(jax.random.PRNGKey(1), cfg)
+    eng = ServeEngine(cfg, params, max_batch=2, cache_len=64)
+    rng = np.random.default_rng(1)
+    for i in range(6):
+        eng.submit(rng.integers(0, cfg.vocab_size, 4), max_new_tokens=3 + i)
+    done = eng.run()
+    assert len(done) == 6
+    assert max(len(r.output) for r in done) == 8
