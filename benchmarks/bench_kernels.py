@@ -11,14 +11,15 @@ import numpy as np
 from repro.core import And, Eq, EventStore, Not, Or, web_proxy_schema
 from repro.core.filter import compile_tree
 from repro.kernels.aggregate_combine import combine_sorted_counts
+from repro.kernels.combine_scan import combine_scan
 from repro.kernels.filter_scan import filter_scan
 from repro.kernels.merge_intersect import intersect_sorted
 
 
-def run() -> Dict:
+def run(n: int = 500_000) -> Dict:
+    """n: event count — pass something small (e.g. 50_000) for CI smoke."""
     rng = np.random.default_rng(5)
     store = EventStore(web_proxy_schema(), n_shards=1)
-    n = 500_000
     vals = {
         "domain": rng.choice(["a.com", "b.com", "c.com", "d.com"], size=n).tolist(),
         "method": rng.choice(["GET", "POST"], size=n).tolist(),
@@ -35,9 +36,12 @@ def run() -> Dict:
         mask = filter_scan(cols, prog)
     dt_f = (time.perf_counter() - t0) / reps
 
-    a = np.unique(rng.integers(0, 1 << 52, 400_000).astype(np.int64))
+    a = np.unique(rng.integers(0, 1 << 52, max(n * 4 // 5, 1024)).astype(np.int64))
     b = np.unique(
-        np.concatenate([rng.choice(a, 50_000, replace=False), rng.integers(0, 1 << 52, 200_000).astype(np.int64)])
+        np.concatenate([
+            rng.choice(a, max(n // 10, 16), replace=False),
+            rng.integers(0, 1 << 52, max(n * 2 // 5, 512)).astype(np.int64),
+        ])
     )
     intersect_sorted(a[:1024], b[:1024])
     t0 = time.perf_counter()
@@ -45,13 +49,31 @@ def run() -> Dict:
         inter = intersect_sorted(a, b)
     dt_i = (time.perf_counter() - t0) / reps
 
-    keys = np.sort(rng.integers(0, 50_000, 1_000_000).astype(np.int64))
-    cnt = rng.integers(1, 4, 1_000_000).astype(np.int32)
+    keys = np.sort(rng.integers(0, max(n // 20, 8), 2 * n).astype(np.int64))
+    cnt = rng.integers(1, 4, 2 * n).astype(np.int32)
     combine_sorted_counts(keys[:1024], cnt[:1024])
     t0 = time.perf_counter()
     for _ in range(reps):
         uk, uc = combine_sorted_counts(keys, cnt)
     dt_c = (time.perf_counter() - t0) / reps
+
+    # Fused filter+combine (the iterator stack's terminal dispatch) vs the
+    # same work as two passes — the reason combine_scan exists.
+    gfid = store.schema.field_id("method")
+    gids = cols[:, gfid].astype(np.int64)
+    order = np.argsort(gids, kind="stable")
+    gids_s, cols_s = gids[order], cols[order]
+    combine_scan(gids_s[:1024], None, cols_s[:1024], prog)  # warm jit
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        combine_scan(gids_s, None, cols_s, prog, op="count")
+    dt_fc = (time.perf_counter() - t0) / reps
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        m = filter_scan(cols_s, prog)
+        k = gids_s[m]
+        combine_sorted_counts(k, np.ones(len(k), np.int32))
+    dt_2p = (time.perf_counter() - t0) / reps
 
     return {
         "filter_rows_per_s": len(cols) / dt_f,
@@ -60,6 +82,9 @@ def run() -> Dict:
         "intersect_us": dt_i * 1e6,
         "combine_rows_per_s": len(keys) / dt_c,
         "combine_us": dt_c * 1e6,
+        "combine_scan_rows_per_s": len(cols) / dt_fc,
+        "combine_scan_us": dt_fc * 1e6,
+        "combine_scan_two_pass_us": dt_2p * 1e6,
     }
 
 
@@ -68,4 +93,6 @@ def emit_csv(res: Dict) -> List[str]:
         f"kernel_filter_scan,{res['filter_us']:.0f},rows_per_s={res['filter_rows_per_s']:.3g}",
         f"kernel_merge_intersect,{res['intersect_us']:.0f},keys_per_s={res['intersect_keys_per_s']:.3g}",
         f"kernel_aggregate_combine,{res['combine_us']:.0f},rows_per_s={res['combine_rows_per_s']:.3g}",
+        f"kernel_combine_scan_fused,{res['combine_scan_us']:.0f},rows_per_s={res['combine_scan_rows_per_s']:.3g}",
+        f"kernel_combine_scan_two_pass,{res['combine_scan_two_pass_us']:.0f},baseline=separate_filter_then_combine",
     ]

@@ -1,8 +1,9 @@
 """Quickstart: the paper's pipeline in 60 seconds.
 
-Builds a sharded event store, ingests synthetic web-proxy traffic, and runs
+Builds a sharded event store, ingests synthetic web-proxy traffic, runs
 the same query four ways (Scan / Batched Scan / Index / Batched Index —
-paper §IV-B), printing time-to-first-result and totals.
+paper §IV-B), then answers an aggregation with the server-side iterator
+stack (fused filter+combine kernel) — per-group partials instead of rows.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -13,7 +14,15 @@ sys.path.insert(0, "src")
 
 import numpy as np
 
-from repro.core import And, Eq, EventStore, QueryProcessor, QueryStats, web_proxy_schema
+from repro.core import (
+    AggregateSpec,
+    And,
+    Eq,
+    EventStore,
+    QueryProcessor,
+    QueryStats,
+    web_proxy_schema,
+)
 from repro.core.ingest import BatchWriter
 from repro.pipeline.sources import SyntheticWebProxySource, parse_web_proxy_lines
 
@@ -55,6 +64,19 @@ def main():
             f"  {scheme:14s} first={1e3*(first or 0):8.2f} ms  total={1e3*total:8.2f} ms  "
             f"rows={rows}  batches={stats.batches}  plan={plan}"
         )
+
+    print("\naggregation: count matching events per method per hour (iterator stack)")
+    spec = AggregateSpec(group_by=("method",), op="count", time_bucket_s=3600)
+    t0 = time.perf_counter()
+    res = qp.aggregate(spec, 0, 4 * 3600, query)
+    total = time.perf_counter() - t0
+    shipped = res.gids.nbytes + res.values.nbytes + res.counts.nbytes
+    print(
+        f"  combine_scan   total={1e3*total:8.2f} ms  groups={res.n_groups}  "
+        f"rows_combined={res.total_matched()}  client_bytes~{shipped}"
+    )
+    for row in sorted(res.rows(store), key=lambda r: r["bucket_ts"])[:4]:
+        print(f"    {row['method']:5s} hour={row['bucket_ts']//3600}  count={row['value']}")
 
 
 if __name__ == "__main__":

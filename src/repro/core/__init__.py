@@ -2,9 +2,22 @@
 sharded key-value event store (3 tables/source), parallel ingest with
 backpressure, adaptive query batching (Algs 1-2), and the density-heuristic
 query planner. See DESIGN.md for the TPU adaptation table."""
-from . import batching, filter, keypack, planner, query, scan, schema, store, tables  # noqa: F401
+from . import batching, filter, iterators, keypack, planner, query, scan, schema, store, tables  # noqa: F401
 from .batching import AdaptiveBatcher, run_batched_query  # noqa: F401
 from .filter import And, Cmp, Eq, In, Match, Node, Not, Or, TrueNode  # noqa: F401
+from .iterators import (  # noqa: F401
+    AggregateBlock,
+    AggregateResult,
+    AggregateSpec,
+    CombinerIterator,
+    FilterIterator,
+    IteratorStack,
+    ProjectingIterator,
+    ScanIterator,
+    VersioningIterator,
+    merge_aggregate_blocks,
+    resolve_grouping,
+)
 from .planner import QueryPlan, plan_query  # noqa: F401
 from .query import QueryProcessor, QueryStats  # noqa: F401
 from .schema import EventSchema, FieldSpec, web_proxy_schema  # noqa: F401

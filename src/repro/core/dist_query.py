@@ -13,6 +13,12 @@ and a query executes as ONE jitted shard_map program:
     top-k newest             local top-k, then a gathered cross-tablet
                              merge on the host (BatchScanner semantics:
                              unordered across tablets)
+    iterator-stack combine   the server-side CombinerIterator lowered into
+                             the shard_map program: per-tablet fused
+                             filter + dense segment aggregation, merged
+                             across tablets with psum/pmin/pmax (the
+                             group-id space is dense by construction —
+                             see core/iterators.py ResolvedGrouping)
 
 The adaptive batcher (Algs 1-2) drives this exactly like the host path:
 each batch is one device-program invocation over a time sub-range — the
@@ -33,6 +39,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from . import keypack
 from .filter import FilterProgram, compile_tree
+from .iterators import AggregateResult, AggregateSpec, ResolvedGrouping, resolve_grouping
 from .store import EventStore
 
 INVALID_TS = jnp.int32(-1)
@@ -126,9 +133,9 @@ def from_event_store(store: EventStore, mesh: Mesh, capacity: Optional[int] = No
 def _program_eval(cols, opcodes, arg0, arg1, codesets):
     """Postfix predicate program over (R, F) codes — identical semantics
     to kernels/filter_scan (jnp form, shard-local)."""
-    from ..kernels.filter_scan.ref import filter_scan_ref
+    from ..kernels.program_eval import program_eval_rows
 
-    return filter_scan_ref(cols, opcodes, arg0, arg1, codesets)
+    return program_eval_rows(cols, opcodes, arg0, arg1, codesets)
 
 
 def build_scan_step(mesh: Mesh, n_fields: int, prog_len: int, set_shape: Tuple[int, int], top_k: int = 128):
@@ -174,6 +181,85 @@ def build_scan_step(mesh: Mesh, n_fields: int, prog_len: int, set_shape: Tuple[i
     return jax.jit(smapped)
 
 
+def build_aggregate_step(
+    mesh: Mesh,
+    fids: Tuple[int, ...],
+    strides: Tuple[int, ...],
+    n_groups: int,
+    n_buckets: int,
+    bucket_s: Optional[int],
+    op: str,
+    value_fid: Optional[int],
+):
+    """Jitted distributed scan-time aggregation: the iterator stack's
+    terminal CombinerIterator lowered into the mesh program. Each tablet
+    evaluates the fused filter + dense segment aggregation locally; the
+    dense group-id space (mixed-radix codes x time buckets, see
+    ResolvedGrouping) makes the cross-tablet merge a single psum (sum /
+    count) or pmin/pmax — no gather of raw rows ever happens."""
+    axes = tuple(mesh.axis_names)
+    specs = tablet_specs(mesh)
+    int32_max = jnp.iinfo(jnp.int32).max
+    int32_min = jnp.iinfo(jnp.int32).min
+    identity = {"count": 0, "sum": 0, "min": int32_max, "max": int32_min}[op]
+
+    def tablet_agg(rev_ts, cols, counts, opcodes, arg0, arg1, codesets,
+                   value_table, rts_lo, rts_hi, bucket_lo):
+        rev_l = rev_ts[0]
+        cols_l = cols[0]
+        n = counts[0]
+        r = rev_l.shape[0]
+        a = jnp.searchsorted(rev_l, rts_lo, side="left")
+        b = jnp.searchsorted(rev_l, rts_hi, side="left")
+        idx = jnp.arange(r, dtype=jnp.int32)
+        in_range = (idx >= a) & (idx < b) & (idx < n)
+        hit = _program_eval(cols_l, opcodes, arg0, arg1, codesets) & in_range
+        gid = jnp.zeros((r,), jnp.int32)
+        for fid, stride in zip(fids, strides):
+            gid = gid + cols_l[:, fid] * jnp.int32(stride)
+        if bucket_s is not None:
+            ts_l = jnp.int32(keypack.TS_MAX) - rev_l
+            gid = gid + ts_l // jnp.int32(bucket_s) - bucket_lo
+        # Padded/out-of-range rows can carry junk codes: clamp, their
+        # contribution is masked to the identity anyway.
+        gid = jnp.clip(gid, 0, n_groups - 1)
+        if value_fid is not None:
+            codes = jnp.clip(cols_l[:, value_fid], 0, value_table.shape[0] - 1)
+            val = value_table[codes]
+        else:
+            val = jnp.ones((r,), jnp.int32)
+        contrib = jnp.where(hit, val, jnp.int32(identity))
+        if op in ("count", "sum"):
+            aggs = jax.ops.segment_sum(contrib, gid, num_segments=n_groups)
+        elif op == "min":
+            aggs = jax.ops.segment_min(contrib, gid, num_segments=n_groups)
+        else:
+            aggs = jax.ops.segment_max(contrib, gid, num_segments=n_groups)
+        cnts = jax.ops.segment_sum(hit.astype(jnp.int32), gid, num_segments=n_groups)
+        if op in ("count", "sum"):
+            aggs = jax.lax.psum(aggs, axes)
+        elif op == "min":
+            aggs = jax.lax.pmin(aggs, axes)
+        else:
+            aggs = jax.lax.pmax(aggs, axes)
+        cnts = jax.lax.psum(cnts, axes)
+        return aggs, cnts
+
+    smapped = shard_map(
+        tablet_agg,
+        mesh=mesh,
+        in_specs=(
+            specs["rev_ts"], specs["cols"], specs["counts"],
+            P(None), P(None), P(None), P(None, None),  # program: replicated
+            P(None),  # value table: replicated
+            P(), P(), P(),
+        ),
+        out_specs=(P(None), P(None)),
+        check_rep=False,
+    )
+    return jax.jit(smapped)
+
+
 class DistQueryProcessor:
     """Adaptive-batched queries over the mesh — Algs 1-2 driving the
     distributed scan step."""
@@ -210,6 +296,54 @@ class DistQueryProcessor:
         ts = np.asarray(top_ts)
         valid = ts != int(INVALID_TS)
         return int(total), keypack.unrev_ts(ts[valid]), np.asarray(top_cols)[valid]
+
+    def _agg_step(self, prog: FilterProgram, grouping: ResolvedGrouping):
+        from ..kernels.filter_scan.ops import pad_program
+
+        opc, a0, a1, cs = pad_program(prog)
+        key = (
+            "agg", len(opc), cs.shape, grouping.fids, grouping.strides,
+            grouping.size, grouping.n_buckets, grouping.spec.time_bucket_s,
+            grouping.spec.op, grouping.value_fid,
+        )
+        if key not in self._step_cache:
+            self._step_cache[key] = build_aggregate_step(
+                self.dist.mesh,
+                grouping.fids,
+                grouping.strides,
+                grouping.size,
+                grouping.n_buckets,
+                grouping.spec.time_bucket_s,
+                grouping.spec.op,
+                grouping.value_fid,
+            )
+        return self._step_cache[key], (opc, a0, a1, cs)
+
+    def aggregate_range(
+        self, spec: AggregateSpec, tree, t0: int, t1: int
+    ) -> AggregateResult:
+        """Scan-time aggregation across all tablets in ONE device program —
+        the distributed lowering of QueryProcessor.aggregate(). Returns the
+        already-merged (psum'd) per-group result; only groups with at least
+        one matching row are materialized host-side."""
+        grouping = resolve_grouping(self.store, spec, t0, t1)
+        prog = compile_tree(self.store, tree)
+        step, (opc, a0, a1, cs) = self._agg_step(prog, grouping)
+        vt = grouping.value_table
+        if vt is None:
+            vt = np.ones(1, np.int32)  # unused placeholder (count op)
+        aggs, cnts = step(
+            self.dist.rev_ts, self.dist.cols, self.dist.counts,
+            jnp.asarray(opc), jnp.asarray(a0), jnp.asarray(a1), jnp.asarray(cs),
+            jnp.asarray(vt),
+            jnp.int32(keypack.rev_ts(t1)), jnp.int32(keypack.rev_ts(t0) + 1),
+            jnp.int32(grouping.bucket_lo),
+        )
+        aggs = np.asarray(aggs)
+        cnts = np.asarray(cnts)
+        live = cnts > 0
+        gids = np.flatnonzero(live).astype(np.int64)
+        return AggregateResult(grouping, gids, aggs[live], cnts[live])
 
     def execute_batched(self, tree, t_start: int, t_stop: int, stats=None):
         """Algorithm 2 over the distributed scan."""

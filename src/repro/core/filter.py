@@ -29,15 +29,19 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
-OP_NOP = 0
-OP_PUSH_EQ = 1
-OP_PUSH_IN = 2
-OP_PUSH_TRUE = 3
-OP_AND = 4
-OP_OR = 5
-OP_NOT = 6
-
-MAX_STACK = 8
+# Canonical opcode values live with the shared device interpreter
+# (kernels/program_eval.py) so the kernels package never has to import
+# core at module scope; re-exported here for the host-side compiler API.
+from ..kernels.program_eval import (  # noqa: F401
+    MAX_STACK,
+    OP_AND,
+    OP_NOP,
+    OP_NOT,
+    OP_OR,
+    OP_PUSH_EQ,
+    OP_PUSH_IN,
+    OP_PUSH_TRUE,
+)
 
 
 class Node:

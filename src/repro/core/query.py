@@ -13,6 +13,14 @@ The four experimental schemes of §IV-B map to flags:
   Index         use_index=True,  batched=False
   Batched Index use_index=True,  batched=True   (the paper's winner)
 
+A fifth, beyond the paper: Combine Scan (`aggregate=AggregateSpec(...)`) —
+the server-side iterator stack's terminal combiner. Instead of shipping
+matching rows, each batch runs the fused filter+combine kernel
+(kernels/combine_scan) and yields per-group partial aggregates
+(AggregateBlocks); the client merge is over group cardinality, not row
+cardinality. "Count events per src_ip per hour" runs at scan speed and
+returns kilobytes.
+
 Results stream to the caller as RowBlocks per (batch, shard) — matching the
 BatchScanner's unordered-across-shards / newest-first-within-shard
 semantics. Responsiveness metrics (time to 1st/100th/1000th row) are
@@ -28,6 +36,13 @@ import numpy as np
 
 from .batching import DEFAULT_K0, AdaptiveBatcher, HitRateTracker
 from .filter import Node, TrueNode, compile_tree
+from .iterators import (
+    AggregateResult,
+    AggregateSpec,
+    CombinerIterator,
+    merge_aggregate_blocks,
+    resolve_grouping,
+)
 from .planner import QueryPlan, plan_query
 from .scan import RowBlock, fetch_rows_by_keys, index_scan, scan_events
 from .store import EventStore
@@ -60,10 +75,12 @@ class QueryProcessor:
         t1: int,
         shards: Optional[Sequence[int]] = None,
         prog=None,
+        combiner: Optional[CombinerIterator] = None,
     ) -> Iterator[RowBlock]:
         """Run one (possibly partial) time range of a planned query.
         `prog`: pre-compiled residual filter program (compiled once per
-        query by execute(), not per batch)."""
+        query by execute(), not per batch). `combiner`: terminal iterator
+        of the server-side stack — rows become per-group aggregates."""
         store = self.store
         residual_trivial = isinstance(plan.residual, TrueNode) or plan.residual is None
         if prog is None and not residual_trivial:
@@ -74,6 +91,15 @@ class QueryProcessor:
             # dispatch per shard per batch dominated time-to-first-result).
             blocks = list(scan_events(store, t0, t1, shards))
             if not blocks:
+                return
+            if combiner is not None:
+                # Fused path: residual filter + segment-combine in one
+                # kernel pass — the separate filter_scan dispatch vanishes.
+                keys_all = np.concatenate([b.keys for b in blocks])
+                cols_all = np.concatenate([b.cols for b in blocks])
+                agg = combiner.combine_rows(keys_all, cols_all)
+                if agg.n:
+                    yield agg
                 return
             if residual_trivial:
                 yield from blocks
@@ -90,6 +116,9 @@ class QueryProcessor:
 
         # Index mode: per shard, scan the index table for every condition,
         # combine key sets, then fetch event rows + apply the residual.
+        # With a combiner, fetched rows accumulate and the residual is
+        # fused into the terminal combine dispatch instead.
+        fetched: List[RowBlock] = []
         shard_list = list(shards) if shards is not None else list(range(store.n_shards))
         per_cond: List[List[np.ndarray]] = []
         for cond in plan.index_conds:
@@ -118,12 +147,21 @@ class QueryProcessor:
             blk = fetch_rows_by_keys(store, shard, keys)
             if blk.n == 0:
                 continue
+            if combiner is not None:
+                fetched.append(blk)
+                continue
             if prog is not None:
                 mask = filter_scan(blk.cols, prog, backend=self.kernel_backend)
                 if not mask.any():
                     continue
                 blk = RowBlock(blk.shard, blk.keys[mask], blk.cols[mask])
             yield blk
+        if combiner is not None and fetched:
+            keys_all = np.concatenate([b.keys for b in fetched])
+            cols_all = np.concatenate([b.cols for b in fetched])
+            agg = combiner.combine_rows(keys_all, cols_all)
+            if agg.n:
+                yield agg
 
     # ------------------------------------------------------------- public
     def execute(
@@ -134,19 +172,34 @@ class QueryProcessor:
         use_index: bool = True,
         batched: bool = True,
         stats: Optional[QueryStats] = None,
+        aggregate: Optional[AggregateSpec] = None,
+        _grouping=None,
     ) -> Iterator[RowBlock]:
         """Stream result RowBlocks for a query. See module docstring for the
-        scheme flags."""
+        scheme flags. With `aggregate=AggregateSpec(...)` the server-side
+        iterator stack terminates in a fused combiner and the stream yields
+        AggregateBlocks (per-group partials) instead of rows. `_grouping`:
+        an already-resolved grouping for `aggregate` (aggregate() passes its
+        own so value tables are not rebuilt)."""
         plan = plan_query(self.store, tree, t_start, t_stop, w=self.w, use_index=use_index)
         if stats is not None:
             stats.plan = plan
         residual_trivial = isinstance(plan.residual, TrueNode) or plan.residual is None
         prog = None if residual_trivial else compile_tree(self.store, plan.residual)
+        combiner = None
+        if aggregate is not None:
+            grouping = _grouping or resolve_grouping(self.store, aggregate, t_start, t_stop)
+            combiner = CombinerIterator(grouping, prog=prog, backend=self.kernel_backend)
+
+        def _rows(blk) -> int:
+            # Matched-row count drives the adaptive batcher: for aggregate
+            # blocks that is the rows combined, not the groups shipped.
+            return getattr(blk, "matched", blk.n)
 
         if not batched:
             n = 0
-            for blk in self._execute_range(plan, t_start, t_stop, prog=prog):
-                n += blk.n
+            for blk in self._execute_range(plan, t_start, t_stop, prog=prog, combiner=combiner):
+                n += _rows(blk)
                 yield blk
             if stats is not None:
                 stats.batches = 1
@@ -161,8 +214,8 @@ class QueryProcessor:
             lo, hi = batcher.next_range()
             t_begin = time.perf_counter()
             rows = 0
-            for blk in self._execute_range(plan, int(lo), int(hi), prog=prog):
-                rows += blk.n
+            for blk in self._execute_range(plan, int(lo), int(hi), prog=prog, combiner=combiner):
+                rows += _rows(blk)
                 yield blk
             runtime = time.perf_counter() - t_begin
             batcher.update(runtime, rows)
@@ -172,14 +225,41 @@ class QueryProcessor:
                 stats.rows += rows
                 stats.batch_log.append((lo, hi, runtime, rows))
 
+    def aggregate(
+        self,
+        spec: AggregateSpec,
+        t_start: int,
+        t_stop: int,
+        tree: Optional[Node] = None,
+        use_index: bool = False,
+        batched: bool = True,
+        stats: Optional[QueryStats] = None,
+    ) -> AggregateResult:
+        """Run a scan-time aggregation to completion and merge the partial
+        AggregateBlocks client-side. The heavy reduction already happened
+        on the server; this merge is over group cardinality only."""
+        grouping = resolve_grouping(self.store, spec, t_start, t_stop)
+        blocks = list(
+            self.execute(
+                t_start, t_stop, tree,
+                use_index=use_index, batched=batched, stats=stats, aggregate=spec,
+                _grouping=grouping,
+            )
+        )
+        return merge_aggregate_blocks(grouping, blocks)
+
     def run_scheme(
         self, scheme: str, t_start: int, t_stop: int, tree: Optional[Node] = None, **kw
     ) -> Iterator[RowBlock]:
-        """The paper's four experimental schemes by name."""
+        """The paper's four experimental schemes by name, plus the iterator
+        stack's 'combine_scan' (requires aggregate=AggregateSpec(...))."""
         flags = {
             "scan": dict(use_index=False, batched=False),
             "batched_scan": dict(use_index=False, batched=True),
             "index": dict(use_index=True, batched=False),
             "batched_index": dict(use_index=True, batched=True),
+            "combine_scan": dict(use_index=False, batched=True),
         }[scheme]
+        if scheme == "combine_scan" and kw.get("aggregate") is None:
+            raise ValueError("combine_scan scheme requires aggregate=AggregateSpec(...)")
         return self.execute(t_start, t_stop, tree, **flags, **kw)

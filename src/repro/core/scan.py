@@ -26,11 +26,18 @@ class RowBlock:
 
     shard: int
     keys: np.ndarray  # int64 [n] packed event keys
-    cols: np.ndarray  # int32 [n, n_fields] dictionary codes
+    cols: np.ndarray  # int32 [n, n_cols] dictionary codes
+    field_ids: Optional[np.ndarray] = None  # set when projected: cols -> schema ids
 
     @property
     def n(self) -> int:
         return int(self.keys.shape[0])
+
+    @property
+    def nbytes(self) -> int:
+        """Bytes this block costs to ship to the client (the quantity the
+        iterator stack exists to shrink)."""
+        return self.keys.nbytes + self.cols.nbytes
 
     def ts(self) -> np.ndarray:
         _, rts, _ = keypack.unpack_event_key(self.keys)
@@ -42,15 +49,25 @@ def scan_events(
     t_start: int,
     t_stop: int,
     shards: Optional[Sequence[int]] = None,
+    iterators=None,
 ) -> Iterator[RowBlock]:
     """BatchScanner over the event table restricted to a time range
     (timestamps in [t_start, t_stop], inclusive — the paper's queries are
-    always time-restricted)."""
+    always time-restricted).
+
+    `iterators`: optional IteratorStack (core/iterators.py) applied to each
+    block before it leaves the scanner — the server side of the scan. With
+    a terminal CombinerIterator the scan yields AggregateBlocks."""
     for s in shards if shards is not None else range(store.n_shards):
         lo, hi = keypack.event_key_range(s, t_start, t_stop)
         keys, cols = store.event_tablets[s].scan_range(int(lo), int(hi))
         if keys.size:
-            yield RowBlock(s, keys, cols)
+            blk = RowBlock(s, keys, cols)
+            if iterators is not None:
+                blk = iterators.apply_block(blk)
+                if blk is None:
+                    continue
+            yield blk
 
 
 def index_scan(

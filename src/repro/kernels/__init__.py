@@ -7,6 +7,8 @@ paper implements as server-side Accumulo iterators/combiners:
                      -> blockwise binary-search membership over sorted keys
   aggregate_combine  combiner framework (count aggregation)
                      -> block-segmented sum over sorted (key, count) runs
+  combine_scan       fused filter + combiner (scan-time aggregation for the
+                     iterator stack) -> one VMEM pass per tablet tile
 
 Each subpackage: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
 public wrapper; on CPU defaults to the vectorized jnp reference since
@@ -17,4 +19,4 @@ All kernels operate on int32 lanes only (dictionary codes / split key
 lanes) — the packed int64 keys never enter a kernel, by design (TPU-native
 layout; see DESIGN.md hardware-adaptation table).
 """
-from . import aggregate_combine, filter_scan, merge_intersect  # noqa: F401
+from . import aggregate_combine, combine_scan, filter_scan, merge_intersect  # noqa: F401

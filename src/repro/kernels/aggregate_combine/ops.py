@@ -11,15 +11,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..common import split_key_lanes as _split
 from .aggregate_combine import BLOCK, combine_blocks_pallas
 from .ref import combine_sorted_ref
-
-
-def _split(keys: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
-    keys = np.asarray(keys, dtype=np.int64)
-    hi = (keys >> 32).astype(np.int32)
-    lo = (keys & 0xFFFFFFFF).astype(np.uint32).view(np.int32)
-    return hi, lo
 
 
 def combine_sorted_counts(

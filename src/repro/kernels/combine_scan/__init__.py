@@ -1,0 +1,4 @@
+"""Fused server-side filter + combiner kernel (scan-time aggregation)."""
+from .combine_scan import BLOCK, combine_scan_pallas  # noqa: F401
+from .ops import OPS, combine_scan, trivial_program  # noqa: F401
+from .ref import combine_scan_ref  # noqa: F401

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the fused combine_scan kernel: whole-array filter +
+segmented aggregation over a run sorted by group key. Identical semantics,
+no tiling (so no stitch epilogue needed)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..program_eval import program_eval_rows
+from .combine_scan import _IDENTITY, _segment_agg
+
+
+@functools.partial(jax.jit, static_argnames=("op_kind",))
+def combine_scan_ref(hi, lo, val, cols, opcodes, arg0, arg1, codesets, *, op_kind: int):
+    """Returns (heads bool (n,), per-group masked aggregate at head
+    positions, per-group match count at head positions)."""
+    n = hi.shape[0]
+    mask = program_eval_rows(cols, opcodes, arg0, arg1, codesets)
+    prev_hi = jnp.concatenate([jnp.full((1,), -1, hi.dtype), hi[:-1]])
+    prev_lo = jnp.concatenate([jnp.full((1,), -1, lo.dtype), lo[:-1]])
+    heads = (hi != prev_hi) | (lo != prev_lo)
+    heads = heads.at[0].set(True)
+    seg_id = jnp.cumsum(heads.astype(jnp.int32)) - 1
+    identity = jnp.int32(_IDENTITY[op_kind])
+    contrib = jnp.where(mask, val.astype(jnp.int32), identity)
+    seg_agg = _segment_agg(contrib, seg_id, n, op_kind)
+    seg_cnt = jax.ops.segment_sum(mask.astype(jnp.int32), seg_id, num_segments=n)
+    aggs = jnp.where(heads, jnp.take(seg_agg, seg_id, axis=0), identity)
+    cnts = jnp.where(heads, jnp.take(seg_cnt, seg_id, axis=0), 0)
+    return heads, aggs, cnts

@@ -1,0 +1,18 @@
+"""Helpers shared across kernel subpackages (core-import-free: the
+kernels package must never import repro.core at module scope — core's
+__init__ imports the query/iterator modules that need the kernels)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+
+def split_key_lanes(keys: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """int64 packed keys -> (hi, lo) int32 lanes. TPU-native carry format:
+    kernels only ever see 32-bit lanes; the lo lane's bit pattern is
+    preserved via a uint32 view (negative int32 == high-bit-set lane)."""
+    keys = np.asarray(keys, dtype=np.int64)
+    hi = (keys >> 32).astype(np.int32)
+    lo = (keys & 0xFFFFFFFF).astype(np.uint32).view(np.int32)
+    return hi, lo

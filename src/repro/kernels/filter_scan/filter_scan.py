@@ -26,7 +26,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
 
-from ...core.filter import (
+from ..program_eval import (
     MAX_STACK,
     OP_AND,
     OP_NOP,

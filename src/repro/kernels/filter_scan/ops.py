@@ -8,13 +8,16 @@ kernel test suite) and the kernel is exercised with interpret=True in
 tests."""
 from __future__ import annotations
 
-from typing import Tuple
+from typing import TYPE_CHECKING, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ...core.filter import OP_NOP, FilterProgram
+from ..program_eval import OP_NOP
+
+if TYPE_CHECKING:  # runtime import would cycle: core/__init__ needs kernels
+    from ...core.filter import FilterProgram
 from .filter_scan import BLOCK_ROWS, LANE, filter_scan_pallas
 from .ref import filter_scan_ref
 

@@ -1,59 +1,15 @@
 """Pure-jnp oracle for the filter_scan kernel: identical postfix-program
-semantics, straight-line vectorized evaluation (no Pallas)."""
+semantics, straight-line vectorized evaluation (no Pallas). The program
+interpreter itself lives in kernels/program_eval.py, shared with the fused
+combine_scan kernel and the distributed scan."""
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
-from jax import lax
 
-from ...core.filter import (
-    MAX_STACK,
-    OP_AND,
-    OP_NOT,
-    OP_OR,
-    OP_PUSH_EQ,
-    OP_PUSH_IN,
-    OP_PUSH_TRUE,
-)
+from ..program_eval import program_eval_rows
 
 
 @jax.jit
 def filter_scan_ref(cols, opcodes, arg0, arg1, codesets):
     """cols (n, f) int32; program (p,); codesets (s, m). Returns bool (n,)."""
-    n = cols.shape[0]
-
-    def step(i, carry):
-        stack, sp = carry
-        op = opcodes[i]
-        f = arg0[i]
-        arg = arg1[i]
-        col = jnp.take(cols, f, axis=1)
-        cset = jnp.take(codesets, arg, axis=0)
-        eq = col == arg
-        inset = jnp.any((col[:, None] == cset[None, :]) & (cset[None, :] >= 0), axis=1)
-        tru = jnp.ones((n,), jnp.bool_)
-
-        is_push = (op == OP_PUSH_EQ) | (op == OP_PUSH_IN) | (op == OP_PUSH_TRUE)
-        push_val = jnp.where(
-            op == OP_PUSH_EQ, eq, jnp.where(op == OP_PUSH_IN, inset, tru)
-        )
-        a = lax.dynamic_index_in_dim(stack, sp - 2, axis=0, keepdims=False)
-        b = lax.dynamic_index_in_dim(stack, sp - 1, axis=0, keepdims=False)
-        binres = jnp.where(op == OP_AND, a & b, a | b)
-
-        # Three mutually exclusive effects; NOP leaves everything alone.
-        stack_push = lax.dynamic_update_index_in_dim(stack, push_val, sp, axis=0)
-        stack_bin = lax.dynamic_update_index_in_dim(stack, binres, sp - 2, axis=0)
-        stack_not = lax.dynamic_update_index_in_dim(stack, ~b, sp - 1, axis=0)
-
-        is_bin = (op == OP_AND) | (op == OP_OR)
-        is_not = op == OP_NOT
-        stack = jnp.where(
-            is_push, stack_push, jnp.where(is_bin, stack_bin, jnp.where(is_not, stack_not, stack))
-        )
-        sp = sp + jnp.where(is_push, 1, jnp.where(is_bin, -1, 0)).astype(sp.dtype)
-        return stack, sp
-
-    stack0 = jnp.zeros((MAX_STACK, n), jnp.bool_)
-    stack, _ = lax.fori_loop(0, opcodes.shape[0], step, (stack0, jnp.int32(0)))
-    return stack[0]
+    return program_eval_rows(cols, opcodes, arg0, arg1, codesets)

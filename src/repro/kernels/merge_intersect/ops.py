@@ -10,23 +10,15 @@ documented cap (falls back to the reference beyond it).
 """
 from __future__ import annotations
 
-from typing import Tuple
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..common import split_key_lanes as _split
 from .merge_intersect import BLOCK, intersect_mask_pallas
 from .ref import intersect_mask_ref
 
 MAX_VMEM_KEYS = 1 << 20  # 2 lanes * 4 B * 1M = 8 MiB resident in VMEM
-
-
-def _split(keys: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
-    keys = np.asarray(keys, dtype=np.int64)
-    hi = (keys >> 32).astype(np.int32)
-    lo = (keys & 0xFFFFFFFF).astype(np.uint32).view(np.int32)
-    return hi, lo
 
 
 def _pow2(n: int) -> int:

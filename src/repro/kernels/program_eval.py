@@ -1,0 +1,82 @@
+"""Shared postfix predicate-program evaluator (jnp/lax, value-level).
+
+One implementation of the filter program semantics (core/filter.py opcodes),
+written against plain jnp values so it can run
+
+  * inside a Pallas kernel body (combine_scan: the fused filter half),
+  * in the jitted jnp references (filter_scan/ref.py, combine_scan/ref.py),
+  * inside the shard_map distributed scan (core/dist_query.py).
+
+The Pallas filter_scan kernel keeps its own lax.switch formulation (scalar
+branch dispatch is cheaper there); everything else routes through here so
+the program semantics exist in exactly two audited places.
+
+This module is also the canonical home of the program opcodes and stack
+bound: the kernels package must stay import-free of `repro.core` (core's
+__init__ imports query/iterator modules that need the kernels — a
+module-level back-edge would be a cycle), so core/filter.py re-exports
+these constants rather than defining them.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+# Opcodes (postfix program over a boolean stack; see core/filter.py for
+# the compiler). Order matters: filter_scan's lax.switch branch table
+# indexes by opcode value.
+OP_NOP = 0
+OP_PUSH_EQ = 1
+OP_PUSH_IN = 2
+OP_PUSH_TRUE = 3
+OP_AND = 4
+OP_OR = 5
+OP_NOT = 6
+
+MAX_STACK = 8
+
+
+def program_eval_rows(cols, opcodes, arg0, arg1, codesets):
+    """Evaluate a compiled filter program over a columnar block.
+
+    cols (n, f) int32 dictionary codes; opcodes/arg0/arg1 (p,) int32;
+    codesets (s, m) int32 padded with -1. Returns bool (n,) match mask.
+    Pure jnp: traceable under jit, shard_map, and Pallas.
+    """
+    n = cols.shape[0]
+
+    def step(i, carry):
+        stack, sp = carry
+        op = opcodes[i]
+        f = arg0[i]
+        arg = arg1[i]
+        col = jnp.take(cols, f, axis=1)
+        cset = jnp.take(codesets, arg, axis=0)
+        eq = col == arg
+        inset = jnp.any((col[:, None] == cset[None, :]) & (cset[None, :] >= 0), axis=1)
+        tru = jnp.ones((n,), jnp.bool_)
+
+        is_push = (op == OP_PUSH_EQ) | (op == OP_PUSH_IN) | (op == OP_PUSH_TRUE)
+        push_val = jnp.where(
+            op == OP_PUSH_EQ, eq, jnp.where(op == OP_PUSH_IN, inset, tru)
+        )
+        a = lax.dynamic_index_in_dim(stack, sp - 2, axis=0, keepdims=False)
+        b = lax.dynamic_index_in_dim(stack, sp - 1, axis=0, keepdims=False)
+        binres = jnp.where(op == OP_AND, a & b, a | b)
+
+        # Three mutually exclusive effects; NOP leaves everything alone.
+        stack_push = lax.dynamic_update_index_in_dim(stack, push_val, sp, axis=0)
+        stack_bin = lax.dynamic_update_index_in_dim(stack, binres, sp - 2, axis=0)
+        stack_not = lax.dynamic_update_index_in_dim(stack, ~b, sp - 1, axis=0)
+
+        is_bin = (op == OP_AND) | (op == OP_OR)
+        is_not = op == OP_NOT
+        stack = jnp.where(
+            is_push, stack_push, jnp.where(is_bin, stack_bin, jnp.where(is_not, stack_not, stack))
+        )
+        sp = sp + jnp.where(is_push, 1, jnp.where(is_bin, -1, 0)).astype(sp.dtype)
+        return stack, sp
+
+    stack0 = jnp.zeros((MAX_STACK, n), jnp.bool_)
+    stack, _ = lax.fori_loop(0, opcodes.shape[0], step, (stack0, jnp.int32(0)))
+    return stack[0]

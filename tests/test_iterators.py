@@ -1,0 +1,343 @@
+"""Server-side iterator stack: every iterator vs a pure-numpy oracle, the
+fused combine_scan kernel on both backends, stacked composition, and
+host-vs-distributed agreement on aggregation results."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    AggregateSpec,
+    And,
+    CombinerIterator,
+    Eq,
+    EventStore,
+    FilterIterator,
+    IteratorStack,
+    Not,
+    Or,
+    ProjectingIterator,
+    QueryProcessor,
+    QueryStats,
+    VersioningIterator,
+    web_proxy_schema,
+)
+from repro.core.filter import compile_tree, eval_tree_rows
+from repro.core.iterators import resolve_grouping
+from repro.core.scan import RowBlock, scan_events
+from repro.kernels.combine_scan import combine_scan
+
+T_STOP = 4 * 3600
+N = 18_000
+
+
+@pytest.fixture(scope="module")
+def populated():
+    rng = np.random.default_rng(11)
+    store = EventStore(web_proxy_schema(), n_shards=4, flush_rows=4096)
+    ts = np.sort(rng.integers(0, T_STOP, N))
+    data = {
+        "domain": rng.choice(
+            ["alpha.com", "beta.org", "gamma.net", "delta.io"],
+            p=[0.5, 0.3, 0.15, 0.05],
+            size=N,
+        ),
+        "method": rng.choice(["GET", "POST", "PUT"], size=N),
+        "status": rng.choice(["200", "404", "500"], size=N, p=[0.7, 0.2, 0.1]),
+        "bytes_out": rng.integers(100, 5000, N).astype(str),
+    }
+    store.ingest(ts, {k: v.tolist() for k, v in data.items()})
+    store.flush_all()
+    store.compact_all()
+    return store, ts, data
+
+
+# ------------------------------------------------------------- aggregation
+def agg_oracle(store, ts, data, spec, tree, t0, t1):
+    """Pure-numpy client-side aggregation oracle."""
+    m = (ts >= t0) & (ts <= t1)
+    if tree is not None:
+        cols = store.encode_events(ts, {k: v.tolist() for k, v in data.items()})
+        m &= eval_tree_rows(store, tree, cols)
+    vals = (
+        data[spec.value_field].astype(int)
+        if spec.value_field is not None
+        else np.ones(len(ts), int)
+    )
+    groups = {}
+    idx = np.flatnonzero(m)
+    for i in idx:
+        key = tuple(data[f][i] for f in spec.group_by)
+        if spec.time_bucket_s is not None:
+            key = key + (int(ts[i]) // spec.time_bucket_s * spec.time_bucket_s,)
+        agg, cnt = groups.get(key, (None, 0))
+        v = int(vals[i])
+        if agg is None:
+            agg = v if spec.op != "count" else 1
+        elif spec.op in ("count",):
+            agg += 1
+        elif spec.op == "sum":
+            agg += v
+        elif spec.op == "min":
+            agg = min(agg, v)
+        else:
+            agg = max(agg, v)
+        groups[key] = (agg, cnt + 1)
+    return groups
+
+
+def result_to_dict(store, spec, res):
+    out = {}
+    for row in res.rows(store):
+        key = tuple(row[f] for f in spec.group_by)
+        if spec.time_bucket_s is not None:
+            key = key + (row["bucket_ts"],)
+        out[key] = (row["value"], row["count"])
+    return out
+
+
+SPECS = [
+    AggregateSpec(group_by=("method",), op="count"),
+    AggregateSpec(group_by=("status",), op="count", time_bucket_s=3600),
+    AggregateSpec(group_by=("status", "method"), op="count"),
+    AggregateSpec(group_by=("method",), op="sum", value_field="bytes_out"),
+    AggregateSpec(group_by=("method",), op="min", value_field="bytes_out"),
+    AggregateSpec(group_by=("status",), op="max", value_field="bytes_out", time_bucket_s=1800),
+]
+
+TREES = [
+    None,
+    Eq("domain", "alpha.com"),
+    And(Eq("domain", "beta.org"), Not(Eq("status", "500"))),
+    Or(Eq("domain", "gamma.net"), Eq("status", "404")),
+]
+
+
+@pytest.mark.parametrize("spec", SPECS)
+def test_combiner_matches_oracle(populated, spec):
+    store, ts, data = populated
+    qp = QueryProcessor(store)
+    tree = And(Eq("domain", "alpha.com"), Not(Eq("status", "500")))
+    res = qp.aggregate(spec, 1000, T_STOP - 1000, tree)
+    want = agg_oracle(store, ts, data, spec, tree, 1000, T_STOP - 1000)
+    assert result_to_dict(store, spec, res) == want
+
+
+@pytest.mark.parametrize("tree", TREES)
+def test_combiner_trees_and_schemes(populated, tree):
+    store, ts, data = populated
+    spec = AggregateSpec(group_by=("method",), op="count", time_bucket_s=3600)
+    want = agg_oracle(store, ts, data, spec, tree, 0, T_STOP)
+    for use_index, batched in [(False, True), (False, False), (True, True)]:
+        qp = QueryProcessor(store)
+        res = qp.aggregate(spec, 0, T_STOP, tree, use_index=use_index, batched=batched)
+        assert result_to_dict(store, spec, res) == want, (use_index, batched)
+
+
+def test_combine_scan_scheme_streams_aggregate_blocks(populated):
+    store, ts, data = populated
+    qp = QueryProcessor(store)
+    spec = AggregateSpec(group_by=("method",), op="count")
+    stats = QueryStats()
+    blocks = list(
+        qp.run_scheme(
+            "combine_scan", 0, T_STOP, Eq("domain", "alpha.com"),
+            aggregate=spec, stats=stats,
+        )
+    )
+    assert stats.batches > 1  # adaptive batching drove the combine scan
+    total = sum(b.matched for b in blocks)
+    assert total == int((data["domain"] == "alpha.com").sum())
+    # aggregate partials are tiny compared to the rows they summarize
+    assert sum(b.nbytes for b in blocks) < total * 8
+
+
+def test_combine_scan_scheme_requires_spec(populated):
+    store, _, _ = populated
+    with pytest.raises(ValueError):
+        next(iter(QueryProcessor(store).run_scheme("combine_scan", 0, T_STOP)))
+
+
+@given(seed=st.integers(0, 2**31), n=st.integers(1, 3000))
+@settings(max_examples=10, deadline=None)
+def test_combine_scan_kernel_backends_agree(populated, seed, n):
+    store, _, _ = populated
+    rng = np.random.default_rng(seed)
+    f = store.schema.n_fields
+    cols = np.zeros((n, f), np.int32)
+    for name in ["domain", "method", "status"]:
+        fid = store.schema.field_id(name)
+        cols[:, fid] = rng.integers(0, max(len(store.dictionaries[name]), 1), n)
+    gids = np.sort(rng.integers(0, 50, n).astype(np.int64))
+    vals = rng.integers(1, 1000, n).astype(np.int32)
+    tree = Or(Eq("domain", "alpha.com"), Eq("status", "404"))
+    prog = compile_tree(store, tree)
+    mask = eval_tree_rows(store, tree, cols)
+    for op in ["count", "sum", "min", "max"]:
+        ref = combine_scan(gids, vals, cols, prog, op=op, backend="ref")
+        pal = combine_scan(gids, vals, cols, prog, op=op, backend="pallas")
+        for a, b in zip(ref, pal):
+            np.testing.assert_array_equal(a, b)
+        # numpy oracle
+        uk, aggs, cnts = ref
+        live = np.unique(gids[mask])
+        np.testing.assert_array_equal(uk, live)
+        for i, g in enumerate(uk):
+            sel = vals[(gids == g) & mask]
+            want = {"count": len(sel), "sum": sel.sum(), "min": sel.min(), "max": sel.max()}[op]
+            assert aggs[i] == want, (op, g)
+            assert cnts[i] == len(sel)
+
+
+def test_combine_scan_tile_straddle(populated):
+    """One group spanning several Pallas tiles must stitch across the
+    epilogue, including with a filter that kills part of the group."""
+    from repro.kernels.combine_scan.combine_scan import BLOCK
+
+    store, _, _ = populated
+    n = BLOCK * 3
+    f = store.schema.n_fields
+    cols = np.zeros((n, f), np.int32)
+    sfid = store.schema.field_id("status")
+    code_200 = store.dictionaries["status"].lookup("200")
+    code_404 = store.dictionaries["status"].lookup("404")
+    cols[:, sfid] = code_404
+    cols[::2, sfid] = code_200  # half the rows filtered out
+    gids = np.zeros(n, np.int64)
+    vals = np.arange(1, n + 1, dtype=np.int32)
+    prog = compile_tree(store, Eq("status", "200"))
+    uk, aggs, cnts = combine_scan(gids, vals, cols, prog, op="sum", backend="pallas")
+    assert list(uk) == [0]
+    assert int(cnts[0]) == n // 2
+    assert int(aggs[0]) == int(vals[::2].sum())
+
+
+# ------------------------------------------------------------- versioning
+def _block_with_dups(rng, n_keys, max_dup):
+    keys = np.sort(rng.choice(np.arange(n_keys) * 7 + 3, size=n_keys * max_dup))
+    cols = rng.integers(0, 100, (len(keys), 3)).astype(np.int32)
+    return RowBlock(0, keys.astype(np.int64), cols)
+
+
+@given(seed=st.integers(0, 2**31), max_versions=st.integers(1, 4))
+@settings(max_examples=15, deadline=None)
+def test_versioning_matches_oracle(seed, max_versions):
+    rng = np.random.default_rng(seed)
+    blk = _block_with_dups(rng, 50, 5)
+    out = VersioningIterator(max_versions).apply(blk)
+    # oracle: first max_versions rows per unique key, in order
+    seen = {}
+    keep = []
+    for i, k in enumerate(blk.keys):
+        seen[k] = seen.get(k, 0) + 1
+        if seen[k] <= max_versions:
+            keep.append(i)
+    np.testing.assert_array_equal(out.keys, blk.keys[keep])
+    np.testing.assert_array_equal(out.cols, blk.cols[keep])
+
+
+def test_versioning_newest_wins(populated):
+    """max_versions=1 keeps exactly one entry per key and it is the FIRST
+    occurrence — which, under the rev_ts key layout, is the newest."""
+    rng = np.random.default_rng(0)
+    blk = _block_with_dups(rng, 30, 3)
+    out = VersioningIterator(1).apply(blk)
+    uk, first_idx = np.unique(blk.keys, return_index=True)
+    np.testing.assert_array_equal(out.keys, uk)
+    np.testing.assert_array_equal(out.cols, blk.cols[first_idx])
+
+
+# ------------------------------------------------------- stack composition
+def test_stack_composition_matches_oracle(populated):
+    store, ts, data = populated
+    tree = Eq("domain", "beta.org")
+    stack = IteratorStack(
+        [
+            VersioningIterator(1),
+            FilterIterator(store, tree),
+            ProjectingIterator(store, ["domain", "status"]),
+        ]
+    )
+    got_rows = 0
+    for blk in scan_events(store, 1000, 8000, iterators=stack):
+        assert blk.cols.shape[1] == 2  # projected
+        assert blk.field_ids is not None
+        dom_codes = blk.cols[:, 0]
+        assert (dom_codes == store.dictionaries["domain"].lookup("beta.org")).all()
+        got_rows += blk.n
+    want = int(
+        ((data["domain"] == "beta.org") & (ts >= 1000) & (ts <= 8000)).sum()
+    )
+    assert got_rows == want  # event keys are unique: versioning drops nothing
+
+
+def test_stack_projection_shrinks_bytes(populated):
+    store, _, _ = populated
+    full = sum(b.nbytes for b in scan_events(store, 0, 6000))
+    stack = IteratorStack([ProjectingIterator(store, ["domain"])])
+    proj = sum(b.nbytes for b in scan_events(store, 0, 6000, iterators=stack))
+    assert proj < full / 3  # 1 of 12 columns + keys
+
+
+def test_stack_ordering_validation(populated):
+    store, _, _ = populated
+    grouping = resolve_grouping(
+        store, AggregateSpec(group_by=("method",), op="count"), 0, T_STOP
+    )
+    comb = CombinerIterator(grouping)
+    with pytest.raises(ValueError):
+        IteratorStack([comb, VersioningIterator()])  # combiner must be last
+    with pytest.raises(ValueError):
+        IteratorStack([ProjectingIterator(store, ["domain"]), FilterIterator(store, Eq("domain", "x"))])
+    # valid: versioning -> filter -> combiner
+    IteratorStack([VersioningIterator(), FilterIterator(store, Eq("domain", "alpha.com")), comb])
+
+
+def test_stack_terminal_combiner_in_scan(populated):
+    store, ts, data = populated
+    spec = AggregateSpec(group_by=("method",), op="count")
+    grouping = resolve_grouping(store, spec, 0, T_STOP)
+    prog = compile_tree(store, Eq("domain", "alpha.com"))
+    stack = IteratorStack([CombinerIterator(grouping, prog=prog)])
+    from repro.core import merge_aggregate_blocks
+
+    res = merge_aggregate_blocks(grouping, list(scan_events(store, 0, T_STOP, iterators=stack)))
+    want = agg_oracle(store, ts, data, spec, Eq("domain", "alpha.com"), 0, T_STOP)
+    assert result_to_dict(store, spec, res) == want
+
+
+# ------------------------------------------------- host vs dist agreement
+@pytest.fixture(scope="module")
+def dist_setup(populated):
+    from repro.core.dist_query import DistQueryProcessor, from_event_store
+    from repro.launch.mesh import make_dev_mesh
+
+    store, ts, data = populated
+    mesh = make_dev_mesh(1, 1)
+    dist = from_event_store(store, mesh)
+    return DistQueryProcessor(store, dist)
+
+
+@pytest.mark.parametrize("spec", SPECS)
+def test_host_vs_dist_aggregation(populated, dist_setup, spec):
+    store, ts, data = populated
+    tree = And(Eq("domain", "alpha.com"), Not(Eq("status", "500")))
+    host = QueryProcessor(store).aggregate(spec, 1000, T_STOP - 1000, tree)
+    dist = dist_setup.aggregate_range(spec, tree, 1000, T_STOP - 1000)
+    np.testing.assert_array_equal(host.gids, dist.gids)
+    np.testing.assert_array_equal(host.values, dist.values)
+    np.testing.assert_array_equal(host.counts, dist.counts)
+
+
+@given(t0=st.integers(0, T_STOP), span=st.integers(600, T_STOP))
+@settings(max_examples=8, deadline=None)
+def test_host_vs_dist_random_ranges(populated, dist_setup, t0, span):
+    store, ts, data = populated
+    t1 = min(t0 + span, T_STOP)
+    spec = AggregateSpec(group_by=("status",), op="count", time_bucket_s=900)
+    tree = Eq("method", "GET")
+    host = QueryProcessor(store).aggregate(spec, t0, t1, tree)
+    dist = dist_setup.aggregate_range(spec, tree, t0, t1)
+    np.testing.assert_array_equal(host.gids, dist.gids)
+    np.testing.assert_array_equal(host.values, dist.values)
+    np.testing.assert_array_equal(host.counts, dist.counts)
