@@ -14,6 +14,7 @@ from repro.kernels.aggregate_combine import combine_sorted_counts
 from repro.kernels.combine_scan import combine_scan
 from repro.kernels.filter_scan import filter_scan
 from repro.kernels.merge_intersect import intersect_sorted
+from repro.kernels.merge_runs import merge_sorted_runs
 
 
 def run(n: int = 500_000) -> Dict:
@@ -75,6 +76,42 @@ def run(n: int = 500_000) -> Dict:
         combine_sorted_counts(k, np.ones(len(k), np.int32))
     dt_2p = (time.perf_counter() - t0) / reps
 
+    # k-way sorted-run merge (major compaction) vs the retired placeholder
+    # (jitted concatenate + argsort — tables.py's former _merge_runs).
+    import jax
+    import jax.numpy as jnp
+
+    @jax.jit
+    def _concat_sort(keys_list, cols_list):
+        keys = jnp.concatenate(keys_list)
+        cc = jnp.concatenate(cols_list)
+        order = jnp.argsort(keys)
+        return keys[order], cc[order]
+
+    k_runs = 6
+    per = max(n // k_runs, 256)
+    runs = []
+    for _ in range(k_runs):
+        rk = np.sort(rng.integers(0, 1 << 52, per).astype(np.int64))
+        runs.append((rk, rng.integers(0, 100, (per, 4)).astype(np.int32)))
+    merge_sorted_runs(runs)  # warm jit at the timed shapes
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        mk, mc = merge_sorted_runs(runs)
+    dt_m = (time.perf_counter() - t0) / reps
+    # Warm at the timed shapes too — _concat_sort is shape-specialized and
+    # a cold first rep would bill its compile to the baseline.
+    jax.block_until_ready(
+        _concat_sort([jnp.asarray(kk) for kk, _ in runs], [jnp.asarray(c) for _, c in runs])[0]
+    )
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        ck, _ = _concat_sort(
+            [jnp.asarray(kk) for kk, _ in runs], [jnp.asarray(c) for _, c in runs]
+        )
+        jax.block_until_ready(ck)
+    dt_cs = (time.perf_counter() - t0) / reps
+
     return {
         "filter_rows_per_s": len(cols) / dt_f,
         "filter_us": dt_f * 1e6,
@@ -85,6 +122,9 @@ def run(n: int = 500_000) -> Dict:
         "combine_scan_rows_per_s": len(cols) / dt_fc,
         "combine_scan_us": dt_fc * 1e6,
         "combine_scan_two_pass_us": dt_2p * 1e6,
+        "merge_runs_rows_per_s": k_runs * per / dt_m,
+        "merge_runs_us": dt_m * 1e6,
+        "merge_runs_concat_sort_us": dt_cs * 1e6,
     }
 
 
@@ -95,4 +135,6 @@ def emit_csv(res: Dict) -> List[str]:
         f"kernel_aggregate_combine,{res['combine_us']:.0f},rows_per_s={res['combine_rows_per_s']:.3g}",
         f"kernel_combine_scan_fused,{res['combine_scan_us']:.0f},rows_per_s={res['combine_scan_rows_per_s']:.3g}",
         f"kernel_combine_scan_two_pass,{res['combine_scan_two_pass_us']:.0f},baseline=separate_filter_then_combine",
+        f"kernel_merge_runs,{res['merge_runs_us']:.0f},rows_per_s={res['merge_runs_rows_per_s']:.3g}",
+        f"kernel_merge_runs_concat_sort,{res['merge_runs_concat_sort_us']:.0f},baseline=retired_placeholder",
     ]

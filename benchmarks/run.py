@@ -44,7 +44,7 @@ def main() -> None:
     failures += [f"runtime: {f}" for f in bench_query_runtime.validate(r2)]
 
     print("# fig 3/4: ingest scaling + backpressure ...", file=sys.stderr, flush=True)
-    r3 = bench_ingest_scaling.run()
+    r3 = bench_ingest_scaling.run(quick=args.quick)
     lines += bench_ingest_scaling.emit_csv(r3)
     failures += [f"ingest: {f}" for f in bench_ingest_scaling.validate(r3)]
 

@@ -1,0 +1,479 @@
+"""Distributed ingest plane — writable device-resident LSM tablets.
+
+The paper's headline experiment (§IV-A, Figs 3-4) is ingest scalability vs
+client processes x tablet servers; until this module the mesh data plane
+was read-only (dist_query scattered a finished host store post hoc). Here
+every mesh device hosts `tablets_per_device` *writable* tablet servers,
+and the full LSM lifecycle of core/tables.py runs as jitted shard_map
+programs over device-resident state:
+
+    append   DistBatchWriter shards encoded events by row hash; each
+             tablet picks its rows out of the replicated batch and
+             scatter-appends them into its memtable slab
+    minor    per-tablet memtable sort into the next sorted-run slot
+    major    k-way merge of runs + base via the merge_runs rank kernel
+             (kernels/merge_runs) into a single sorted base run —
+             BLOCKING the writer that tripped it, which is the paper's
+             backpressure, reproduced on the mesh
+
+Per-tablet device counters (rows, minor/major compactions, overflow)
+record the blocked-writer dynamics; host wall-clock blocked-seconds
+accrue to each writer's IngestMetrics exactly as in the host path.
+
+publish() folds everything into the base run and returns a DistStore
+view of it — the incremental-update path: freshly ingested rows become
+visible to DistQueryProcessor without a host round trip or re-scatter
+(the compactions are device programs; no row ever returns to the host).
+
+Host-side flush triggers are exact with zero device syncs: tablet
+assignments are computed host-side, so a bincount per chunk mirrors the
+device memtable fills and run-slot counts precisely — compactions fire
+only when some tablet is actually full.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from . import keypack
+from .dist_query import DistStore
+from .ingest import BatchWriter, IngestMetrics, check_shard_guidance
+
+REV_PAD = np.iinfo(np.int32).max  # +inf rev_ts sentinel (matches DistStore)
+
+
+def _n_devices(mesh: Mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+
+
+def _linear_device_index(mesh: Mesh):
+    """Row-major device index over the mesh axes — the shard_map slab of a
+    P(axes, ...)-sharded array on this device covers tablets
+    [idx * tablets_per_device, (idx + 1) * tablets_per_device)."""
+    idx = jnp.int32(0)
+    for a in mesh.axis_names:
+        idx = idx * jnp.int32(mesh.shape[a]) + lax.axis_index(a)
+    return idx
+
+
+class DistIngestPlane:
+    """Device-resident LSM tablet grid + its jitted ingest/compaction
+    programs. T = n_devices * tablets_per_device tablets, each with a
+    memtable slab (mem_rows), max_runs sorted-run slots (mem_rows each)
+    and a base run (capacity rows)."""
+
+    def __init__(
+        self,
+        mesh: Mesh,
+        n_fields: int,
+        capacity: int,
+        tablets_per_device: int = 1,
+        mem_rows: int = 4096,
+        max_runs: int = 4,
+        append_rows: int = 1024,
+    ):
+        self.mesh = mesh
+        self.axes = tuple(mesh.axis_names)
+        self.n_fields = int(n_fields)
+        self.tablets_per_device = int(tablets_per_device)
+        self.n_tablets = _n_devices(mesh) * self.tablets_per_device
+        self.capacity = int(capacity)
+        self.mem_rows = int(mem_rows)
+        self.max_runs = int(max_runs)
+        self.append_rows = int(min(append_rows, mem_rows))
+        self._steps: Dict[str, object] = {}
+        # Exact host-side mirrors of the device memtable fills and run-slot
+        # counts (see module docstring) — updated in lockstep with the
+        # device programs' own guards, never read back from the device.
+        self._fill = np.zeros(self.n_tablets, np.int64)
+        self._runs_host = np.zeros(self.n_tablets, np.int32)
+        self._dirty = True
+        self._published: Optional[DistStore] = None
+        self.blocked_seconds = 0.0  # aggregate; per-writer in IngestMetrics
+        # Concurrent DistBatchWriters (paper: many parallel ingest clients)
+        # share one plane: the lock serializes state/counter updates, like
+        # the host Tablet's lock. Writers blocked here while another's
+        # flush compacts is exactly the paper's backpressure coupling.
+        self._lock = threading.Lock()
+        self.state = self._init_state()
+
+    # ----------------------------------------------------------- state
+    def _specs(self) -> Dict[str, P]:
+        ax = self.axes
+        return {
+            "mem_rts": P(ax, None),
+            "mem_cols": P(ax, None, None),
+            "mem_n": P(ax),
+            "run_rts": P(ax, None, None),
+            "run_cols": P(ax, None, None, None),
+            "run_n": P(ax, None),
+            "n_runs": P(ax),
+            "base_rts": P(ax, None),
+            "base_cols": P(ax, None, None),
+            "base_n": P(ax),
+            "rows": P(ax),
+            "minor": P(ax),
+            "major": P(ax),
+            "overflow": P(ax),
+        }
+
+    def _init_state(self) -> Dict[str, jax.Array]:
+        t, m, k, c, f = (
+            self.n_tablets, self.mem_rows, self.max_runs, self.capacity, self.n_fields,
+        )
+        host = {
+            "mem_rts": np.zeros((t, m), np.int32),
+            "mem_cols": np.zeros((t, m, f), np.int32),
+            "mem_n": np.zeros((t,), np.int32),
+            "run_rts": np.full((t, k, m), REV_PAD, np.int32),
+            "run_cols": np.zeros((t, k, m, f), np.int32),
+            "run_n": np.zeros((t, k), np.int32),
+            "n_runs": np.zeros((t,), np.int32),
+            "base_rts": np.full((t, c), REV_PAD, np.int32),
+            "base_cols": np.zeros((t, c, f), np.int32),
+            "base_n": np.zeros((t,), np.int32),
+            "rows": np.zeros((t,), np.int64),
+            "minor": np.zeros((t,), np.int32),
+            "major": np.zeros((t,), np.int32),
+            "overflow": np.zeros((t,), np.int32),
+        }
+        specs = self._specs()
+        return {
+            name: jax.device_put(arr, NamedSharding(self.mesh, specs[name]))
+            for name, arr in host.items()
+        }
+
+    # ------------------------------------------------------ step builders
+    def _append_step(self):
+        if "append" in self._steps:
+            return self._steps["append"]
+        mesh, tl = self.mesh, self.tablets_per_device
+        specs = self._specs()
+
+        def device_fn(mem_rts, mem_cols, mem_n, rows, overflow, b_rts, b_cols, b_tab):
+            dev = _linear_device_index(mesh)
+
+            def one(i, rts_l, cols_l, n):
+                gid = dev * jnp.int32(tl) + i
+                mine = b_tab == gid
+                m = rts_l.shape[0]
+                # Scatter-append: row dest = running fill; non-mine and
+                # overflow rows map out of bounds and drop.
+                dest = jnp.where(
+                    mine, n + jnp.cumsum(mine.astype(jnp.int32)) - 1, jnp.int32(m)
+                )
+                rts_l = rts_l.at[dest].set(b_rts, mode="drop")
+                cols_l = cols_l.at[dest].set(b_cols, mode="drop")
+                want = n + mine.sum(dtype=jnp.int32)
+                new_n = jnp.minimum(want, jnp.int32(m))
+                return rts_l, cols_l, new_n, new_n - n, want - new_n
+
+            idx = jnp.arange(tl, dtype=jnp.int32)
+            new_rts, new_cols, new_n, appended, lost = jax.vmap(
+                one, in_axes=(0, 0, 0, 0)
+            )(idx, mem_rts, mem_cols, mem_n)
+            return (
+                new_rts, new_cols, new_n,
+                rows + appended.astype(rows.dtype),
+                overflow + lost,
+            )
+
+        smapped = shard_map(
+            device_fn,
+            mesh=mesh,
+            in_specs=(
+                specs["mem_rts"], specs["mem_cols"], specs["mem_n"],
+                specs["rows"], specs["overflow"],
+                P(None), P(None, None), P(None),  # batch: replicated
+            ),
+            out_specs=(
+                specs["mem_rts"], specs["mem_cols"], specs["mem_n"],
+                specs["rows"], specs["overflow"],
+            ),
+            check_rep=False,
+        )
+        self._steps["append"] = jax.jit(smapped, donate_argnums=(0, 1, 2, 3, 4))
+        return self._steps["append"]
+
+    def _minor_step(self):
+        if "minor" in self._steps:
+            return self._steps["minor"]
+        mesh, k = self.mesh, self.max_runs
+        specs = self._specs()
+
+        def device_fn(mem_rts, mem_cols, mem_n, run_rts, run_cols, run_n, n_runs, minor):
+            def one(rts_l, cols_l, n, rrts_l, rcols_l, rn_l, nr):
+                m = rts_l.shape[0]
+                valid = jnp.arange(m, dtype=jnp.int32) < n
+                keys = jnp.where(valid, rts_l, jnp.int32(REV_PAD))
+                order = jnp.argsort(keys)
+                skeys = keys[order]
+                scols = cols_l[order]
+                do = (n > 0) & (nr < jnp.int32(k))
+                slot = jnp.clip(nr, 0, k - 1)
+                rrts_l = rrts_l.at[slot].set(jnp.where(do, skeys, rrts_l[slot]))
+                rcols_l = rcols_l.at[slot].set(jnp.where(do, scols, rcols_l[slot]))
+                rn_l = rn_l.at[slot].set(jnp.where(do, n, rn_l[slot]))
+                return (
+                    jnp.where(do, 0, n), rrts_l, rcols_l, rn_l,
+                    nr + do.astype(nr.dtype), do.astype(jnp.int32),
+                )
+
+            new_n, nrr, nrc, nrn, nnr, did = jax.vmap(one)(
+                mem_rts, mem_cols, mem_n, run_rts, run_cols, run_n, n_runs
+            )
+            return new_n, nrr, nrc, nrn, nnr, minor + did
+
+        smapped = shard_map(
+            device_fn,
+            mesh=mesh,
+            in_specs=(
+                specs["mem_rts"], specs["mem_cols"], specs["mem_n"],
+                specs["run_rts"], specs["run_cols"], specs["run_n"],
+                specs["n_runs"], specs["minor"],
+            ),
+            out_specs=(
+                specs["mem_n"], specs["run_rts"], specs["run_cols"],
+                specs["run_n"], specs["n_runs"], specs["minor"],
+            ),
+            check_rep=False,
+        )
+        self._steps["minor"] = jax.jit(smapped, donate_argnums=(3, 4, 5))
+        return self._steps["minor"]
+
+    def _major_step(self):
+        if "major" in self._steps:
+            return self._steps["major"]
+        from ..kernels.merge_runs import merge_sorted_device
+
+        mesh = self.mesh
+        k, m, c, f = self.max_runs, self.mem_rows, self.capacity, self.n_fields
+        specs = self._specs()
+        # Two-stage merge: the K runs (m rows each) first, then the result
+        # against the base — pad both sides of the 2-way merge to one
+        # power-of-two length.
+        l2 = 1
+        while l2 < max(c, k * m):
+            l2 *= 2
+
+        def device_fn(run_rts, run_cols, run_n, n_runs, base_rts, base_cols, base_n, major, overflow):
+            def one(rrts_l, rcols_l, rn_l, nr, brts_l, bcols_l, bn):
+                # Mask stale slots/rows (run_n is authoritative; slots past
+                # n_runs were zeroed at the previous major).
+                within = jnp.arange(m, dtype=jnp.int32)[None, :] < rn_l[:, None]
+                ck = jnp.where(within, rrts_l, jnp.int32(REV_PAD))
+                cc = jnp.where(within[..., None], rcols_l, 0)
+                mk, mc = merge_sorted_device(ck, cc)  # (k*m,), sentinel tail
+                pad_a = jnp.full((l2,), REV_PAD, jnp.int32).at[:c].set(brts_l)
+                pad_b = jnp.full((l2,), REV_PAD, jnp.int32).at[: k * m].set(mk)
+                ca = jnp.zeros((l2, f), jnp.int32).at[:c].set(bcols_l)
+                cb = jnp.zeros((l2, f), jnp.int32).at[: k * m].set(mc)
+                fk, fc = merge_sorted_device(
+                    jnp.stack([pad_a, pad_b]), jnp.stack([ca, cb])
+                )
+                do = nr > 0
+                new_brts = jnp.where(do, fk[:c], brts_l)
+                new_bcols = jnp.where(do, fc[:c], bcols_l)
+                total = bn + rn_l.sum()
+                new_bn = jnp.where(do, jnp.minimum(total, jnp.int32(c)), bn)
+                lost = jnp.where(do, total - new_bn, 0)
+                return (
+                    jnp.where(do, jnp.zeros_like(rn_l), rn_l),
+                    jnp.where(do, 0, nr),
+                    new_brts, new_bcols, new_bn,
+                    do.astype(jnp.int32), lost,
+                )
+
+            nrn, nnr, nbr, nbc, nbn, did, lost = jax.vmap(one)(
+                run_rts, run_cols, run_n, n_runs, base_rts, base_cols, base_n
+            )
+            return nrn, nnr, nbr, nbc, nbn, major + did, overflow + lost
+
+        smapped = shard_map(
+            device_fn,
+            mesh=mesh,
+            in_specs=(
+                specs["run_rts"], specs["run_cols"], specs["run_n"], specs["n_runs"],
+                specs["base_rts"], specs["base_cols"], specs["base_n"],
+                specs["major"], specs["overflow"],
+            ),
+            out_specs=(
+                specs["run_n"], specs["n_runs"],
+                specs["base_rts"], specs["base_cols"], specs["base_n"],
+                specs["major"], specs["overflow"],
+            ),
+            check_rep=False,
+        )
+        # The base buffers are deliberately NOT donated: publish() hands
+        # out DistStore views of them, and on backends that implement
+        # donation (TPU/GPU) a donated major would delete the arrays a
+        # caller may still hold. Majors are rare; one base copy each is
+        # the price of stable published views.
+        self._steps["major"] = jax.jit(smapped, donate_argnums=(2, 3))
+        return self._steps["major"]
+
+    # ------------------------------------------------------------- ingest
+    def _run_minor(self) -> None:
+        s = self.state
+        step = self._minor_step()
+        s["mem_n"], s["run_rts"], s["run_cols"], s["run_n"], s["n_runs"], s["minor"] = step(
+            s["mem_rts"], s["mem_cols"], s["mem_n"],
+            s["run_rts"], s["run_cols"], s["run_n"], s["n_runs"], s["minor"],
+        )
+        # Mirror the device guard exactly: a tablet flushes iff it holds
+        # rows AND has a free run slot.
+        flushed = (self._fill > 0) & (self._runs_host < self.max_runs)
+        self._runs_host += flushed
+        self._fill = np.where(flushed, 0, self._fill)
+
+    def _run_major(self) -> None:
+        s = self.state
+        step = self._major_step()
+        (
+            s["run_n"], s["n_runs"], s["base_rts"], s["base_cols"], s["base_n"],
+            s["major"], s["overflow"],
+        ) = step(
+            s["run_rts"], s["run_cols"], s["run_n"], s["n_runs"],
+            s["base_rts"], s["base_cols"], s["base_n"], s["major"], s["overflow"],
+        )
+        self._runs_host[:] = 0
+
+    def ingest(self, rts: np.ndarray, cols: np.ndarray, tab: np.ndarray) -> float:
+        """Append a pre-encoded, pre-sharded batch. rts int32 reversed
+        timestamps; cols (n, F) int32 codes; tab (n,) int32 tablet ids.
+        Returns seconds spent blocked on major compaction (backpressure) —
+        the server-side half of a DistBatchWriter flush."""
+        n = len(rts)
+        if n == 0:
+            return 0.0
+        rts = np.asarray(rts, np.int32)
+        cols = np.asarray(cols, np.int32)
+        tab = np.asarray(tab, np.int32)
+        append = self._append_step()
+        with self._lock:
+            return self._ingest_locked(append, rts, cols, tab, n)
+
+    def _ingest_locked(self, append, rts, cols, tab, n: int) -> float:
+        s = self.state
+        blocked = 0.0
+        b = self.append_rows
+        for off in range(0, n, b):
+            chunk = min(b, n - off)
+            tab_chunk = tab[off : off + chunk]
+            cb = np.bincount(tab_chunk, minlength=self.n_tablets)
+            # Exact room check from the host-side fill mirror: flush only
+            # the moment some tablet's memtable would actually overflow.
+            if np.any(self._fill + cb > self.mem_rows):
+                if np.any((self._fill > 0) & (self._runs_host >= self.max_runs)):
+                    # No free run slot for a tablet that must flush: major
+                    # compaction first — it BLOCKS the writer that tripped
+                    # it, Accumulo's backpressure reproduced on the mesh.
+                    t0 = time.perf_counter()
+                    self._run_major()
+                    jax.block_until_ready(self.state["base_n"])
+                    dt = time.perf_counter() - t0
+                    blocked += dt
+                    self.blocked_seconds += dt
+                self._run_minor()
+            pad_rts = np.zeros((b,), np.int32)
+            pad_cols = np.zeros((b, self.n_fields), np.int32)
+            pad_tab = np.full((b,), -1, np.int32)  # -1: no tablet claims it
+            pad_rts[:chunk] = rts[off : off + chunk]
+            pad_cols[:chunk] = cols[off : off + chunk]
+            pad_tab[:chunk] = tab_chunk
+            s["mem_rts"], s["mem_cols"], s["mem_n"], s["rows"], s["overflow"] = append(
+                s["mem_rts"], s["mem_cols"], s["mem_n"], s["rows"], s["overflow"],
+                jnp.asarray(pad_rts), jnp.asarray(pad_cols), jnp.asarray(pad_tab),
+            )
+            self._fill += cb
+        self._dirty = True
+        return blocked
+
+    # -------------------------------------------------------------- reads
+    def publish(self) -> DistStore:
+        """Fold memtables and runs into the base run (device-side merges
+        only) and return the query-visible DistStore view. Cheap when
+        nothing was ingested since the last publish."""
+        with self._lock:
+            if not self._dirty and self._published is not None:
+                return self._published
+            for _ in range(3):
+                self._run_minor()
+                self._run_major()
+                if int(self._fill.max()) == 0:  # exact mirror: no device sync
+                    break
+            else:  # pragma: no cover — the invariant bounds this to 2 passes
+                raise RuntimeError("publish did not drain the memtables")
+            self._dirty = False
+            self._published = DistStore(
+                rev_ts=self.state["base_rts"],
+                cols=self.state["base_cols"],
+                counts=self.state["base_n"],
+                mesh=self.mesh,
+            )
+            return self._published
+
+    def telemetry(self) -> Dict[str, np.ndarray]:
+        """Per-tablet device counters (the paper's backpressure signals)."""
+        with self._lock:
+            out = {
+                name: np.asarray(jax.device_get(self.state[name]))
+                for name in ("rows", "minor", "major", "overflow", "mem_n", "n_runs", "base_n")
+            }
+            out["blocked_seconds"] = np.float64(self.blocked_seconds)
+            return out
+
+
+class DistBatchWriter(BatchWriter):
+    """Client-side ingest writer for the device plane (paper §II: one
+    BatchWriter per parallel ingest client). Buffers parsed events exactly
+    like the host BatchWriter; a flush encodes via the store's dictionaries,
+    shards by row hash, and appends through the plane — blocking while a
+    tripped major compaction drains, which is the measured backpressure."""
+
+    def __init__(
+        self,
+        store,
+        plane: DistIngestPlane,
+        batch_rows: int = 4096,
+        metrics: Optional[IngestMetrics] = None,
+        writer_id: int = 0,
+    ):
+        super().__init__(store, batch_rows=batch_rows, metrics=metrics)
+        self.plane = plane
+        self._writer_id = np.int64(writer_id)
+        self._count = 0
+
+    def _write(self, ts: np.ndarray, values) -> float:
+        ts = np.asarray(ts, dtype=np.int64)
+        if np.any(ts < 0) or np.any(ts > keypack.TS_MAX):
+            # Same contract as EventStore.ingest_encoded — out-of-range
+            # timestamps must not silently wrap into negative rev_ts.
+            raise ValueError("timestamp out of 30-bit store range")
+        cols = self.store.encode_events(ts, values)
+        n = len(ts)
+        # Row hash decides the tablet: content + per-writer nonce, so
+        # identical events still spread uniformly (the paper's random
+        # sharding; shard id is implicit in tablet choice here).
+        nonce = np.arange(self._count, self._count + n, dtype=np.int64)
+        self._count += n
+        h = keypack.short_hash(
+            *(cols[:, j] for j in range(cols.shape[1])), ts, nonce, self._writer_id
+        )
+        tab = (h % self.plane.n_tablets).astype(np.int32)
+        rts = keypack.rev_ts(np.asarray(ts, np.int64)).astype(np.int32)
+        return self.plane.ingest(rts, cols, tab)
+
+
+def check_tablet_guidance(n_tablets: int, n_writers: int) -> bool:
+    """Paper sizing guidance, lifted to the mesh: tablet count at least
+    half the parallel writer count (the shard-vs-client rule, one home)."""
+    return check_shard_guidance(n_tablets, n_writers)

@@ -51,9 +51,14 @@ class DistStore:
 
     rev_ts:  (T, R) int32   reversed timestamps, ascending per tablet
                             (newest first), padded with TS_MAX+... sentinel
-    cols:    (T, R, F) int32 dictionary codes, -1 padded
+    cols:    (T, R, F) int32 dictionary codes, pad rows carry junk codes
+                            (masked by counts in every scan)
     counts:  (T,) int32     live rows per tablet
-    T = number of tablets = number of mesh devices; R = tablet capacity.
+    T = number of tablets = n_devices * tablets_per_device (T must divide
+    evenly across the mesh); R = tablet capacity. The grid is either a
+    one-shot scatter of a host store (from_event_store) or the live base
+    run of a DistIngestPlane (dist_ingest.publish) — the latter updates
+    incrementally as writers ingest, no re-scatter.
     """
 
     rev_ts: jax.Array
@@ -80,9 +85,9 @@ def tablet_specs(mesh: Mesh) -> Dict[str, P]:
     }
 
 
-def dist_store_shapes(mesh: Mesh, rows_per_tablet: int, n_fields: int):
+def dist_store_shapes(mesh: Mesh, rows_per_tablet: int, n_fields: int, tablets_per_device: int = 1):
     """Abstract ShapeDtypeStructs for the dry-run (no allocation)."""
-    t = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+    t = int(np.prod([mesh.shape[a] for a in mesh.axis_names])) * tablets_per_device
     return {
         "rev_ts": jax.ShapeDtypeStruct((t, rows_per_tablet), jnp.int32),
         "cols": jax.ShapeDtypeStruct((t, rows_per_tablet, n_fields), jnp.int32),
@@ -90,10 +95,20 @@ def dist_store_shapes(mesh: Mesh, rows_per_tablet: int, n_fields: int):
     }
 
 
-def from_event_store(store: EventStore, mesh: Mesh, capacity: Optional[int] = None) -> DistStore:
-    """Scatter a host EventStore's event tables onto the mesh (row-hash
-    re-sharding onto T tablets — the paper's uniform random sharding)."""
-    t = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+def from_event_store(
+    store: EventStore,
+    mesh: Mesh,
+    capacity: Optional[int] = None,
+    tablets_per_device: int = 1,
+) -> DistStore:
+    """Re-shard a host EventStore's event tables onto the mesh by row hash
+    (the paper's uniform random sharding) — implemented as a bulk replay
+    through the distributed ingest plane: the host rows stream through
+    DistIngestPlane.ingest and the device-side compaction programs build
+    the sorted tablets (the former host-side NumPy scatter loop is gone)."""
+    from .dist_ingest import DistIngestPlane
+
+    t = int(np.prod([mesh.shape[a] for a in mesh.axis_names])) * tablets_per_device
     rows_k, rows_c = [], []
     for tab in store.event_tablets:
         for run in tab.snapshot_runs():
@@ -108,26 +123,27 @@ def from_event_store(store: EventStore, mesh: Mesh, capacity: Optional[int] = No
         rc = np.zeros((0, store.schema.n_fields), np.int32)
     assign = (rk[:, 1] % t).astype(np.int64)  # hash-uniform tablet choice
     cap = capacity or max(int(np.bincount(assign, minlength=t).max()), 1)
-    rev = np.full((t, cap), np.iinfo(np.int32).max, np.int32)
-    cols = np.full((t, cap, store.schema.n_fields), -1, np.int32)
-    counts = np.zeros((t,), np.int32)
-    for ti in range(t):
-        m = assign == ti
-        n = int(m.sum())
-        if n > cap:
-            raise ValueError(f"tablet {ti} overflow: {n} > {cap}")
-        order = np.argsort(rk[m][:, 0], kind="stable")
-        rev[ti, :n] = rk[m][:, 0][order]
-        cols[ti, :n] = rc[m][order]
-        counts[ti] = n
-    specs = tablet_specs(mesh)
-    put = lambda arr, sp: jax.device_put(arr, NamedSharding(mesh, sp))
-    return DistStore(
-        rev_ts=put(rev, specs["rev_ts"]),
-        cols=put(cols, specs["cols"]),
-        counts=put(counts, specs["counts"]),
-        mesh=mesh,
+    # The plane's flush triggers are exact per tablet (host-side fill
+    # mirror), so fixed per-tablet buffers suffice: a tablet majors every
+    # max_runs * mem_rows of ITS OWN rows — run-slab memory stays
+    # O(T * max_runs * mem_rows), independent of replay size.
+    plane = DistIngestPlane(
+        mesh,
+        store.schema.n_fields,
+        capacity=cap,
+        tablets_per_device=tablets_per_device,
+        mem_rows=8192,
+        max_runs=8,
+        append_rows=2048,
     )
+    plane.ingest(rk[:, 0].astype(np.int32), rc, assign.astype(np.int32))
+    dist = plane.publish()
+    overflow = int(plane.telemetry()["overflow"].sum())
+    if overflow:
+        # An explicitly undersized capacity must fail loudly, exactly as
+        # the pre-plane scatter implementation did.
+        raise ValueError(f"tablet overflow: {overflow} rows over capacity {cap}")
+    return dist
 
 
 def _program_eval(cols, opcodes, arg0, arg1, codesets):
@@ -140,32 +156,37 @@ def _program_eval(cols, opcodes, arg0, arg1, codesets):
 
 def build_scan_step(mesh: Mesh, n_fields: int, prog_len: int, set_shape: Tuple[int, int], top_k: int = 128):
     """Jitted distributed scan: (store, program, t-range) -> (global count,
-    per-tablet top-k newest matches). One invocation per adaptive batch."""
+    per-tablet top-k newest matches). One invocation per adaptive batch.
+    Each device vmaps over its local tablets (tablets_per_device may
+    exceed 1 — the ingest plane's W x T sweeps size T independently of
+    the mesh), then psums across the mesh."""
     axes = tuple(mesh.axis_names)
     specs = tablet_specs(mesh)
 
     def tablet_scan(rev_ts, cols, counts, opcodes, arg0, arg1, codesets, rts_lo, rts_hi):
-        # Local tablet: (1, R), (1, R, F), (1,) after shard_map slicing.
-        rev_l = rev_ts[0]
-        cols_l = cols[0]
-        n = counts[0]
-        r = rev_l.shape[0]
-        # Range restriction on sorted rev_ts: [lo, hi) via searchsorted.
-        a = jnp.searchsorted(rev_l, rts_lo, side="left")
-        b = jnp.searchsorted(rev_l, rts_hi, side="left")
-        idx = jnp.arange(r, dtype=jnp.int32)
-        in_range = (idx >= a) & (idx < b) & (idx < n)
-        hit = _program_eval(cols_l, opcodes, arg0, arg1, codesets) & in_range
-        count = hit.sum(dtype=jnp.int32)
-        # Top-k newest matches (smallest rev_ts == newest; rows sorted).
-        rank = jnp.where(hit, idx, r)
-        top = jnp.sort(rank)[:top_k]
-        valid = top < r
-        safe = jnp.clip(top, 0, r - 1)
-        out_ts = jnp.where(valid, rev_l[safe], INVALID_TS)
-        out_cols = jnp.where(valid[:, None], cols_l[safe], -1)
-        total = jax.lax.psum(count, axes)
-        return total, out_ts[None], out_cols[None]
+        # Local slab: (Tl, R), (Tl, R, F), (Tl,) after shard_map slicing.
+        r = rev_ts.shape[1]
+
+        def one(rev_l, cols_l, n):
+            # Range restriction on sorted rev_ts: [lo, hi) via searchsorted.
+            a = jnp.searchsorted(rev_l, rts_lo, side="left")
+            b = jnp.searchsorted(rev_l, rts_hi, side="left")
+            idx = jnp.arange(r, dtype=jnp.int32)
+            in_range = (idx >= a) & (idx < b) & (idx < n)
+            hit = _program_eval(cols_l, opcodes, arg0, arg1, codesets) & in_range
+            count = hit.sum(dtype=jnp.int32)
+            # Top-k newest matches (smallest rev_ts == newest; rows sorted).
+            rank = jnp.where(hit, idx, r)
+            top = jnp.sort(rank)[:top_k]
+            valid = top < r
+            safe = jnp.clip(top, 0, r - 1)
+            out_ts = jnp.where(valid, rev_l[safe], INVALID_TS)
+            out_cols = jnp.where(valid[:, None], cols_l[safe], -1)
+            return count, out_ts, out_cols
+
+        count_l, out_ts, out_cols = jax.vmap(one)(rev_ts, cols, counts)
+        total = jax.lax.psum(count_l.sum(dtype=jnp.int32), axes)
+        return total, out_ts, out_cols
 
     smapped = shard_map(
         tablet_scan,
@@ -205,44 +226,52 @@ def build_aggregate_step(
 
     def tablet_agg(rev_ts, cols, counts, opcodes, arg0, arg1, codesets,
                    value_table, rts_lo, rts_hi, bucket_lo):
-        rev_l = rev_ts[0]
-        cols_l = cols[0]
-        n = counts[0]
-        r = rev_l.shape[0]
-        a = jnp.searchsorted(rev_l, rts_lo, side="left")
-        b = jnp.searchsorted(rev_l, rts_hi, side="left")
-        idx = jnp.arange(r, dtype=jnp.int32)
-        in_range = (idx >= a) & (idx < b) & (idx < n)
-        hit = _program_eval(cols_l, opcodes, arg0, arg1, codesets) & in_range
-        gid = jnp.zeros((r,), jnp.int32)
-        for fid, stride in zip(fids, strides):
-            gid = gid + cols_l[:, fid] * jnp.int32(stride)
-        if bucket_s is not None:
-            ts_l = jnp.int32(keypack.TS_MAX) - rev_l
-            gid = gid + ts_l // jnp.int32(bucket_s) - bucket_lo
-        # Padded/out-of-range rows can carry junk codes: clamp, their
-        # contribution is masked to the identity anyway.
-        gid = jnp.clip(gid, 0, n_groups - 1)
-        if value_fid is not None:
-            codes = jnp.clip(cols_l[:, value_fid], 0, value_table.shape[0] - 1)
-            val = value_table[codes]
-        else:
-            val = jnp.ones((r,), jnp.int32)
-        contrib = jnp.where(hit, val, jnp.int32(identity))
+        r = rev_ts.shape[1]
+
+        def one(rev_l, cols_l, n):
+            a = jnp.searchsorted(rev_l, rts_lo, side="left")
+            b = jnp.searchsorted(rev_l, rts_hi, side="left")
+            idx = jnp.arange(r, dtype=jnp.int32)
+            in_range = (idx >= a) & (idx < b) & (idx < n)
+            hit = _program_eval(cols_l, opcodes, arg0, arg1, codesets) & in_range
+            gid = jnp.zeros((r,), jnp.int32)
+            for fid, stride in zip(fids, strides):
+                gid = gid + cols_l[:, fid] * jnp.int32(stride)
+            if bucket_s is not None:
+                ts_l = jnp.int32(keypack.TS_MAX) - rev_l
+                gid = gid + ts_l // jnp.int32(bucket_s) - bucket_lo
+            # Padded/out-of-range rows can carry junk codes: clamp, their
+            # contribution is masked to the identity anyway.
+            gid = jnp.clip(gid, 0, n_groups - 1)
+            if value_fid is not None:
+                codes = jnp.clip(cols_l[:, value_fid], 0, value_table.shape[0] - 1)
+                val = value_table[codes]
+            else:
+                val = jnp.ones((r,), jnp.int32)
+            if op in ("count", "sum"):
+                # Sums accumulate in int64, matching the host iterator
+                # stack — a tablet of large int32 values must not wrap
+                # before the psum (min/max are order statistics).
+                contrib = jnp.where(hit, val.astype(jnp.int64), jnp.int64(identity))
+                aggs = jax.ops.segment_sum(contrib, gid, num_segments=n_groups)
+            elif op == "min":
+                contrib = jnp.where(hit, val, jnp.int32(identity))
+                aggs = jax.ops.segment_min(contrib, gid, num_segments=n_groups)
+            else:
+                contrib = jnp.where(hit, val, jnp.int32(identity))
+                aggs = jax.ops.segment_max(contrib, gid, num_segments=n_groups)
+            cnts = jax.ops.segment_sum(hit.astype(jnp.int64), gid, num_segments=n_groups)
+            return aggs, cnts
+
+        # Local tablets first (vmap + reduce), then one mesh collective.
+        aggs_l, cnts_l = jax.vmap(one)(rev_ts, cols, counts)
         if op in ("count", "sum"):
-            aggs = jax.ops.segment_sum(contrib, gid, num_segments=n_groups)
+            aggs = jax.lax.psum(aggs_l.sum(axis=0), axes)
         elif op == "min":
-            aggs = jax.ops.segment_min(contrib, gid, num_segments=n_groups)
+            aggs = jax.lax.pmin(aggs_l.min(axis=0), axes)
         else:
-            aggs = jax.ops.segment_max(contrib, gid, num_segments=n_groups)
-        cnts = jax.ops.segment_sum(hit.astype(jnp.int32), gid, num_segments=n_groups)
-        if op in ("count", "sum"):
-            aggs = jax.lax.psum(aggs, axes)
-        elif op == "min":
-            aggs = jax.lax.pmin(aggs, axes)
-        else:
-            aggs = jax.lax.pmax(aggs, axes)
-        cnts = jax.lax.psum(cnts, axes)
+            aggs = jax.lax.pmax(aggs_l.max(axis=0), axes)
+        cnts = jax.lax.psum(cnts_l.sum(axis=0), axes)
         return aggs, cnts
 
     smapped = shard_map(
@@ -262,13 +291,33 @@ def build_aggregate_step(
 
 class DistQueryProcessor:
     """Adaptive-batched queries over the mesh — Algs 1-2 driving the
-    distributed scan step."""
+    distributed scan step.
 
-    def __init__(self, store: EventStore, dist: DistStore, top_k: int = 128):
+    With `plane=` (a DistIngestPlane), every query first syncs to the
+    plane's latest published base — rows written through DistBatchWriter
+    become query-visible with no host round trip (publish is device-side
+    compaction only, and a no-op when nothing was ingested)."""
+
+    def __init__(
+        self,
+        store: EventStore,
+        dist: Optional[DistStore] = None,
+        top_k: int = 128,
+        plane=None,
+    ):
+        if dist is None:
+            if plane is None:
+                raise ValueError("need dist= or plane=")
+            dist = plane.publish()
         self.store = store
         self.dist = dist
+        self.plane = plane
         self.top_k = top_k
         self._step_cache: Dict[Tuple[int, Tuple[int, int]], object] = {}
+
+    def _sync(self) -> None:
+        if self.plane is not None:
+            self.dist = self.plane.publish()
 
     def _step(self, prog: FilterProgram):
         from ..kernels.filter_scan.ops import pad_program
@@ -284,6 +333,7 @@ class DistQueryProcessor:
     def scan_range(self, tree, t0: int, t1: int):
         """One range scan across all tablets. Returns (global_count,
         top-k rows per tablet as (ts, cols) numpy arrays)."""
+        self._sync()
         prog = compile_tree(self.store, tree)
         step, (opc, a0, a1, cs) = self._step(prog)
         rts_lo = jnp.int32(keypack.rev_ts(t1))
@@ -326,6 +376,7 @@ class DistQueryProcessor:
         the distributed lowering of QueryProcessor.aggregate(). Returns the
         already-merged (psum'd) per-group result; only groups with at least
         one matching row are materialized host-side."""
+        self._sync()
         grouping = resolve_grouping(self.store, spec, t0, t1)
         prog = compile_tree(self.store, tree)
         step, (opc, a0, a1, cs) = self._agg_step(prog, grouping)
@@ -339,7 +390,7 @@ class DistQueryProcessor:
             jnp.int32(keypack.rev_ts(t1)), jnp.int32(keypack.rev_ts(t0) + 1),
             jnp.int32(grouping.bucket_lo),
         )
-        aggs = np.asarray(aggs)
+        aggs = np.asarray(aggs).astype(np.int64)
         cnts = np.asarray(cnts)
         live = cnts > 0
         gids = np.flatnonzero(live).astype(np.int64)

@@ -68,6 +68,11 @@ class BatchWriter:
         if self._rows >= self.batch_rows:
             self.flush()
 
+    def _write(self, ts: np.ndarray, values: Dict[str, List[str]]) -> float:
+        """Sink one flushed batch; returns seconds blocked on compaction.
+        Subclasses (DistBatchWriter) retarget this at the device plane."""
+        return self.store.ingest(ts, values)
+
     def flush(self) -> None:
         if not self._rows:
             return
@@ -79,7 +84,7 @@ class BatchWriter:
         n = len(ts)
         self._ts, self._vals, self._rows = [], [], 0
         t0 = time.perf_counter()
-        blocked = self.store.ingest(ts, merged)
+        blocked = self._write(ts, merged)
         dt = time.perf_counter() - t0
         m = self.metrics
         m.rows += n

@@ -168,7 +168,7 @@ class AggregateBlock:
 
     shard: int  # -1: combined across shards in one dispatch
     gids: np.ndarray  # int64 [n]
-    values: np.ndarray  # int32 [n] aggregate per group
+    values: np.ndarray  # int64 [n] aggregate per group (overflow-safe sums)
     counts: np.ndarray  # int32 [n] matching rows per group
 
     @property
@@ -227,8 +227,7 @@ def merge_aggregate_blocks(
     blocks = [b for b in blocks if b.n]
     if not blocks:
         e = np.empty(0, np.int64)
-        z = np.empty(0, np.int32)
-        return AggregateResult(grouping, e, z, z.copy())
+        return AggregateResult(grouping, e, e.copy(), np.empty(0, np.int32))
     gids = np.concatenate([b.gids for b in blocks])
     vals = np.concatenate([b.values for b in blocks])
     cnts = np.concatenate([b.counts for b in blocks])
@@ -238,7 +237,9 @@ def merge_aggregate_blocks(
     starts = np.flatnonzero(heads)
     op = grouping.spec.op
     if op in ("count", "sum"):
-        mvals = np.add.reduceat(vals.astype(np.int64), starts).astype(np.int32)
+        # int64 stays int64: the merged totals are the accumulators the
+        # combiner exists to keep overflow-safe.
+        mvals = np.add.reduceat(vals.astype(np.int64), starts)
     elif op == "min":
         mvals = np.minimum.reduceat(vals, starts)
     else:
@@ -333,8 +334,7 @@ class CombinerIterator(ScanIterator):
     def combine_rows(self, keys: np.ndarray, cols: np.ndarray, shard: int = -1) -> AggregateBlock:
         if len(keys) == 0:
             e = np.empty(0, np.int64)
-            z = np.empty(0, np.int32)
-            return AggregateBlock(shard, e, z, z.copy())
+            return AggregateBlock(shard, e, e.copy(), np.empty(0, np.int32))
         _, rts, _ = keypack.unpack_event_key(keys)
         ts = keypack.unrev_ts(rts)
         gids = self.grouping.group_ids(ts, cols)

@@ -148,7 +148,7 @@ class EventStore:
             akeys = np.concatenate(akeys_all)
             ukeys, counts = np.unique(akeys, return_counts=True)
             blocked += self.agg_tablet.insert(
-                ukeys, counts.astype(np.int32)[:, None]
+                ukeys, counts.astype(np.int64)[:, None]
             )
         with self._rows_lock:
             self.total_rows += n

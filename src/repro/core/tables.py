@@ -15,6 +15,9 @@ be written to disk"):
 Scans search every run (runs are few: <= max_runs). All data-plane compute
 (sort, merge, searchsorted, filter, combine) runs under jit; host Python
 only orchestrates, exactly as Accumulo's Java orchestrates its iterators.
+Major compaction merges with the dedicated k-way rank kernel
+(kernels/merge_runs) — the inputs are already sorted, so the former
+concatenate + argsort re-sort is retired.
 """
 from __future__ import annotations
 
@@ -27,6 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import keypack
+from ..kernels.merge_runs import merge_sorted_runs
 
 KEY_PAD = np.iinfo(np.int64).max  # +inf key: pads sorted runs
 
@@ -39,25 +43,15 @@ def _sort_run(keys, cols):
 
 
 @jax.jit
-def _merge_runs(keys_list, cols_list):
-    """k-way merge of sorted runs — major compaction. Concatenate + sort is
-    O(n log n) but runs fully on-device; a dedicated merge kernel is a noted
-    perf follow-up (the paper's costs are dominated by the write path)."""
-    keys = jnp.concatenate(keys_list)
-    cols = jnp.concatenate(cols_list)
-    order = jnp.argsort(keys)
-    return keys[order], cols[order]
-
-
-@jax.jit
 def _combine_sorted(keys, vals):
     """Combiner (paper §II: 'aggregated on the server side using Accumulo's
     combiner framework'): sum vals of equal adjacent keys in a sorted run.
-    Returns (unique_keys_padded, summed_vals, n_unique)."""
+    Accumulates in int64 — long-running ingest must not wrap 32-bit counts.
+    Returns (unique_keys_padded, summed_vals int64, n_unique)."""
     n = keys.shape[0]
     is_head = jnp.concatenate([jnp.ones((1,), bool), keys[1:] != keys[:-1]])
     seg = jnp.cumsum(is_head) - 1
-    sums = jax.ops.segment_sum(vals, seg, num_segments=n)
+    sums = jax.ops.segment_sum(vals.astype(jnp.int64), seg, num_segments=n)
     n_unique = is_head.sum()
     # Scatter unique keys to the front, pad the tail.
     idx = jnp.where(is_head, seg, n - 1)
@@ -96,11 +90,13 @@ class Tablet:
         width: int,
         flush_rows: int = 32768,
         max_runs: int = 8,
+        col_dtype=np.int32,
     ):
         self.shard = shard
         self.width = width
         self.flush_rows = flush_rows
         self.max_runs = max_runs
+        self.col_dtype = np.dtype(col_dtype)
         self.runs: List[SortedRun] = []
         self._mem_keys: List[np.ndarray] = []
         self._mem_cols: List[np.ndarray] = []
@@ -122,7 +118,7 @@ class Tablet:
         blocked = 0.0
         with self.lock:
             self._mem_keys.append(np.asarray(keys, dtype=np.int64))
-            self._mem_cols.append(np.asarray(cols, dtype=np.int32))
+            self._mem_cols.append(np.asarray(cols, dtype=self.col_dtype))
             self._mem_rows += len(keys)
             self.rows_ingested += len(keys)
             if self._mem_rows >= self.flush_rows:
@@ -145,11 +141,8 @@ class Tablet:
         self.minor_compactions += 1
 
     def _major_compact(self) -> None:
-        k, c = _merge_runs(
-            [jnp.asarray(r.keys) for r in self.runs],
-            [jnp.asarray(r.cols) for r in self.runs],
-        )
-        self.runs = [SortedRun(np.asarray(k), np.asarray(c))]
+        k, c = merge_sorted_runs([(r.keys, r.cols) for r in self.runs])
+        self.runs = [SortedRun(k, c)]
         self.major_compactions += 1
 
     def flush(self) -> None:
@@ -192,7 +185,7 @@ class Tablet:
         if not parts_k:
             return (
                 np.empty(0, np.int64),
-                np.empty((0, self.width), np.int32),
+                np.empty((0, self.width), self.col_dtype),
             )
         keys = np.concatenate(parts_k)
         cols = np.concatenate(parts_c)
@@ -203,22 +196,24 @@ class Tablet:
 
 
 class AggregateTablet(Tablet):
-    """Aggregate table tablet: cols = [count]. Major compaction additionally
-    combines (sums) duplicate keys, matching Accumulo's combiner-on-compaction
-    semantics."""
+    """Aggregate table tablet: cols = [count], int64 — aggregate counts
+    accumulate for the life of the store and must not wrap at 2^31 rows.
+    Major compaction additionally combines (sums) duplicate keys, matching
+    Accumulo's combiner-on-compaction semantics."""
 
     def __init__(self, shard: int, **kw):
+        kw.setdefault("col_dtype", np.int64)
         super().__init__(shard, width=1, **kw)
 
     def _major_compact(self) -> None:
-        k, c = _merge_runs(
-            [jnp.asarray(r.keys) for r in self.runs],
-            [jnp.asarray(r.cols) for r in self.runs],
-        )
-        ukeys, sums, n_unique = _combine_sorted(k, c[:, 0])
+        k, c = merge_sorted_runs([(r.keys, r.cols) for r in self.runs])
+        ukeys, sums, n_unique = _combine_sorted(jnp.asarray(k), jnp.asarray(c[:, 0]))
         n = int(n_unique)
         self.runs = [
-            SortedRun(np.asarray(ukeys)[:n], np.asarray(sums)[:n, None].astype(np.int32))
+            SortedRun(
+                np.asarray(ukeys)[:n],
+                np.asarray(sums)[:n, None].astype(self.col_dtype),
+            )
         ]
         self.major_compactions += 1
 
@@ -226,4 +221,4 @@ class AggregateTablet(Tablet):
         """Total count over an aggregate-key range (combines across runs +
         any not-yet-combined duplicates)."""
         _, cols = self.scan_range(lo, hi)
-        return int(cols[:, 0].sum()) if cols.size else 0
+        return int(cols[:, 0].astype(np.int64).sum()) if cols.size else 0

@@ -81,8 +81,13 @@ def combine_scan(
     prog:       residual FilterProgram, or None for match-all.
     op:         'count' | 'sum' | 'min' | 'max'.
 
-    Returns (unique group keys, aggregates, match counts), all restricted
-    to groups with count > 0 — filtered-out groups never leave the server.
+    Returns (unique group keys, aggregates int64, match counts), all
+    restricted to groups with count > 0 — filtered-out groups never leave
+    the server. Sum/count aggregates accumulate in int64 across tiles and
+    blocks; the Pallas kernel's tile-local partials are int32, which is
+    exact as long as one BLOCK-row tile cannot wrap (|value| < 2^31/BLOCK
+    per row — always true for count, whose values are 1s). Sums over
+    larger values route to the int64 jnp reference automatically.
     """
     op_kind = OPS[op]
     group_keys = np.asarray(group_keys, dtype=np.int64)
@@ -91,7 +96,7 @@ def combine_scan(
     if n == 0:
         return (
             np.empty(0, np.int64),
-            np.empty(0, np.int32),
+            np.empty(0, np.int64),
             np.empty(0, np.int32),
         )
     if op == "count":
@@ -103,6 +108,14 @@ def combine_scan(
     hi, lo = split_key_lanes(group_keys)
     if backend == "auto":
         backend = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if (
+        backend == "pallas"
+        and op == "sum"
+        and values.size
+        and int(np.abs(values, dtype=np.int64).max()) > (2**31 - 1) // BLOCK
+    ):
+        # A single tile's int32 partial could wrap: use the int64 ref.
+        backend = "ref"
 
     if backend == "ref":
         # Pow2-bucket rows to bound retraces (adaptive batching varies n
@@ -135,7 +148,9 @@ def combine_scan(
             op_kind=op_kind, interpret=interpret,
         )
         heads = np.asarray(heads).copy()
-        aggs = np.asarray(aggs).copy()
+        # Widen before the stitch: cross-tile accumulation must be int64
+        # (tile-local int32 partials are bounded by BLOCK rows each).
+        aggs = np.asarray(aggs).astype(np.int64)
         cnts = np.asarray(cnts).copy()
         _stitch(group_keys, heads, aggs, cnts, n, op_kind)
         heads = heads[:n]
@@ -143,4 +158,4 @@ def combine_scan(
         cnts = cnts[:n]
 
     keep = heads & (cnts > 0)
-    return group_keys[keep], aggs[keep], cnts[keep]
+    return group_keys[keep], np.asarray(aggs[keep], np.int64), cnts[keep]

@@ -9,7 +9,7 @@ import jax
 import jax.numpy as jnp
 
 from ..program_eval import program_eval_rows
-from .combine_scan import _IDENTITY, _segment_agg
+from .combine_scan import _IDENTITY, OP_SUM, _segment_agg
 
 
 @functools.partial(jax.jit, static_argnames=("op_kind",))
@@ -23,8 +23,11 @@ def combine_scan_ref(hi, lo, val, cols, opcodes, arg0, arg1, codesets, *, op_kin
     heads = (hi != prev_hi) | (lo != prev_lo)
     heads = heads.at[0].set(True)
     seg_id = jnp.cumsum(heads.astype(jnp.int32)) - 1
-    identity = jnp.int32(_IDENTITY[op_kind])
-    contrib = jnp.where(mask, val.astype(jnp.int32), identity)
+    # Sums accumulate in int64 (unbounded run lengths must not wrap 32-bit
+    # counts); min/max are order statistics and stay in the input's range.
+    acc_dtype = jnp.int64 if op_kind == OP_SUM else jnp.int32
+    identity = jnp.asarray(_IDENTITY[op_kind], acc_dtype)
+    contrib = jnp.where(mask, val.astype(acc_dtype), identity)
     seg_agg = _segment_agg(contrib, seg_id, n, op_kind)
     seg_cnt = jax.ops.segment_sum(mask.astype(jnp.int32), seg_id, num_segments=n)
     aggs = jnp.where(heads, jnp.take(seg_agg, seg_id, axis=0), identity)

@@ -1,0 +1,119 @@
+"""Public k-way sorted-run merge — major compaction's data plane.
+
+merge_sorted_runs: host entry point (numpy in/out) used by tables.py
+tablet compaction on 64-bit packed keys. merge_sorted_device: traceable
+form used per tablet inside the dist_ingest shard_map compaction program
+on 32-bit rev_ts keys. Both compute output ranks (Pallas kernel / jnp
+reference — identical results, asserted in tests) and scatter keys plus
+payload columns in one pass; the payload never enters the rank kernel.
+
+Backend policy matches the other store kernels: jnp reference on CPU,
+Pallas on TPU, with a documented VMEM cap (the full key lanes stay
+resident) falling back to the reference.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..common import split_key_lanes
+from .merge_runs import merge_ranks_pallas
+from .ref import merge_ranks_keys, merge_ranks_ref
+
+# 2 lanes * 4 B * 1M keys = 8 MiB resident in VMEM.
+MAX_VMEM_KEYS = 1 << 20
+
+_SENTINEL64 = np.iinfo(np.int64).max
+
+
+def _pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def merge_sorted_runs(
+    runs: Sequence[Tuple[np.ndarray, np.ndarray]], backend: str = "auto"
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Merge K sorted (keys int64 [n_i], cols [n_i, w]) runs into one.
+
+    Keys ascend within each run (duplicates allowed — the merge is stable
+    in run order, matching the concat+stable-argsort it replaces). Returns
+    (keys [n], cols [n, w]) with n = sum n_i.
+    """
+    runs = [(np.asarray(k, np.int64), np.asarray(c)) for k, c in runs]
+    runs = [(k, c) for k, c in runs if k.size]
+    if not runs:
+        return np.empty(0, np.int64), np.empty((0, 0), np.int32)
+    if len(runs) == 1:
+        return runs[0]
+    k = len(runs)
+    w = runs[0][1].shape[1]
+    col_dtype = runs[0][1].dtype
+    n_total = sum(kk.size for kk, _ in runs)
+
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if backend != "ref" and k * _pow2(max(kk.size for kk, _ in runs)) > MAX_VMEM_KEYS:
+        backend = "ref"
+
+    if backend == "ref":
+        # CPU: the same rank computation with unpadded numpy searchsorted
+        # (per-run lengths kept exact — no sentinel work, no dispatch).
+        ranks = [
+            np.arange(kk.size, dtype=np.int64)
+            + sum(
+                np.searchsorted(other, kk, side="right" if i < j else "left")
+                for i, (other, _) in enumerate(runs)
+                if i != j
+            )
+            for j, (kk, _) in enumerate(runs)
+        ]
+        out_keys = np.empty(n_total, np.int64)
+        out_cols = np.empty((n_total, w), col_dtype)
+        for (kk, cc), rk in zip(runs, ranks):
+            out_keys[rk] = kk
+            out_cols[rk] = cc
+        return out_keys, out_cols
+
+    # Pallas: sentinel-pad to a (k, pow2) grid of (hi, lo) lanes.
+    r = _pow2(max(kk.size for kk, _ in runs))
+    keys_pad = np.full((k, r), _SENTINEL64, np.int64)
+    cols_pad = np.zeros((k, r, w), col_dtype)
+    for i, (kk, cc) in enumerate(runs):
+        keys_pad[i, : kk.size] = kk
+        cols_pad[i, : kk.size] = cc
+    hi, lo = split_key_lanes(keys_pad.reshape(-1))
+    interpret = jax.default_backend() != "tpu"
+    ranks = np.asarray(
+        merge_ranks_pallas(
+            jnp.asarray(hi.reshape(k, r)), jnp.asarray(lo.reshape(k, r)), interpret=interpret
+        )
+    )
+    # Scatter epilogue: ranks are a permutation of [0, k*r); sentinels
+    # land as a contiguous tail past n_total and are sliced away.
+    flat = ranks.reshape(-1)
+    out_keys = np.empty(k * r, np.int64)
+    out_keys[flat] = keys_pad.reshape(-1)
+    out_cols = np.empty((k * r, w), col_dtype)
+    out_cols[flat] = cols_pad.reshape(-1, w)
+    return out_keys[:n_total], out_cols[:n_total]
+
+
+def merge_sorted_device(run_keys, run_cols):
+    """Traceable k-way merge for device tablets (jit / shard_map safe).
+
+    run_keys (K, R) int32: each row sorted ascending, padded with the
+    int32-max sentinel. run_cols (K, R, F) payload. Returns the merged
+    (K*R,) keys and (K*R, F) cols — sentinels as a contiguous tail.
+    """
+    k, r = run_keys.shape
+    f = run_cols.shape[-1]
+    ranks = merge_ranks_keys(run_keys).reshape(-1)
+    out_keys = jnp.zeros((k * r,), run_keys.dtype).at[ranks].set(run_keys.reshape(-1))
+    out_cols = jnp.zeros((k * r, f), run_cols.dtype).at[ranks].set(run_cols.reshape(-1, f))
+    return out_keys, out_cols

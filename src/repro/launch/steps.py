@@ -17,6 +17,7 @@ from typing import Any, Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental import disable_x64
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..configs.base import SHAPES, ModelConfig, ShapeConfig
@@ -81,7 +82,15 @@ def cache_shapes(cfg: ModelConfig, shape: ShapeConfig) -> PyTree:
 class _CtxJit:
     """jax.jit is lazy — tracing happens at .lower()/first call, which may
     be far from where the step was built. This wrapper re-enters the
-    sharding context at trace time so dist_ctx.constrain() hints are live."""
+    sharding context at trace time so dist_ctx.constrain() hints are live.
+
+    Tracing also runs with x64 disabled: the store layer enables x64
+    globally, under which layer-scan loop counters lower to s64 while the
+    SPMD partitioner's shard-offset arithmetic stays s32 — the transposed
+    scan's dynamic_update_slice then fails HLO verification with a mixed
+    s64/s32 compare. Every tensor in the model/optimizer step is explicitly
+    32-bit (or bf16), so tracing x64-off only pins index dtypes to s32,
+    making both compare operands a common dtype."""
 
     def __init__(self, fn, mesh, rules):
         self._fn = fn
@@ -89,11 +98,11 @@ class _CtxJit:
         self._rules = rules
 
     def lower(self, *args, **kw):
-        with dist_ctx.sharding_context(self._mesh, self._rules):
+        with dist_ctx.sharding_context(self._mesh, self._rules), disable_x64():
             return self._fn.lower(*args, **kw)
 
     def __call__(self, *args, **kw):
-        with dist_ctx.sharding_context(self._mesh, self._rules):
+        with dist_ctx.sharding_context(self._mesh, self._rules), disable_x64():
             return self._fn(*args, **kw)
 
 

@@ -63,7 +63,10 @@ SCRIPT = textwrap.dedent(
     built_d = build_step(cfg, mesh, shape_d)
     lowered = built_d.fn.lower(*built_d.abstract_args)
     compiled = lowered.compile()
-    out["decode_flops"] = compiled.cost_analysis().get("flops", 0.0)
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):  # older jax: one dict per device
+        ca = ca[0]
+    out["decode_flops"] = ca.get("flops", 0.0)
 
     print("RESULT " + json.dumps(out))
     """

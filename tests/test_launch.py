@@ -43,12 +43,59 @@ def test_cache_shapes_windowed_and_ssm():
     assert c[5]["sa"]["k"].shape == (9, 1, 524288, 32, 80)
 
 
-def test_roofline_report_reads_artifacts():
+def _minimal_dryrun_record(arch: str, shape: str, mesh: str) -> dict:
+    """Format-faithful stand-in for one dryrun.run_cell() artifact — the
+    fields roofline.load/table/roofline_fraction actually read."""
+    return {
+        "arch": arch,
+        "shape": shape,
+        "mesh": mesh,
+        "n_chips": 256,
+        "memory": {"peak_bytes": 8 * 2**30},
+        "cost": {"flops_per_device": 1.0e12, "xla_raw_flops": 1.2e12},
+        "collectives": {"total_bytes": 1.0e9, "raw_bytes_loop_once": 1.0e9},
+        "roofline": {
+            "compute_s": 2.0e-3,
+            "memory_s": 1.0e-3,
+            "collective_s": 5.0e-4,
+            "bottleneck": "compute_s",
+        },
+        "model_flops_per_device": 0.8e12,
+        "useful_flop_ratio": 0.8,
+    }
+
+
+def test_roofline_report_reads_artifacts(tmp_path):
+    """Report assembly over a generated minimal fixture (a fresh clone has
+    no experiments/dryrun — the full sweep takes hours; the report code is
+    what this covers, not the sweep)."""
+    import json
+
     from repro.launch.roofline import load
 
-    results = load("experiments/dryrun")
-    assert len(results) >= 60
+    cells = plan_cells()
+    for arch, shape, mesh in cells:
+        rec = _minimal_dryrun_record(arch, shape, mesh)
+        (tmp_path / f"{arch}__{shape}__{mesh}.json").write_text(json.dumps(rec))
+    # FAIL-prefixed artifacts must be skipped by load().
+    (tmp_path / "FAIL__x__y__z.json").write_text("{}")
+    results = load(str(tmp_path))
+    assert len(results) == len(cells) >= 60
     lines = table(results)
     assert any("gemma2-9b" in l for l in lines)
     rec = next(iter(results.values()))
     assert roofline_fraction(rec) is None or roofline_fraction(rec) >= 0
+
+
+def test_roofline_report_real_artifacts_if_present():
+    """When a real dry-run sweep has been recorded, the report must still
+    assemble from it (guarded: fresh clones have no artifacts)."""
+    import pytest
+
+    from repro.launch.roofline import load
+
+    results = load("experiments/dryrun")
+    if not results:
+        pytest.skip("no experiments/dryrun artifacts in this checkout")
+    lines = table(results)
+    assert len(lines) > 2
