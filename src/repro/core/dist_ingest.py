@@ -1,4 +1,5 @@
-"""Distributed ingest plane — writable device-resident LSM tablets.
+"""Distributed ingest plane — writable device-resident LSM tablets for
+ALL THREE of the paper's tables.
 
 The paper's headline experiment (§IV-A, Figs 3-4) is ingest scalability vs
 client processes x tablet servers; until this module the mesh data plane
@@ -12,29 +13,56 @@ programs over device-resident state:
              scatter-appends them into its memtable slab
     minor    per-tablet memtable sort into the next sorted-run slot
     major    k-way merge of runs + base via the merge_runs rank kernel
-             (kernels/merge_runs) into a single sorted base run —
+             (kernels/merge_runs, Pallas on TPU / jnp reference on CPU) —
              BLOCKING the writer that tripped it, which is the paper's
              backpressure, reproduced on the mesh
 
-Per-tablet device counters (rows, minor/major compactions, overflow)
-record the blocked-writer dynamics; host wall-clock blocked-seconds
-accrue to each writer's IngestMetrics exactly as in the host path.
+Each tablet owns three table FAMILIES, the paper's per-source schema
+(§II, Fig 1) maintained in lockstep through the same programs:
 
-publish() folds everything into the base run and returns a DistStore
-view of it — the incremental-update path: freshly ingested rows become
-visible to DistQueryProcessor without a host round trip or re-scatter
-(the compactions are device programs; no row ever returns to the host).
+    ev   event table      key = rev_ts (int32), payload = field codes
+    ix   index table      key = field|value|rev_ts packed int64 — the
+                          D4M-style transpose table; postings for one
+                          (field, value) are a contiguous sorted rev_ts
+                          range, which is what the distributed index
+                          query path binary-searches
+    ag   aggregate table  key = field|value|time_bucket packed int64,
+                          payload = count (int64) — duplicate keys are
+                          summed at major compaction (Accumulo's
+                          combiner-on-compaction); the query planner
+                          reads densities from it with a psum
+
+Index and aggregate entries are SYNTHESIZED ON DEVICE inside the append
+program from the event rows themselves (writers ship only events):
+index maintenance rides the ingest path, never a post-hoc build — the
+index is live at publish() with no rebuild, per the 100M-inserts/sec
+study's design (arXiv:1406.4923).
+
+Per-tablet device counters (rows, minor/major compactions, per-family
+overflow) record the blocked-writer dynamics; host wall-clock blocked
+seconds accrue PER WRITER (each writer's own tripped-major drains), with
+the plane scalar kept as their sum — the paper's §IV-A per-client
+backpressure curve is directly plottable from telemetry().
+
+publish() folds everything into the base runs and returns a DistStore
+view of them — the incremental-update path: freshly ingested rows AND
+their index/aggregate entries become visible to DistQueryProcessor
+without a host round trip or re-scatter.
 
 Host-side flush triggers are exact with zero device syncs: tablet
 assignments are computed host-side, so a bincount per chunk mirrors the
 device memtable fills and run-slot counts precisely — compactions fire
-only when some tablet is actually full.
+only when some tablet is actually full. Index/aggregate slabs are sized
+n_indexed x the event slabs, so one mirror covers all three families
+(each event contributes exactly n_indexed entries to each).
 """
 from __future__ import annotations
 
+import itertools
 import threading
 import time
-from typing import Dict, Optional, Tuple
+from dataclasses import dataclass
+from typing import Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -46,8 +74,11 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from . import keypack
 from .dist_query import DistStore
 from .ingest import BatchWriter, IngestMetrics, check_shard_guidance
+from .store import DEFAULT_AGG_BUCKET_SECONDS
+from ..kernels.merge_runs.ops import _pow2
 
 REV_PAD = np.iinfo(np.int32).max  # +inf rev_ts sentinel (matches DistStore)
+KEY_PAD64 = np.iinfo(np.int64).max  # +inf packed-key sentinel (ix/ag)
 
 
 def _n_devices(mesh: Mesh) -> int:
@@ -64,11 +95,44 @@ def _linear_device_index(mesh: Mesh):
     return idx
 
 
+@dataclass(frozen=True)
+class _Family:
+    """One table family's static shape parameters. Every family shares the
+    tablet grid, run-slot count and compaction lifecycle; they differ in
+    key dtype, payload width, slab sizes, and whether duplicate keys are
+    combined (summed) at major compaction."""
+
+    name: str
+    key_dtype: np.dtype
+    sentinel: int
+    width: int
+    col_dtype: np.dtype
+    mem_rows: int
+    capacity: int
+    combine: bool = False
+
+
+def _combine_dup_keys(keys, vals, sentinel):
+    """Sum payloads of equal adjacent keys in a sorted (sentinel-tailed)
+    sequence and compact the unique keys to the front — the traceable form
+    of tables.py::_combine_sorted, used for the aggregate family's
+    combiner-on-compaction. Returns (ukeys, usums, n_unique)."""
+    n = keys.shape[0]
+    is_head = jnp.concatenate([jnp.ones((1,), bool), keys[1:] != keys[:-1]])
+    seg = jnp.cumsum(is_head.astype(jnp.int32)) - 1
+    sums = jax.ops.segment_sum(vals.astype(jnp.int64), seg, num_segments=n)
+    n_unique = (is_head & (keys != sentinel)).sum(dtype=jnp.int32)
+    # All members of a segment carry the same key, so the duplicate-index
+    # scatter is idempotent; the sentinel segment (if any) is the last.
+    ukeys = jnp.full((n,), sentinel, keys.dtype).at[seg].set(keys)
+    return ukeys, sums, n_unique
+
+
 class DistIngestPlane:
     """Device-resident LSM tablet grid + its jitted ingest/compaction
     programs. T = n_devices * tablets_per_device tablets, each with a
     memtable slab (mem_rows), max_runs sorted-run slots (mem_rows each)
-    and a base run (capacity rows)."""
+    and a base run (capacity rows) — per family (see module docstring)."""
 
     def __init__(
         self,
@@ -79,6 +143,9 @@ class DistIngestPlane:
         mem_rows: int = 4096,
         max_runs: int = 4,
         append_rows: int = 1024,
+        indexed_fids: Sequence[int] = (),
+        agg_bucket_s: int = DEFAULT_AGG_BUCKET_SECONDS,
+        kernel_backend: str = "auto",
     ):
         self.mesh = mesh
         self.axes = tuple(mesh.axis_names)
@@ -89,15 +156,22 @@ class DistIngestPlane:
         self.mem_rows = int(mem_rows)
         self.max_runs = int(max_runs)
         self.append_rows = int(min(append_rows, mem_rows))
+        self.indexed_fids = tuple(int(f) for f in indexed_fids)
+        self.agg_bucket_s = int(agg_bucket_s)
+        self.kernel_backend = kernel_backend
+        self.families: Tuple[_Family, ...] = self._make_families()
         self._steps: Dict[str, object] = {}
         # Exact host-side mirrors of the device memtable fills and run-slot
         # counts (see module docstring) — updated in lockstep with the
         # device programs' own guards, never read back from the device.
+        # One mirror serves all families: ix/ag fills are exactly
+        # n_indexed x the event fill per tablet.
         self._fill = np.zeros(self.n_tablets, np.int64)
         self._runs_host = np.zeros(self.n_tablets, np.int32)
         self._dirty = True
         self._published: Optional[DistStore] = None
-        self.blocked_seconds = 0.0  # aggregate; per-writer in IngestMetrics
+        self.blocked_seconds = 0.0  # sum over writers; per-writer below
+        self.blocked_by_writer: Dict[int, float] = {}
         # Concurrent DistBatchWriters (paper: many parallel ingest clients)
         # share one plane: the lock serializes state/counter updates, like
         # the host Tablet's lock. Writers blocked here while another's
@@ -105,211 +179,307 @@ class DistIngestPlane:
         self._lock = threading.Lock()
         self.state = self._init_state()
 
+    @classmethod
+    def for_store(cls, store, mesh: Mesh, capacity: int, **kw) -> "DistIngestPlane":
+        """Plane bound to a host store's schema: maintains index postings
+        and aggregate counts for the store's indexed fields, with the
+        store's aggregate bucketing (so host and dist densities agree)."""
+        kw.setdefault(
+            "indexed_fids", tuple(int(f) for f in store._indexed_field_ids)
+        )
+        kw.setdefault("agg_bucket_s", store.agg_bucket_seconds)
+        return cls(mesh, store.schema.n_fields, capacity, **kw)
+
+    # ----------------------------------------------------------- families
+    def _make_families(self) -> Tuple[_Family, ...]:
+        fams = [
+            _Family(
+                "ev", np.dtype(np.int32), REV_PAD, self.n_fields,
+                np.dtype(np.int32), self.mem_rows, self.capacity,
+            )
+        ]
+        n_idx = len(self.indexed_fids)
+        if n_idx:
+            fams.append(
+                _Family(
+                    "ix", np.dtype(np.int64), KEY_PAD64, 0,
+                    np.dtype(np.int32), n_idx * self.mem_rows, n_idx * self.capacity,
+                )
+            )
+            fams.append(
+                _Family(
+                    "ag", np.dtype(np.int64), KEY_PAD64, 1,
+                    np.dtype(np.int64), n_idx * self.mem_rows, n_idx * self.capacity,
+                    combine=True,
+                )
+            )
+        return tuple(fams)
+
     # ----------------------------------------------------------- state
-    def _specs(self) -> Dict[str, P]:
+    def _spec_of(self, name: str) -> P:
         ax = self.axes
-        return {
-            "mem_rts": P(ax, None),
-            "mem_cols": P(ax, None, None),
-            "mem_n": P(ax),
-            "run_rts": P(ax, None, None),
-            "run_cols": P(ax, None, None, None),
-            "run_n": P(ax, None),
-            "n_runs": P(ax),
-            "base_rts": P(ax, None),
-            "base_cols": P(ax, None, None),
-            "base_n": P(ax),
-            "rows": P(ax),
-            "minor": P(ax),
-            "major": P(ax),
-            "overflow": P(ax),
-        }
+        if name.endswith(("_mem_k", "_base_k")):
+            return P(ax, None)
+        if name.endswith(("_mem_c", "_base_c")):
+            return P(ax, None, None)
+        if name.endswith("_run_k"):
+            return P(ax, None, None)
+        if name.endswith("_run_c"):
+            return P(ax, None, None, None)
+        if name.endswith("_run_n"):
+            return P(ax, None)
+        return P(ax)  # *_mem_n, *_base_n, *_overflow, n_runs, rows, minor, major
+
+    def _specs(self, names) -> Dict[str, P]:
+        return {n: self._spec_of(n) for n in names}
 
     def _init_state(self) -> Dict[str, jax.Array]:
-        t, m, k, c, f = (
-            self.n_tablets, self.mem_rows, self.max_runs, self.capacity, self.n_fields,
-        )
-        host = {
-            "mem_rts": np.zeros((t, m), np.int32),
-            "mem_cols": np.zeros((t, m, f), np.int32),
-            "mem_n": np.zeros((t,), np.int32),
-            "run_rts": np.full((t, k, m), REV_PAD, np.int32),
-            "run_cols": np.zeros((t, k, m, f), np.int32),
-            "run_n": np.zeros((t, k), np.int32),
+        t, k = self.n_tablets, self.max_runs
+        host: Dict[str, np.ndarray] = {
             "n_runs": np.zeros((t,), np.int32),
-            "base_rts": np.full((t, c), REV_PAD, np.int32),
-            "base_cols": np.zeros((t, c, f), np.int32),
-            "base_n": np.zeros((t,), np.int32),
             "rows": np.zeros((t,), np.int64),
             "minor": np.zeros((t,), np.int32),
             "major": np.zeros((t,), np.int32),
-            "overflow": np.zeros((t,), np.int32),
         }
-        specs = self._specs()
+        for f in self.families:
+            p, m, c = f.name, f.mem_rows, f.capacity
+            host[f"{p}_mem_k"] = np.zeros((t, m), f.key_dtype)
+            host[f"{p}_mem_c"] = np.zeros((t, m, f.width), f.col_dtype)
+            host[f"{p}_mem_n"] = np.zeros((t,), np.int32)
+            host[f"{p}_run_k"] = np.full((t, k, m), f.sentinel, f.key_dtype)
+            host[f"{p}_run_c"] = np.zeros((t, k, m, f.width), f.col_dtype)
+            host[f"{p}_run_n"] = np.zeros((t, k), np.int32)
+            host[f"{p}_base_k"] = np.full((t, c), f.sentinel, f.key_dtype)
+            host[f"{p}_base_c"] = np.zeros((t, c, f.width), f.col_dtype)
+            host[f"{p}_base_n"] = np.zeros((t,), np.int32)
+            host[f"{p}_overflow"] = np.zeros((t,), np.int32)
         return {
-            name: jax.device_put(arr, NamedSharding(self.mesh, specs[name]))
+            name: jax.device_put(arr, NamedSharding(self.mesh, self._spec_of(name)))
             for name, arr in host.items()
         }
 
+    def _sub(self, names) -> Dict[str, jax.Array]:
+        return {n: self.state[n] for n in names}
+
     # ------------------------------------------------------ step builders
+    def _append_names(self):
+        names = ["rows"]
+        for f in self.families:
+            p = f.name
+            names += [f"{p}_mem_k", f"{p}_mem_c", f"{p}_mem_n", f"{p}_overflow"]
+        return names
+
     def _append_step(self):
         if "append" in self._steps:
             return self._steps["append"]
         mesh, tl = self.mesh, self.tablets_per_device
-        specs = self._specs()
+        families = self.families
+        fids = self.indexed_fids
+        bucket_s = self.agg_bucket_s
+        names = self._append_names()
 
-        def device_fn(mem_rts, mem_cols, mem_n, rows, overflow, b_rts, b_cols, b_tab):
+        def scatter_append(mem_k, mem_c, n, keys, cols, mask):
+            """Scatter-append masked entries: dest = running fill; foreign
+            and overflow entries map out of bounds and drop."""
+            m = mem_k.shape[0]
+            dest = jnp.where(
+                mask, n + jnp.cumsum(mask.astype(jnp.int32)) - 1, jnp.int32(m)
+            )
+            mem_k = mem_k.at[dest].set(keys, mode="drop")
+            mem_c = mem_c.at[dest].set(cols, mode="drop")
+            want = n + mask.sum(dtype=jnp.int32)
+            new_n = jnp.minimum(want, jnp.int32(m))
+            return mem_k, mem_c, new_n, new_n - n, want - new_n
+
+        def device_fn(st, b_rts, b_cols, b_tab):
             dev = _linear_device_index(mesh)
+            # Index/aggregate entries synthesized from the event rows —
+            # index maintenance rides the ingest path (module docstring).
+            if fids:
+                rts64 = b_rts.astype(jnp.int64)
+                ts64 = jnp.int64(keypack.TS_MAX) - rts64
+                bucket = ts64 // jnp.int64(bucket_s)
+                # Traceable twins of keypack.pack_index_key/pack_agg_key
+                # (those are numpy; the bit layout constants are shared).
+                ix_f = keypack.VALUE_BITS + keypack.TS_BITS
+                ag_f = keypack.VALUE_BITS + keypack.BUCKET_BITS
+                ik_parts, ak_parts = [], []
+                for fid in fids:
+                    code = b_cols[:, fid].astype(jnp.int64)
+                    ik_parts.append(
+                        (jnp.int64(fid) << ix_f) | (code << keypack.TS_BITS) | rts64
+                    )
+                    ak_parts.append(
+                        (jnp.int64(fid) << ag_f) | (code << keypack.BUCKET_BITS) | bucket
+                    )
+                ikeys = jnp.concatenate(ik_parts)
+                akeys = jnp.concatenate(ak_parts)
+                icols = jnp.zeros((ikeys.shape[0], 0), jnp.int32)
+                acols = jnp.ones((akeys.shape[0], 1), jnp.int64)
 
-            def one(i, rts_l, cols_l, n):
+            def one(i, loc):
                 gid = dev * jnp.int32(tl) + i
                 mine = b_tab == gid
-                m = rts_l.shape[0]
-                # Scatter-append: row dest = running fill; non-mine and
-                # overflow rows map out of bounds and drop.
-                dest = jnp.where(
-                    mine, n + jnp.cumsum(mine.astype(jnp.int32)) - 1, jnp.int32(m)
-                )
-                rts_l = rts_l.at[dest].set(b_rts, mode="drop")
-                cols_l = cols_l.at[dest].set(b_cols, mode="drop")
-                want = n + mine.sum(dtype=jnp.int32)
-                new_n = jnp.minimum(want, jnp.int32(m))
-                return rts_l, cols_l, new_n, new_n - n, want - new_n
+                out = dict(loc)
+                entries = {"ev": (b_rts, b_cols, mine)}
+                if fids:
+                    mine_t = jnp.tile(mine, len(fids))
+                    entries["ix"] = (ikeys, icols, mine_t)
+                    entries["ag"] = (akeys, acols, mine_t)
+                for f in families:
+                    p = f.name
+                    keys, cols, mask = entries[p]
+                    mem_k, mem_c, new_n, appended, lost = scatter_append(
+                        loc[f"{p}_mem_k"], loc[f"{p}_mem_c"], loc[f"{p}_mem_n"],
+                        keys, cols, mask,
+                    )
+                    out[f"{p}_mem_k"] = mem_k
+                    out[f"{p}_mem_c"] = mem_c
+                    out[f"{p}_mem_n"] = new_n
+                    out[f"{p}_overflow"] = loc[f"{p}_overflow"] + lost
+                    if p == "ev":
+                        out["rows"] = loc["rows"] + appended.astype(loc["rows"].dtype)
+                return out
 
             idx = jnp.arange(tl, dtype=jnp.int32)
-            new_rts, new_cols, new_n, appended, lost = jax.vmap(
-                one, in_axes=(0, 0, 0, 0)
-            )(idx, mem_rts, mem_cols, mem_n)
-            return (
-                new_rts, new_cols, new_n,
-                rows + appended.astype(rows.dtype),
-                overflow + lost,
-            )
+            return jax.vmap(one, in_axes=(0, 0))(idx, st)
 
         smapped = shard_map(
             device_fn,
             mesh=mesh,
-            in_specs=(
-                specs["mem_rts"], specs["mem_cols"], specs["mem_n"],
-                specs["rows"], specs["overflow"],
-                P(None), P(None, None), P(None),  # batch: replicated
-            ),
-            out_specs=(
-                specs["mem_rts"], specs["mem_cols"], specs["mem_n"],
-                specs["rows"], specs["overflow"],
-            ),
+            in_specs=(self._specs(names), P(None), P(None, None), P(None)),
+            out_specs=self._specs(names),
             check_rep=False,
         )
-        self._steps["append"] = jax.jit(smapped, donate_argnums=(0, 1, 2, 3, 4))
+        self._steps["append"] = jax.jit(smapped, donate_argnums=(0,))
         return self._steps["append"]
+
+    def _minor_names(self):
+        names = ["n_runs", "minor"]
+        for f in self.families:
+            p = f.name
+            names += [
+                f"{p}_mem_k", f"{p}_mem_c", f"{p}_mem_n",
+                f"{p}_run_k", f"{p}_run_c", f"{p}_run_n",
+            ]
+        return names
 
     def _minor_step(self):
         if "minor" in self._steps:
             return self._steps["minor"]
         mesh, k = self.mesh, self.max_runs
-        specs = self._specs()
+        families = self.families
+        names = self._minor_names()
 
-        def device_fn(mem_rts, mem_cols, mem_n, run_rts, run_cols, run_n, n_runs, minor):
-            def one(rts_l, cols_l, n, rrts_l, rcols_l, rn_l, nr):
-                m = rts_l.shape[0]
-                valid = jnp.arange(m, dtype=jnp.int32) < n
-                keys = jnp.where(valid, rts_l, jnp.int32(REV_PAD))
-                order = jnp.argsort(keys)
-                skeys = keys[order]
-                scols = cols_l[order]
-                do = (n > 0) & (nr < jnp.int32(k))
+        def device_fn(st):
+            def one(loc):
+                nr = loc["n_runs"]
+                # All families flush in lockstep: a tablet holds event rows
+                # iff it holds index/aggregate entries for them.
+                do = (loc["ev_mem_n"] > 0) & (nr < jnp.int32(k))
                 slot = jnp.clip(nr, 0, k - 1)
-                rrts_l = rrts_l.at[slot].set(jnp.where(do, skeys, rrts_l[slot]))
-                rcols_l = rcols_l.at[slot].set(jnp.where(do, scols, rcols_l[slot]))
-                rn_l = rn_l.at[slot].set(jnp.where(do, n, rn_l[slot]))
-                return (
-                    jnp.where(do, 0, n), rrts_l, rcols_l, rn_l,
-                    nr + do.astype(nr.dtype), do.astype(jnp.int32),
-                )
+                out = dict(loc)
+                for f in families:
+                    p, m = f.name, f.mem_rows
+                    n = loc[f"{p}_mem_n"]
+                    valid = jnp.arange(m, dtype=jnp.int32) < n
+                    keys = jnp.where(valid, loc[f"{p}_mem_k"], f.sentinel)
+                    order = jnp.argsort(keys)
+                    skeys = keys[order]
+                    scols = loc[f"{p}_mem_c"][order]
+                    rk, rc, rn = loc[f"{p}_run_k"], loc[f"{p}_run_c"], loc[f"{p}_run_n"]
+                    out[f"{p}_run_k"] = rk.at[slot].set(jnp.where(do, skeys, rk[slot]))
+                    out[f"{p}_run_c"] = rc.at[slot].set(jnp.where(do, scols, rc[slot]))
+                    out[f"{p}_run_n"] = rn.at[slot].set(jnp.where(do, n, rn[slot]))
+                    out[f"{p}_mem_n"] = jnp.where(do, 0, n)
+                out["n_runs"] = nr + do.astype(nr.dtype)
+                out["minor"] = loc["minor"] + do.astype(jnp.int32)
+                return out
 
-            new_n, nrr, nrc, nrn, nnr, did = jax.vmap(one)(
-                mem_rts, mem_cols, mem_n, run_rts, run_cols, run_n, n_runs
-            )
-            return new_n, nrr, nrc, nrn, nnr, minor + did
+            return jax.vmap(one)(st)
 
         smapped = shard_map(
             device_fn,
             mesh=mesh,
-            in_specs=(
-                specs["mem_rts"], specs["mem_cols"], specs["mem_n"],
-                specs["run_rts"], specs["run_cols"], specs["run_n"],
-                specs["n_runs"], specs["minor"],
-            ),
-            out_specs=(
-                specs["mem_n"], specs["run_rts"], specs["run_cols"],
-                specs["run_n"], specs["n_runs"], specs["minor"],
-            ),
+            in_specs=(self._specs(names),),
+            out_specs=self._specs(names),
             check_rep=False,
         )
-        self._steps["minor"] = jax.jit(smapped, donate_argnums=(3, 4, 5))
+        self._steps["minor"] = jax.jit(smapped, donate_argnums=(0,))
         return self._steps["minor"]
+
+    def _major_names(self):
+        run = ["n_runs", "major"]
+        base = []
+        for f in self.families:
+            p = f.name
+            run += [f"{p}_run_k", f"{p}_run_c", f"{p}_run_n", f"{p}_overflow"]
+            base += [f"{p}_base_k", f"{p}_base_c", f"{p}_base_n"]
+        return run, base
 
     def _major_step(self):
         if "major" in self._steps:
             return self._steps["major"]
         from ..kernels.merge_runs import merge_sorted_device
 
-        mesh = self.mesh
-        k, m, c, f = self.max_runs, self.mem_rows, self.capacity, self.n_fields
-        specs = self._specs()
-        # Two-stage merge: the K runs (m rows each) first, then the result
-        # against the base — pad both sides of the 2-way merge to one
-        # power-of-two length.
-        l2 = 1
-        while l2 < max(c, k * m):
-            l2 *= 2
+        mesh, k = self.mesh, self.max_runs
+        families = self.families
+        backend = self.kernel_backend
+        run_names, base_names = self._major_names()
 
-        def device_fn(run_rts, run_cols, run_n, n_runs, base_rts, base_cols, base_n, major, overflow):
-            def one(rrts_l, rcols_l, rn_l, nr, brts_l, bcols_l, bn):
-                # Mask stale slots/rows (run_n is authoritative; slots past
-                # n_runs were zeroed at the previous major).
-                within = jnp.arange(m, dtype=jnp.int32)[None, :] < rn_l[:, None]
-                ck = jnp.where(within, rrts_l, jnp.int32(REV_PAD))
-                cc = jnp.where(within[..., None], rcols_l, 0)
-                mk, mc = merge_sorted_device(ck, cc)  # (k*m,), sentinel tail
-                pad_a = jnp.full((l2,), REV_PAD, jnp.int32).at[:c].set(brts_l)
-                pad_b = jnp.full((l2,), REV_PAD, jnp.int32).at[: k * m].set(mk)
-                ca = jnp.zeros((l2, f), jnp.int32).at[:c].set(bcols_l)
-                cb = jnp.zeros((l2, f), jnp.int32).at[: k * m].set(mc)
-                fk, fc = merge_sorted_device(
-                    jnp.stack([pad_a, pad_b]), jnp.stack([ca, cb])
-                )
+        def device_fn(rst, bst):
+            def one(rloc, bloc):
+                nr = rloc["n_runs"]
                 do = nr > 0
-                new_brts = jnp.where(do, fk[:c], brts_l)
-                new_bcols = jnp.where(do, fc[:c], bcols_l)
-                total = bn + rn_l.sum()
-                new_bn = jnp.where(do, jnp.minimum(total, jnp.int32(c)), bn)
-                lost = jnp.where(do, total - new_bn, 0)
-                return (
-                    jnp.where(do, jnp.zeros_like(rn_l), rn_l),
-                    jnp.where(do, 0, nr),
-                    new_brts, new_bcols, new_bn,
-                    do.astype(jnp.int32), lost,
-                )
+                out_r = dict(rloc)
+                out_b = {}
+                for f in families:
+                    p, m, c, w = f.name, f.mem_rows, f.capacity, f.width
+                    # Two-stage merge: the K runs (m rows each) first, then
+                    # the result against the base — pad both sides of the
+                    # 2-way merge to one power-of-two length.
+                    l2 = _pow2(max(c, k * m))
+                    rn = rloc[f"{p}_run_n"]
+                    bk, bc, bn = bloc[f"{p}_base_k"], bloc[f"{p}_base_c"], bloc[f"{p}_base_n"]
+                    # Mask stale slots/rows (run_n is authoritative; slots
+                    # past n_runs were zeroed at the previous major).
+                    within = jnp.arange(m, dtype=jnp.int32)[None, :] < rn[:, None]
+                    ck = jnp.where(within, rloc[f"{p}_run_k"], f.sentinel)
+                    cc = jnp.where(within[..., None], rloc[f"{p}_run_c"], 0)
+                    mk, mc = merge_sorted_device(ck, cc, backend=backend)
+                    pad_a = jnp.full((l2,), f.sentinel, mk.dtype).at[:c].set(bk)
+                    pad_b = jnp.full((l2,), f.sentinel, mk.dtype).at[: k * m].set(mk)
+                    ca = jnp.zeros((l2, w), mc.dtype).at[:c].set(bc)
+                    cb = jnp.zeros((l2, w), mc.dtype).at[: k * m].set(mc)
+                    fk, fc = merge_sorted_device(
+                        jnp.stack([pad_a, pad_b]), jnp.stack([ca, cb]), backend=backend
+                    )
+                    if f.combine:
+                        # Aggregate family: sum duplicate (field, value,
+                        # bucket) keys — Accumulo's combiner at compaction
+                        # scope. The base stays at unique-key cardinality.
+                        fk, sums, total = _combine_dup_keys(fk, fc[:, 0], f.sentinel)
+                        fc = sums[:, None].astype(fc.dtype)
+                    else:
+                        total = bn + rn.sum()
+                    new_bn = jnp.where(do, jnp.minimum(total, jnp.int32(c)), bn)
+                    lost = jnp.where(do, total - jnp.minimum(total, jnp.int32(c)), 0)
+                    out_b[f"{p}_base_k"] = jnp.where(do, fk[:c], bk)
+                    out_b[f"{p}_base_c"] = jnp.where(do, fc[:c], bc)
+                    out_b[f"{p}_base_n"] = new_bn
+                    out_r[f"{p}_run_n"] = jnp.where(do, jnp.zeros_like(rn), rn)
+                    out_r[f"{p}_overflow"] = rloc[f"{p}_overflow"] + lost
+                out_r["n_runs"] = jnp.where(do, 0, nr)
+                out_r["major"] = rloc["major"] + do.astype(jnp.int32)
+                return out_r, out_b
 
-            nrn, nnr, nbr, nbc, nbn, did, lost = jax.vmap(one)(
-                run_rts, run_cols, run_n, n_runs, base_rts, base_cols, base_n
-            )
-            return nrn, nnr, nbr, nbc, nbn, major + did, overflow + lost
+            return jax.vmap(one)(rst, bst)
 
         smapped = shard_map(
             device_fn,
             mesh=mesh,
-            in_specs=(
-                specs["run_rts"], specs["run_cols"], specs["run_n"], specs["n_runs"],
-                specs["base_rts"], specs["base_cols"], specs["base_n"],
-                specs["major"], specs["overflow"],
-            ),
-            out_specs=(
-                specs["run_n"], specs["n_runs"],
-                specs["base_rts"], specs["base_cols"], specs["base_n"],
-                specs["major"], specs["overflow"],
-            ),
+            in_specs=(self._specs(run_names), self._specs(base_names)),
+            out_specs=(self._specs(run_names), self._specs(base_names)),
             check_rep=False,
         )
         # The base buffers are deliberately NOT donated: publish() hands
@@ -317,17 +487,13 @@ class DistIngestPlane:
         # donation (TPU/GPU) a donated major would delete the arrays a
         # caller may still hold. Majors are rare; one base copy each is
         # the price of stable published views.
-        self._steps["major"] = jax.jit(smapped, donate_argnums=(2, 3))
+        self._steps["major"] = jax.jit(smapped, donate_argnums=(0,))
         return self._steps["major"]
 
     # ------------------------------------------------------------- ingest
     def _run_minor(self) -> None:
-        s = self.state
         step = self._minor_step()
-        s["mem_n"], s["run_rts"], s["run_cols"], s["run_n"], s["n_runs"], s["minor"] = step(
-            s["mem_rts"], s["mem_cols"], s["mem_n"],
-            s["run_rts"], s["run_cols"], s["run_n"], s["n_runs"], s["minor"],
-        )
+        self.state.update(step(self._sub(self._minor_names())))
         # Mirror the device guard exactly: a tablet flushes iff it holds
         # rows AND has a free run slot.
         flushed = (self._fill > 0) & (self._runs_host < self.max_runs)
@@ -335,22 +501,24 @@ class DistIngestPlane:
         self._fill = np.where(flushed, 0, self._fill)
 
     def _run_major(self) -> None:
-        s = self.state
         step = self._major_step()
-        (
-            s["run_n"], s["n_runs"], s["base_rts"], s["base_cols"], s["base_n"],
-            s["major"], s["overflow"],
-        ) = step(
-            s["run_rts"], s["run_cols"], s["run_n"], s["n_runs"],
-            s["base_rts"], s["base_cols"], s["base_n"], s["major"], s["overflow"],
-        )
+        run_names, base_names = self._major_names()
+        out_r, out_b = step(self._sub(run_names), self._sub(base_names))
+        self.state.update(out_r)
+        self.state.update(out_b)
         self._runs_host[:] = 0
 
-    def ingest(self, rts: np.ndarray, cols: np.ndarray, tab: np.ndarray) -> float:
+    def ingest(
+        self, rts: np.ndarray, cols: np.ndarray, tab: np.ndarray, writer_id: int = 0
+    ) -> float:
         """Append a pre-encoded, pre-sharded batch. rts int32 reversed
         timestamps; cols (n, F) int32 codes; tab (n,) int32 tablet ids.
-        Returns seconds spent blocked on major compaction (backpressure) —
-        the server-side half of a DistBatchWriter flush."""
+        Returns seconds this writer spent blocked on major compactions it
+        tripped (backpressure) — the server-side half of a DistBatchWriter
+        flush. Also accrued to blocked_by_writer[writer_id], with the
+        plane scalar kept as the sum over writers. Ordinary lock wait
+        (peer appends, jit tracing) is deliberately NOT counted: the
+        metric is compaction-attributed, like the host Tablet's."""
         n = len(rts)
         if n == 0:
             return 0.0
@@ -359,12 +527,18 @@ class DistIngestPlane:
         tab = np.asarray(tab, np.int32)
         append = self._append_step()
         with self._lock:
-            return self._ingest_locked(append, rts, cols, tab, n)
+            blocked = self._ingest_locked(append, rts, cols, tab, n)
+            self.blocked_by_writer[writer_id] = (
+                self.blocked_by_writer.get(writer_id, 0.0) + blocked
+            )
+            self.blocked_seconds += blocked
+            return blocked
 
     def _ingest_locked(self, append, rts, cols, tab, n: int) -> float:
         s = self.state
         blocked = 0.0
         b = self.append_rows
+        names = self._append_names()
         for off in range(0, n, b):
             chunk = min(b, n - off)
             tab_chunk = tab[off : off + chunk]
@@ -378,10 +552,8 @@ class DistIngestPlane:
                     # it, Accumulo's backpressure reproduced on the mesh.
                     t0 = time.perf_counter()
                     self._run_major()
-                    jax.block_until_ready(self.state["base_n"])
-                    dt = time.perf_counter() - t0
-                    blocked += dt
-                    self.blocked_seconds += dt
+                    jax.block_until_ready(self.state["ev_base_n"])
+                    blocked += time.perf_counter() - t0
                 self._run_minor()
             pad_rts = np.zeros((b,), np.int32)
             pad_cols = np.zeros((b, self.n_fields), np.int32)
@@ -389,9 +561,11 @@ class DistIngestPlane:
             pad_rts[:chunk] = rts[off : off + chunk]
             pad_cols[:chunk] = cols[off : off + chunk]
             pad_tab[:chunk] = tab_chunk
-            s["mem_rts"], s["mem_cols"], s["mem_n"], s["rows"], s["overflow"] = append(
-                s["mem_rts"], s["mem_cols"], s["mem_n"], s["rows"], s["overflow"],
-                jnp.asarray(pad_rts), jnp.asarray(pad_cols), jnp.asarray(pad_tab),
+            s.update(
+                append(
+                    self._sub(names),
+                    jnp.asarray(pad_rts), jnp.asarray(pad_cols), jnp.asarray(pad_tab),
+                )
             )
             self._fill += cb
         self._dirty = True
@@ -399,9 +573,10 @@ class DistIngestPlane:
 
     # -------------------------------------------------------------- reads
     def publish(self) -> DistStore:
-        """Fold memtables and runs into the base run (device-side merges
-        only) and return the query-visible DistStore view. Cheap when
-        nothing was ingested since the last publish."""
+        """Fold memtables and runs into the base runs (device-side merges
+        only) and return the query-visible DistStore view — event rows plus
+        live index postings and aggregate counts. Cheap when nothing was
+        ingested since the last publish."""
         with self._lock:
             if not self._dirty and self._published is not None:
                 return self._published
@@ -413,22 +588,44 @@ class DistIngestPlane:
             else:  # pragma: no cover — the invariant bounds this to 2 passes
                 raise RuntimeError("publish did not drain the memtables")
             self._dirty = False
+            s = self.state
+            has_ix = len(self.families) > 1
             self._published = DistStore(
-                rev_ts=self.state["base_rts"],
-                cols=self.state["base_cols"],
-                counts=self.state["base_n"],
+                rev_ts=s["ev_base_k"],
+                cols=s["ev_base_c"],
+                counts=s["ev_base_n"],
                 mesh=self.mesh,
+                ix_keys=s["ix_base_k"] if has_ix else None,
+                ix_counts=s["ix_base_n"] if has_ix else None,
+                ag_keys=s["ag_base_k"] if has_ix else None,
+                ag_vals=s["ag_base_c"] if has_ix else None,
+                ag_counts=s["ag_base_n"] if has_ix else None,
+                agg_bucket_s=self.agg_bucket_s if has_ix else None,
             )
             return self._published
 
     def telemetry(self) -> Dict[str, np.ndarray]:
-        """Per-tablet device counters (the paper's backpressure signals)."""
+        """Per-tablet device counters (the paper's backpressure signals),
+        plus per-writer blocked-seconds (the §IV-A per-client curve)."""
         with self._lock:
-            out = {
-                name: np.asarray(jax.device_get(self.state[name]))
-                for name in ("rows", "minor", "major", "overflow", "mem_n", "n_runs", "base_n")
+            alias = {
+                "rows": "rows", "minor": "minor", "major": "major",
+                "n_runs": "n_runs", "overflow": "ev_overflow",
+                "mem_n": "ev_mem_n", "base_n": "ev_base_n",
             }
+            out = {
+                name: np.asarray(jax.device_get(self.state[key]))
+                for name, key in alias.items()
+            }
+            for f in self.families[1:]:
+                out[f"{f.name}_overflow"] = np.asarray(
+                    jax.device_get(self.state[f"{f.name}_overflow"])
+                )
+                out[f"{f.name}_base_n"] = np.asarray(
+                    jax.device_get(self.state[f"{f.name}_base_n"])
+                )
             out["blocked_seconds"] = np.float64(self.blocked_seconds)
+            out["blocked_seconds_per_writer"] = dict(self.blocked_by_writer)
             return out
 
 
@@ -437,7 +634,13 @@ class DistBatchWriter(BatchWriter):
     BatchWriter per parallel ingest client). Buffers parsed events exactly
     like the host BatchWriter; a flush encodes via the store's dictionaries,
     shards by row hash, and appends through the plane — blocking while a
-    tripped major compaction drains, which is the measured backpressure."""
+    tripped major compaction drains, which is the measured backpressure.
+
+    writer_id keys the plane's per-writer blocked-seconds telemetry (and
+    salts the row hash); when omitted, each writer gets a fresh unique id,
+    so parallel clients never collapse into one telemetry bucket."""
+
+    _next_id = itertools.count()
 
     def __init__(
         self,
@@ -445,10 +648,12 @@ class DistBatchWriter(BatchWriter):
         plane: DistIngestPlane,
         batch_rows: int = 4096,
         metrics: Optional[IngestMetrics] = None,
-        writer_id: int = 0,
+        writer_id: Optional[int] = None,
     ):
         super().__init__(store, batch_rows=batch_rows, metrics=metrics)
         self.plane = plane
+        if writer_id is None:
+            writer_id = next(DistBatchWriter._next_id)
         self._writer_id = np.int64(writer_id)
         self._count = 0
 
@@ -470,7 +675,7 @@ class DistBatchWriter(BatchWriter):
         )
         tab = (h % self.plane.n_tablets).astype(np.int32)
         rts = keypack.rev_ts(np.asarray(ts, np.int64)).astype(np.int32)
-        return self.plane.ingest(rts, cols, tab)
+        return self.plane.ingest(rts, cols, tab, writer_id=int(self._writer_id))
 
 
 def check_tablet_guidance(n_tablets: int, n_writers: int) -> bool:

@@ -40,14 +40,16 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from . import keypack
 from .filter import FilterProgram, compile_tree
 from .iterators import AggregateResult, AggregateSpec, ResolvedGrouping, resolve_grouping
+from .planner import QueryPlan, plan_query
 from .store import EventStore
 
 INVALID_TS = jnp.int32(-1)
+_I32_MAX = np.iinfo(np.int32).max
 
 
 @dataclass
 class DistStore:
-    """Device-resident tablet grid.
+    """Device-resident tablet grid — the paper's three tables per source.
 
     rev_ts:  (T, R) int32   reversed timestamps, ascending per tablet
                             (newest first), padded with TS_MAX+... sentinel
@@ -59,12 +61,33 @@ class DistStore:
     one-shot scatter of a host store (from_event_store) or the live base
     run of a DistIngestPlane (dist_ingest.publish) — the latter updates
     incrementally as writers ingest, no re-scatter.
+
+    Planes that maintain the index/aggregate families additionally expose:
+
+    ix_keys:  (T, Ci) int64  sorted packed index keys (field|value|rev_ts)
+                             — postings for one (field, value) over a time
+                             range are one contiguous slice, INT64_MAX pad
+    ix_counts: (T,) int32    live postings per tablet
+    ag_keys:  (T, Ca) int64  sorted packed aggregate keys
+                             (field|value|bucket), unique per tablet
+    ag_vals:  (T, Ca, 1) int64 occurrence counts per aggregate key
+    ag_counts: (T,) int32    live aggregate keys per tablet
+    agg_bucket_s: int        the bucketing the densities were counted at
+
+    These are None for index-less stores (a plane built without
+    indexed_fids); DistQueryProcessor then falls back to filter-scan.
     """
 
     rev_ts: jax.Array
     cols: jax.Array
     counts: jax.Array
     mesh: Mesh
+    ix_keys: Optional[jax.Array] = None
+    ix_counts: Optional[jax.Array] = None
+    ag_keys: Optional[jax.Array] = None
+    ag_vals: Optional[jax.Array] = None
+    ag_counts: Optional[jax.Array] = None
+    agg_bucket_s: Optional[int] = None
 
     @property
     def n_tablets(self) -> int:
@@ -73,6 +96,10 @@ class DistStore:
     @property
     def capacity(self) -> int:
         return self.rev_ts.shape[1]
+
+    @property
+    def has_index(self) -> bool:
+        return self.ix_keys is not None
 
 
 def tablet_specs(mesh: Mesh) -> Dict[str, P]:
@@ -126,10 +153,12 @@ def from_event_store(
     # The plane's flush triggers are exact per tablet (host-side fill
     # mirror), so fixed per-tablet buffers suffice: a tablet majors every
     # max_runs * mem_rows of ITS OWN rows — run-slab memory stays
-    # O(T * max_runs * mem_rows), independent of replay size.
-    plane = DistIngestPlane(
+    # O(T * max_runs * mem_rows), independent of replay size. for_store
+    # binds the store's indexed fields + aggregate bucketing, so the
+    # replay also builds live index postings and planner densities.
+    plane = DistIngestPlane.for_store(
+        store,
         mesh,
-        store.schema.n_fields,
         capacity=cap,
         tablets_per_device=tablets_per_device,
         mem_rows=8192,
@@ -289,14 +318,201 @@ def build_aggregate_step(
     return jax.jit(smapped)
 
 
+def build_index_step(
+    mesh: Mesh,
+    n_conds: int,
+    combine: str,
+    prog_len: int,
+    set_shape: Tuple[int, int],
+    top_k: int = 128,
+    max_postings: int = 2048,
+    max_rows: int = 4096,
+):
+    """Jitted distributed index scan — the paper's winning batched-index
+    scheme lowered to the mesh (Fig 2: index lookups -> key-set combine ->
+    row fetch -> residual filter, all device-side).
+
+    Per tablet, per condition: the postings for (field, value) over the
+    batch's rev_ts range are ONE contiguous slice of the sorted index base
+    (two binary searches), gathered into a fixed slab of max_postings
+    newest-first rev_ts values. The slabs combine device-side — k-way
+    intersect via kernels/merge_intersect membership searches (AND), or a
+    sorted merge (OR). Candidate rev_ts values then expand to base rows by
+    binary search + prefix-sum expansion, and the predicate program runs
+    ONLY on the gathered candidate rows (max_rows of them) — never on the
+    full tablet, which is the whole latency win over filter-scan.
+
+    Correctness does not rest on the index: the FULL query tree re-checks
+    every candidate row, so rev_ts collisions between distinct rows cost a
+    wasted candidate, never a wrong result. Slab overflow is reported in
+    the `truncated` output; the executor falls back to the exact
+    filter-scan step for that batch (adaptive batching keeps per-batch
+    result sets small, so this is rare).
+
+    Returns (global_count, per-tablet top-k (ts, cols), truncated,
+    candidate_rows) — the last is the diagnostic 'index entries actually
+    used' count (psum'd)."""
+    axes = tuple(mesh.axis_names)
+    specs = tablet_specs(mesh)
+    from ..kernels.merge_intersect import member_mask_keys
+
+    # Live-count inputs are deliberately absent: the base and index slabs
+    # are ALWAYS sentinel-padded past *_base_n (init, merges, and
+    # non-donated majors all preserve it), and every probe key is below
+    # the sentinel, so binary searches never land in the pad tail.
+    def tablet_ix(rev_ts, cols, ix_keys,
+                  opcodes, arg0, arg1, codesets, cond_lo, cond_hi):
+        r = rev_ts.shape[1]
+
+        def one(rev_l, cols_l, ik_l):
+            ci = ik_l.shape[0]
+
+            def posting(i):
+                a = jnp.searchsorted(ik_l, cond_lo[i], side="left").astype(jnp.int32)
+                b = jnp.searchsorted(ik_l, cond_hi[i], side="left").astype(jnp.int32)
+                cnt = b - a
+                j = jnp.arange(max_postings, dtype=jnp.int32)
+                valid = j < cnt
+                kk = ik_l[jnp.clip(a + j, 0, ci - 1)]
+                rts = jnp.where(
+                    valid, (kk & jnp.int64(keypack.TS_MAX)).astype(jnp.int32),
+                    jnp.int32(_I32_MAX),
+                )
+                return rts, jnp.maximum(cnt - jnp.int32(max_postings), 0)
+
+            slabs, over = jax.vmap(posting)(jnp.arange(n_conds, dtype=jnp.int32))
+            if combine == "intersect":
+                # Probe the first condition's slab against every other —
+                # the same membership computation the merge_intersect
+                # kernel runs for host key sets.
+                cand = slabs[0]
+                keep = cand < jnp.int32(_I32_MAX)
+                for i in range(1, n_conds):
+                    keep &= member_mask_keys(cand, slabs[i])
+                cand = jnp.sort(jnp.where(keep, cand, jnp.int32(_I32_MAX)))
+            else:
+                cand = jnp.sort(slabs.reshape(-1))
+            cc = cand.shape[0]
+            # Distinct candidates only: duplicate rev_ts values (shared
+            # postings, OR overlaps) expand to the same base rows.
+            is_dup = jnp.concatenate([jnp.zeros((1,), bool), cand[1:] == cand[:-1]])
+            live = (cand < jnp.int32(_I32_MAX)) & ~is_dup
+            lo_pos = jnp.searchsorted(rev_l, cand, side="left").astype(jnp.int32)
+            hi_pos = jnp.searchsorted(rev_l, cand, side="right").astype(jnp.int32)
+            cnt_rows = jnp.where(live, hi_pos - lo_pos, 0)
+            offs = jnp.cumsum(cnt_rows)
+            total = offs[-1]
+            start = offs - cnt_rows
+            # Prefix-sum expansion: candidate j covers output slots
+            # [start[j], offs[j]) — row m maps back through one binary
+            # search. Rows come out ascending in rev_ts (newest first).
+            m = jnp.arange(max_rows, dtype=jnp.int32)
+            j = jnp.searchsorted(offs, m, side="right").astype(jnp.int32)
+            jc = jnp.clip(j, 0, cc - 1)
+            row_idx = lo_pos[jc] + (m - start[jc])
+            valid_m = m < total
+            safe = jnp.clip(row_idx, 0, r - 1)
+            r_rev = jnp.where(valid_m, rev_l[safe], jnp.int32(_I32_MAX))
+            r_cols = jnp.where(valid_m[:, None], cols_l[safe], -1)
+            # Exactness: the FULL tree re-checks candidates (residual AND
+            # indexed conditions), so over-approximate candidate sets are
+            # filtered here, at candidate cardinality.
+            hit = _program_eval(r_cols, opcodes, arg0, arg1, codesets) & valid_m
+            count = hit.sum(dtype=jnp.int32)
+            rank = jnp.where(hit, m, jnp.int32(max_rows))
+            top = jnp.sort(rank)[:top_k]
+            tvalid = top < max_rows
+            tsafe = jnp.clip(top, 0, max_rows - 1)
+            out_ts = jnp.where(tvalid, r_rev[tsafe], INVALID_TS)
+            out_cols = jnp.where(tvalid[:, None], r_cols[tsafe], -1)
+            trunc = over.sum() + jnp.maximum(total - jnp.int32(max_rows), 0)
+            return count, out_ts, out_cols, trunc, total
+
+        count_l, ts_l, cols_l, trunc_l, cand_l = jax.vmap(one)(
+            rev_ts, cols, ix_keys
+        )
+        total = jax.lax.psum(count_l.sum(dtype=jnp.int32), axes)
+        truncated = jax.lax.psum(trunc_l.sum(dtype=jnp.int32), axes)
+        candidates = jax.lax.psum(cand_l.sum(dtype=jnp.int32), axes)
+        return total, ts_l, cols_l, truncated, candidates
+
+    smapped = shard_map(
+        tablet_ix,
+        mesh=mesh,
+        in_specs=(
+            specs["rev_ts"], specs["cols"],
+            P(axes, None),  # index base keys
+            P(None), P(None), P(None), P(None, None),  # program: replicated
+            P(None), P(None),  # per-condition packed key ranges
+        ),
+        out_specs=(P(), P(axes, None), P(axes, None, None), P(), P()),
+        check_rep=False,
+    )
+    return jax.jit(smapped)
+
+
+def build_density_step(mesh: Mesh):
+    """Jitted distributed density read for the query planner: total count
+    over one packed aggregate-key range — per-tablet searchsorted + masked
+    sum, merged with a single psum. This is how plan_query's d_i estimates
+    come off the mesh instead of the host aggregate table."""
+    axes = tuple(mesh.axis_names)
+
+    def fn(ag_keys, ag_vals, lo, hi):
+        ca = ag_keys.shape[1]
+
+        def one(k_l, v_l):
+            a = jnp.searchsorted(k_l, lo, side="left")
+            b = jnp.searchsorted(k_l, hi, side="left")
+            idx = jnp.arange(ca)
+            in_r = (idx >= a) & (idx < b)
+            return jnp.where(in_r, v_l[:, 0], 0).sum()
+
+        return jax.lax.psum(jax.vmap(one)(ag_keys, ag_vals).sum(), axes)
+
+    smapped = shard_map(
+        fn,
+        mesh=mesh,
+        in_specs=(P(axes, None), P(axes, None, None), P(), P()),
+        out_specs=P(),
+        check_rep=False,
+    )
+    return jax.jit(smapped)
+
+
+@dataclass
+class DistBatch:
+    """One batch's result from the distributed executor: the exact global
+    matching-row count plus the per-tablet top-k newest rows (BatchScanner
+    semantics: unordered across tablets, newest-first within)."""
+
+    count: int
+    ts: np.ndarray
+    cols: np.ndarray
+
+    @property
+    def n(self) -> int:
+        return self.count
+
+    @property
+    def nbytes(self) -> int:
+        return self.ts.nbytes + self.cols.nbytes
+
+
 class DistQueryProcessor:
-    """Adaptive-batched queries over the mesh — Algs 1-2 driving the
-    distributed scan step.
+    """Planner-driven, adaptively batched queries over the mesh — all four
+    of the paper's §IV-B schemes (scan / batched_scan / index /
+    batched_index) running distributed.
 
     With `plane=` (a DistIngestPlane), every query first syncs to the
     plane's latest published base — rows written through DistBatchWriter
     become query-visible with no host round trip (publish is device-side
-    compaction only, and a no-op when nothing was ingested)."""
+    compaction only, and a no-op when nothing was ingested). Planes that
+    maintain the index/aggregate families (DistIngestPlane.for_store /
+    from_event_store) additionally enable the index schemes: plan_query
+    reads densities from the distributed aggregate tablets (agg_count,
+    a psum) and index-mode plans execute as build_index_step programs.
+    Index-less stores fall back to filter-scan for every plan."""
 
     def __init__(
         self,
@@ -304,6 +520,9 @@ class DistQueryProcessor:
         dist: Optional[DistStore] = None,
         top_k: int = 128,
         plane=None,
+        w: float = 10.0,
+        index_postings: int = 2048,
+        index_rows: int = 4096,
     ):
         if dist is None:
             if plane is None:
@@ -313,11 +532,47 @@ class DistQueryProcessor:
         self.dist = dist
         self.plane = plane
         self.top_k = top_k
-        self._step_cache: Dict[Tuple[int, Tuple[int, int]], object] = {}
+        self.w = w
+        self.index_postings = index_postings
+        self.index_rows = index_rows
+        self._step_cache: Dict[Tuple, object] = {}
 
     def _sync(self) -> None:
         if self.plane is not None:
             self.dist = self.plane.publish()
+
+    # ------------------------------------------------- planner density source
+    # plan_query duck-types its store argument: it needs .schema,
+    # .dictionaries and .agg_count. Exposing them here makes the processor
+    # itself the density source, with d_i read from the mesh.
+    @property
+    def schema(self):
+        return self.store.schema
+
+    @property
+    def dictionaries(self):
+        return self.store.dictionaries
+
+    def agg_count(self, field: str, value: str, t_start: int, t_stop: int) -> int:
+        """Occurrences of field=value in the bucketed time range, from the
+        DISTRIBUTED aggregate tablets (psum of per-tablet counts) — the
+        planner's d_i, served by the mesh instead of the host store."""
+        self._sync()
+        if not self.dist.has_index:
+            return self.store.agg_count(field, value, t_start, t_stop)
+        code = self.store.dictionaries[field].lookup(value)
+        if code is None:
+            return 0
+        fid = self.store.schema.field_id(field)
+        bs = self.dist.agg_bucket_s
+        b0 = int(t_start) // bs
+        b1 = int(t_stop) // bs
+        lo = int(keypack.pack_agg_key(fid, code, b0))
+        hi = int(keypack.pack_agg_key(fid, code, b1)) + 1
+        if "density" not in self._step_cache:
+            self._step_cache["density"] = build_density_step(self.dist.mesh)
+        step = self._step_cache["density"]
+        return int(step(self.dist.ag_keys, self.dist.ag_vals, jnp.int64(lo), jnp.int64(hi)))
 
     def _step(self, prog: FilterProgram):
         from ..kernels.filter_scan.ops import pad_program
@@ -346,6 +601,129 @@ class DistQueryProcessor:
         ts = np.asarray(top_ts)
         valid = ts != int(INVALID_TS)
         return int(total), keypack.unrev_ts(ts[valid]), np.asarray(top_cols)[valid]
+
+    # -------------------------------------------------------- index path
+    def _index_step(self, prog: FilterProgram, n_conds: int, combine: str):
+        from ..kernels.filter_scan.ops import pad_program
+
+        opc, a0, a1, cs = pad_program(prog)
+        key = ("index", n_conds, combine, len(opc), cs.shape)
+        if key not in self._step_cache:
+            self._step_cache[key] = build_index_step(
+                self.dist.mesh, n_conds, combine, len(opc), cs.shape,
+                self.top_k, self.index_postings, self.index_rows,
+            )
+        return self._step_cache[key], (opc, a0, a1, cs)
+
+    def scan_index_range(self, plan: QueryPlan, tree, t0: int, t1: int):
+        """One index-mode range across all tablets (paper Fig 2 on-mesh):
+        postings lookup per condition, device-side intersect/union,
+        candidate-row fetch, and the FULL tree re-checked on candidates.
+        Returns (global_count, top-k (ts, cols), truncated, candidates);
+        `truncated` > 0 means a posting/row slab overflowed and the count
+        is a lower bound — the executor falls back to filter-scan then."""
+        self._sync()
+        prog = compile_tree(self.store, tree)
+        step, (opc, a0, a1, cs) = self._index_step(
+            prog, len(plan.index_conds), plan.combine
+        )
+        rts_lo = keypack.rev_ts(t1)
+        rts_hi = keypack.rev_ts(t0)
+        k = len(plan.index_conds)
+        lo = np.zeros(k, np.int64)
+        hi = np.zeros(k, np.int64)
+        for i, c in enumerate(plan.index_conds):
+            code = self.store.dictionaries[c.field].lookup(c.value)
+            if code is None:
+                continue  # lo == hi: empty posting range
+            fid = self.store.schema.field_id(c.field)
+            lo[i] = keypack.pack_index_key(fid, code, rts_lo)
+            hi[i] = keypack.pack_index_key(fid, code, rts_hi) + 1
+        total, top_ts, top_cols, truncated, cands = step(
+            self.dist.rev_ts, self.dist.cols, self.dist.ix_keys,
+            jnp.asarray(opc), jnp.asarray(a0), jnp.asarray(a1), jnp.asarray(cs),
+            jnp.asarray(lo), jnp.asarray(hi),
+        )
+        ts = np.asarray(top_ts)
+        valid = ts != int(INVALID_TS)
+        return (
+            int(total), keypack.unrev_ts(ts[valid]), np.asarray(top_cols)[valid],
+            int(truncated), int(cands),
+        )
+
+    # ---------------------------------------------------- planned execution
+    def _exec_range(self, plan: QueryPlan, tree, t0: int, t1: int, stats=None) -> DistBatch:
+        if plan.mode == "index" and self.dist.has_index:
+            count, ts, cols, truncated, cands = self.scan_index_range(plan, tree, t0, t1)
+            if stats is not None:
+                stats.index_keys_scanned += cands
+            if not truncated:
+                return DistBatch(count, ts, cols)
+            # Slab overflow: redo this range with the exact filter-scan
+            # step (results identical, just without the candidate cap).
+        count, ts, cols = self.scan_range(tree, t0, t1)
+        return DistBatch(count, ts, cols)
+
+    def execute(
+        self,
+        tree,
+        t_start: int,
+        t_stop: int,
+        use_index: bool = True,
+        batched: bool = True,
+        stats=None,
+    ):
+        """Stream DistBatch results for a planned query — the distributed
+        QueryProcessor.execute. plan_query picks the access path from the
+        mesh-resident densities (heuristics 1-4); index-mode plans run
+        build_index_step per batch, filter plans the scan step; provably
+        empty plans (zero-density intersect branch) never touch a device."""
+        import time as _time
+        from .batching import AdaptiveBatcher
+
+        self._sync()
+        source = self if self.dist.has_index else self.store
+        plan = plan_query(
+            source, tree, t_start, t_stop, w=self.w,
+            use_index=use_index and self.dist.has_index,
+        )
+        if stats is not None:
+            stats.plan = plan
+        if plan.mode == "empty":
+            return
+        if not batched:
+            blk = self._exec_range(plan, tree, t_start, t_stop, stats)
+            if stats is not None:
+                stats.batches += 1
+                stats.rows += blk.count
+            yield blk
+            return
+        rps = self.store.rows_per_second()
+        batcher = AdaptiveBatcher(
+            t_start=t_start, t_stop=t_stop, b0=rps and 10.0 / rps
+        )
+        while not batcher.done:
+            lo, hi = batcher.next_range()
+            t0 = _time.perf_counter()
+            blk = self._exec_range(plan, tree, int(lo), int(hi), stats)
+            runtime = _time.perf_counter() - t0
+            batcher.update(runtime, blk.count)
+            if stats is not None:
+                stats.batches += 1
+                stats.rows += blk.count
+                stats.batch_log.append((lo, hi, runtime, blk.count))
+            yield blk
+
+    def run_scheme(self, scheme: str, t_start: int, t_stop: int, tree=None, **kw):
+        """The paper's four experimental schemes by name, distributed —
+        mirrors QueryProcessor.run_scheme."""
+        flags = {
+            "scan": dict(use_index=False, batched=False),
+            "batched_scan": dict(use_index=False, batched=True),
+            "index": dict(use_index=True, batched=False),
+            "batched_index": dict(use_index=True, batched=True),
+        }[scheme]
+        return self.execute(tree, t_start, t_stop, **flags, **kw)
 
     def _agg_step(self, prog: FilterProgram, grouping: ResolvedGrouping):
         from ..kernels.filter_scan.ops import pad_program

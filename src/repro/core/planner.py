@@ -14,6 +14,15 @@ Heuristics (quoted from the paper):
        d_i < w * min_i d_i; intersect key sets; pass to event scanner with
        the remaining syntax tree as a filter.
   4. otherwise                          -> full tablet-server filtering.
+
+One refinement on 1/3: an indexed equality condition whose density over
+the query range is zero PROVES the (intersected) result empty — the
+aggregate buckets cover a superset of [t_start, t_stop] — so the plan
+short-circuits to mode='empty' and the executors skip every scan.
+
+The density source is duck-typed: anything with .schema, .dictionaries
+and .agg_count works — the host EventStore reads its aggregate table,
+DistQueryProcessor psums the distributed aggregate tablets.
 """
 from __future__ import annotations
 
@@ -35,7 +44,7 @@ class IndexCond:
 
 @dataclass
 class QueryPlan:
-    mode: str  # 'index' | 'filter'
+    mode: str  # 'index' | 'filter' | 'empty'
     combine: str  # 'intersect' | 'union' (index mode)
     index_conds: List[IndexCond] = field(default_factory=list)
     residual: Optional[Node] = None  # tablet-server filter after index step
@@ -43,6 +52,9 @@ class QueryPlan:
     def describe(self) -> str:
         if self.mode == "filter":
             return "full tablet-server filter"
+        if self.mode == "empty":
+            conds = ", ".join(f"{c.field}={c.value}" for c in self.index_conds)
+            return f"provably empty (zero-density condition: {conds})"
         conds = ", ".join(f"{c.field}={c.value}(d={c.density:.0f})" for c in self.index_conds)
         res = "none" if isinstance(self.residual, TrueNode) or self.residual is None else "tree"
         return f"index[{self.combine}]({conds}) residual={res}"
@@ -67,9 +79,18 @@ def plan_query(
     if not use_index:
         return QueryPlan(mode="filter", combine="intersect", residual=tree)
 
-    # Heuristic 1: root equality condition.
+    # Heuristic 1: root equality condition. A zero density over the
+    # (bucket-superset) time range PROVES the result empty — the aggregate
+    # buckets cover [t_start, t_stop], so no matching row can exist.
+    # Short-circuit instead of emitting an index scan.
     if isinstance(tree, Eq) and store.schema.is_indexed(tree.field):
         d = _density(store, tree, t_start, t_stop)
+        if d <= 0:
+            return QueryPlan(
+                mode="empty",
+                combine="intersect",
+                index_conds=[IndexCond(tree.field, tree.value, 0.0)],
+            )
         return QueryPlan(
             mode="index",
             combine="intersect",
@@ -87,7 +108,11 @@ def plan_query(
         ]
         return QueryPlan(mode="index", combine="union", index_conds=conds, residual=TrueNode())
 
-    # Heuristic 3: root AND — index the rare equality children.
+    # Heuristic 3: root AND — index the rare equality children. Any
+    # indexed equality child with zero density proves the whole AND empty
+    # (an empty set intersected with anything stays empty): short-circuit
+    # rather than paying index scans of the other conditions plus a
+    # residual tablet filter, per batch, for a provably-empty result.
     if isinstance(tree, And):
         eq_children = [
             c
@@ -97,6 +122,13 @@ def plan_query(
         if eq_children:
             dens = {c: _density(store, c, t_start, t_stop) for c in eq_children}
             d_min = min(dens.values())
+            if d_min <= 0:
+                zero = [c for c in eq_children if dens[c] <= 0]
+                return QueryPlan(
+                    mode="empty",
+                    combine="intersect",
+                    index_conds=[IndexCond(c.field, c.value, 0.0) for c in zero],
+                )
             selected = [c for c in eq_children if dens[c] < w * max(d_min, 1.0)]
             if selected:
                 rest = tuple(c for c in tree.children if c not in selected)

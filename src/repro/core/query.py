@@ -184,6 +184,11 @@ class QueryProcessor:
         plan = plan_query(self.store, tree, t_start, t_stop, w=self.w, use_index=use_index)
         if stats is not None:
             stats.plan = plan
+        if plan.mode == "empty":
+            # Provably empty (zero-density index condition): no scans, no
+            # batching loop — the whole time range is answered from the
+            # aggregate table alone.
+            return
         residual_trivial = isinstance(plan.residual, TrueNode) or plan.residual is None
         prog = None if residual_trivial else compile_tree(self.store, plan.residual)
         combiner = None

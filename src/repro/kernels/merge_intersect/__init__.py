@@ -1,1 +1,2 @@
 from .ops import intersect_sorted, union_sorted  # noqa: F401
+from .ref import member_mask_keys  # noqa: F401

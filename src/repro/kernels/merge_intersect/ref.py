@@ -1,9 +1,24 @@
 """Pure-jnp oracle for merge_intersect: reconstruct packed int64 keys from
-the (hi, lo) lanes and use searchsorted membership."""
+the (hi, lo) lanes and use searchsorted membership.
+
+member_mask_keys is the traceable device form (jit / shard_map safe): the
+distributed index step calls it per tablet to intersect posting slabs
+inside the query program — the same membership computation the Pallas
+kernel performs on (hi, lo) lanes for host key sets.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+
+def member_mask_keys(a, b):
+    """Membership mask of each element of `a` in `b`; `b` sorted ascending
+    (sentinel padding allowed — sentinels are ordinary values, so mask
+    sentinel probes out at the caller)."""
+    pos = jnp.searchsorted(b, a)
+    pos_c = jnp.clip(pos, 0, b.shape[0] - 1)
+    return (pos < b.shape[0]) & (b[pos_c] == a)
 
 
 def _join(hi, lo):
@@ -13,8 +28,4 @@ def _join(hi, lo):
 @jax.jit
 def intersect_mask_ref(a_hi, a_lo, b_hi, b_lo):
     """Membership mask of a in b; b sorted ascending by (hi, lo-unsigned)."""
-    a = _join(a_hi, a_lo)
-    b = _join(b_hi, b_lo)
-    pos = jnp.searchsorted(b, a)
-    pos_c = jnp.clip(pos, 0, b.shape[0] - 1)
-    return (pos < b.shape[0]) & (b[pos_c] == a)
+    return member_mask_keys(_join(a_hi, a_lo), _join(b_hi, b_lo))

@@ -104,16 +104,57 @@ def merge_sorted_runs(
     return out_keys[:n_total], out_cols[:n_total]
 
 
-def merge_sorted_device(run_keys, run_cols):
+def _device_lanes(run_keys):
+    """Split device-tablet keys into the (hi, lo) int32 lane pair the Pallas
+    rank kernel consumes. int32 keys (event tablets: non-negative rev_ts,
+    INT32_MAX sentinel) ride the lo lane with hi = 0 — signed and unsigned
+    order coincide for non-negative values, and the sentinel stays maximal.
+    int64 keys (index/aggregate tablets: packed 62-bit keys, INT64_MAX
+    sentinel) split exactly like the host path."""
+    if run_keys.dtype == jnp.int32:
+        return jnp.zeros_like(run_keys), run_keys
+    hi = (run_keys >> 32).astype(jnp.int32)
+    lo = (run_keys & 0xFFFFFFFF).astype(jnp.uint32).astype(jnp.int32)
+    return hi, lo
+
+
+def merge_sorted_device(run_keys, run_cols, backend: str = "auto"):
     """Traceable k-way merge for device tablets (jit / shard_map safe).
 
-    run_keys (K, R) int32: each row sorted ascending, padded with the
-    int32-max sentinel. run_cols (K, R, F) payload. Returns the merged
-    (K*R,) keys and (K*R, F) cols — sentinels as a contiguous tail.
+    run_keys (K, R) int32 or int64: each row sorted ascending, padded with
+    the dtype-max sentinel. run_cols (K, R, F) payload (F may be 0).
+    Returns the merged (K*R,) keys and (K*R, F) cols — sentinels as a
+    contiguous tail.
+
+    Backend policy matches merge_sorted_runs: jnp searchsorted reference on
+    CPU, the Pallas rank kernel on TPU (interpret elsewhere), with the
+    VMEM-resident key-lane cap falling back to the reference. Ranks are
+    identical between backends (asserted in tests), so the choice never
+    changes results.
     """
     k, r = run_keys.shape
     f = run_cols.shape[-1]
-    ranks = merge_ranks_keys(run_keys).reshape(-1)
-    out_keys = jnp.zeros((k * r,), run_keys.dtype).at[ranks].set(run_keys.reshape(-1))
-    out_cols = jnp.zeros((k * r, f), run_cols.dtype).at[ranks].set(run_cols.reshape(-1, f))
-    return out_keys, out_cols
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "ref"
+    r2 = _pow2(r)
+    if backend != "ref" and k * r2 > MAX_VMEM_KEYS:
+        backend = "ref"
+    if backend == "ref":
+        ranks = merge_ranks_keys(run_keys).reshape(-1)
+        out_keys = jnp.zeros((k * r,), run_keys.dtype).at[ranks].set(run_keys.reshape(-1))
+        out_cols = jnp.zeros((k * r, f), run_cols.dtype).at[ranks].set(run_cols.reshape(k * r, f))
+        return out_keys, out_cols
+    # Sentinel-pad each run to a power of two: added sentinels sort after
+    # every real key, so real ranks are unchanged and sentinels (original
+    # and pad) fill the permutation's tail. Scatter at the padded length,
+    # then slice — real keys all rank below k*r, so the slice recovers the
+    # unpadded contract exactly.
+    sentinel = jnp.asarray(jnp.iinfo(run_keys.dtype).max, run_keys.dtype)
+    padded = jnp.full((k, r2), sentinel, run_keys.dtype).at[:, :r].set(run_keys)
+    padded_cols = jnp.zeros((k, r2, f), run_cols.dtype).at[:, :r].set(run_cols)
+    hi, lo = _device_lanes(padded)
+    interpret = jax.default_backend() != "tpu"
+    ranks = merge_ranks_pallas(hi, lo, interpret=interpret).reshape(-1)
+    out_keys = jnp.full((k * r2,), sentinel, run_keys.dtype).at[ranks].set(padded.reshape(-1))
+    out_cols = jnp.zeros((k * r2, f), run_cols.dtype).at[ranks].set(padded_cols.reshape(k * r2, f))
+    return out_keys[: k * r], out_cols[: k * r]

@@ -1,0 +1,225 @@
+"""Planner heuristics 1-4 against a numpy density oracle.
+
+The store's densities are controlled exactly: a custom 4-field schema
+whose values occur a known number of times inside the query range, plus
+one value that occurs ONLY outside it (zero density inside — the
+provably-empty short-circuit case). The oracle recomputes every density
+from raw numpy over the bucket-superset range the aggregate table counts.
+"""
+import numpy as np
+import pytest
+
+from repro.core import And, Cmp, Eq, EventStore, Not, Or, QueryProcessor, QueryStats
+from repro.core.filter import TrueNode
+from repro.core.planner import plan_query
+from repro.core.schema import EventSchema, FieldSpec
+
+BUCKET = 100
+T_RANGE = 1000  # first batch lives in [0, 1000)
+T_FAR = 2000  # second batch (the zero-density-in-range values) in [2000, 3000)
+
+# (field, value) -> occurrences inside [0, T_RANGE). Chosen to pin the
+# heuristic-3 threshold arithmetic: with w=10 and d_min=2 the cutoff is
+# exactly 20 (strict <), and with d_min=1 it is exactly 10.
+COUNTS = {
+    ("fa", "x1"): 1,
+    ("fa", "x2"): 2,
+    ("fb", "y9"): 9,
+    ("fb", "y19"): 19,
+    ("fc", "z10"): 10,
+    ("fc", "z20"): 20,
+    ("fd", "w200"): 200,
+}
+
+
+def _schema():
+    return EventSchema(
+        "planner_test",
+        [FieldSpec("fa"), FieldSpec("fb"), FieldSpec("fc"), FieldSpec("fd"),
+         FieldSpec("raw", indexed=False)],
+    )
+
+
+@pytest.fixture(scope="module")
+def controlled():
+    rng = np.random.default_rng(0)
+    n = 400
+    ts = np.sort(rng.integers(0, T_RANGE, n))
+    fields = {f: ["o"] * n for f in ("fa", "fb", "fc", "fd")}
+    fields["raw"] = [str(i % 7) for i in range(n)]
+    pool = list(range(n))
+    rng.shuffle(pool)
+    taken = 0
+    placed = {}
+    for (f, v), c in COUNTS.items():
+        idxs = pool[taken : taken + c]
+        taken += c
+        for i in idxs:
+            fields[f][i] = v
+        placed[(f, v)] = np.asarray(sorted(idxs))
+    store = EventStore(_schema(), n_shards=2, agg_bucket_seconds=BUCKET)
+    store.ingest(ts, fields)
+    # Second batch far outside [0, T_RANGE): gives "gone" a dictionary
+    # code (so Eq compiles) but ZERO density inside the query range.
+    ts2 = np.sort(rng.integers(T_FAR, T_FAR + 1000, 50))
+    store.ingest(ts2, {
+        "fa": ["gone"] * 50, "fb": ["o"] * 50, "fc": ["o"] * 50,
+        "fd": ["o"] * 50, "raw": ["0"] * 50,
+    })
+    store.flush_all()
+    store.compact_all()
+    data = {f: np.asarray(v[:n]) for f, v in fields.items()}
+    return store, ts, data
+
+
+def oracle_density(ts, data, field, value, t0, t1):
+    """What the aggregate table reports: occurrences over the BUCKET
+    superset of [t0, t1] (the planner's d_i)."""
+    b_lo = (t0 // BUCKET) * BUCKET
+    b_hi = (t1 // BUCKET + 1) * BUCKET
+    return int(((data[field] == value) & (ts >= b_lo) & (ts < b_hi)).sum())
+
+
+# ------------------------------------------------------------ heuristic 1
+@pytest.mark.parametrize("fv", sorted(COUNTS))
+@pytest.mark.parametrize("t_range", [(0, T_RANGE), (150, 620)])
+def test_h1_density_matches_oracle(controlled, fv, t_range):
+    store, ts, data = controlled
+    f, v = fv
+    t0, t1 = t_range
+    d = oracle_density(ts, data, f, v, t0, t1)
+    p = plan_query(store, Eq(f, v), t0, t1)
+    if d == 0:
+        assert p.mode == "empty"
+    else:
+        assert p.mode == "index" and p.combine == "intersect"
+        assert len(p.index_conds) == 1
+        assert p.index_conds[0].density == d
+        assert isinstance(p.residual, TrueNode)
+
+
+def test_h1_zero_density_short_circuits(controlled):
+    store, ts, data = controlled
+    # Known value, zero occurrences inside the range.
+    p = plan_query(store, Eq("fa", "gone"), 0, T_RANGE)
+    assert p.mode == "empty"
+    # Never-ingested value: density 0 the same way.
+    p = plan_query(store, Eq("fa", "never-seen"), 0, T_RANGE)
+    assert p.mode == "empty"
+    # The executor must do NO work: zero batches even in batched mode.
+    qp = QueryProcessor(store)
+    stats = QueryStats()
+    rows = sum(b.n for b in qp.run_scheme("batched_index", 0, T_RANGE, Eq("fa", "gone"), stats=stats))
+    assert rows == 0 and stats.batches == 0
+    # But the same value IS found where it lives.
+    p = plan_query(store, Eq("fa", "gone"), T_FAR, T_FAR + 1000)
+    assert p.mode == "index" and p.index_conds[0].density == 50
+
+
+def test_h1_unindexed_field_filters(controlled):
+    store, _, _ = controlled
+    p = plan_query(store, Eq("raw", "3"), 0, T_RANGE)
+    assert p.mode == "filter"
+
+
+# ------------------------------------------------------------ heuristic 2
+def test_h2_or_of_eq_unions(controlled):
+    store, ts, data = controlled
+    tree = Or(Eq("fa", "x2"), Eq("fb", "y19"), Eq("fd", "w200"))
+    p = plan_query(store, tree, 0, T_RANGE)
+    assert p.mode == "index" and p.combine == "union"
+    dens = {(c.field, c.value): c.density for c in p.index_conds}
+    assert dens == {
+        ("fa", "x2"): oracle_density(ts, data, "fa", "x2", 0, T_RANGE),
+        ("fb", "y19"): oracle_density(ts, data, "fb", "y19", 0, T_RANGE),
+        ("fd", "w200"): oracle_density(ts, data, "fd", "w200", 0, T_RANGE),
+    }
+    # A zero-density child does NOT empty a union — the plan stays an
+    # index union and execution returns the other children's rows.
+    tree = Or(Eq("fa", "gone"), Eq("fa", "x2"))
+    p = plan_query(store, tree, 0, T_RANGE)
+    assert p.mode == "index" and p.combine == "union"
+    qp = QueryProcessor(store)
+    rows = sum(b.n for b in qp.run_scheme("batched_index", 0, T_RANGE, tree))
+    assert rows == int((data["fa"] == "x2").sum())
+    # OR with any non-Eq child falls through to filtering (heuristic 4).
+    p = plan_query(store, Or(Eq("fa", "x2"), Not(Eq("fb", "y9"))), 0, T_RANGE)
+    assert p.mode == "filter"
+
+
+# ------------------------------------------------------------ heuristic 3
+def _selected(plan):
+    return {(c.field, c.value) for c in plan.index_conds}
+
+
+def test_h3_w_threshold_boundary(controlled):
+    store, _, _ = controlled
+    # d_min = 2 (fa=x2), w = 10 -> cutoff exactly 20, strict '<':
+    # y19 (d=19) selected, z20 (d=20) excluded, w200 excluded.
+    tree = And(Eq("fa", "x2"), Eq("fb", "y19"), Eq("fc", "z20"), Eq("fd", "w200"))
+    p = plan_query(store, tree, 0, T_RANGE, w=10.0)
+    assert p.mode == "index" and p.combine == "intersect"
+    assert _selected(p) == {("fa", "x2"), ("fb", "y19")}
+    # The excluded conditions become the residual filter.
+    assert isinstance(p.residual, And)
+    resid = {(c.field, c.value) for c in p.residual.children}
+    assert resid == {("fc", "z20"), ("fd", "w200")}
+    # Raising w past the boundary pulls z20 in (20 < 2 * 10.001).
+    p = plan_query(store, tree, 0, T_RANGE, w=10.001)
+    assert ("fc", "z20") in _selected(p)
+
+
+def test_h3_dmin_floor_tie_break(controlled):
+    store, _, _ = controlled
+    # d_min = 1 (fa=x1): the max(d_min, 1.0) floor makes the cutoff
+    # w * 1 = 10 — y9 (d=9) in, z10 (d=10) out (strict '<').
+    tree = And(Eq("fa", "x1"), Eq("fb", "y9"), Eq("fc", "z10"))
+    p = plan_query(store, tree, 0, T_RANGE, w=10.0)
+    assert _selected(p) == {("fa", "x1"), ("fb", "y9")}
+    # Densities are integers, so d_min in (0, 1) cannot occur and d_min=0
+    # now short-circuits to an empty plan — the floor's only remaining
+    # live case is exactly d_min == 1, asserted above. Zero-density
+    # dominance over selection:
+    tree = And(Eq("fa", "gone"), Eq("fd", "w200"))
+    p = plan_query(store, tree, 0, T_RANGE)
+    assert p.mode == "empty"
+    assert _selected(p) == {("fa", "gone")}  # the proving condition
+    qp = QueryProcessor(store)
+    stats = QueryStats()
+    rows = sum(b.n for b in qp.run_scheme("batched_index", 0, T_RANGE, tree, stats=stats))
+    assert rows == 0 and stats.batches == 0
+
+
+def test_h3_no_eq_child_selected_falls_back(controlled):
+    store, _, _ = controlled
+    # All children too dense relative to d_min under a tiny w: nothing
+    # selected -> heuristic 4 filter mode.
+    tree = And(Eq("fc", "z20"), Eq("fd", "w200"))
+    p = plan_query(store, tree, 0, T_RANGE, w=0.1)
+    assert p.mode == "filter" and p.residual is tree
+    # AND whose only indexable children ride with non-Eq siblings still
+    # indexes the rare ones and keeps the rest as residual.
+    tree = And(Eq("fa", "x2"), Not(Eq("fb", "y9")))
+    p = plan_query(store, tree, 0, T_RANGE)
+    assert p.mode == "index" and _selected(p) == {("fa", "x2")}
+
+
+# ------------------------------------------------------------ heuristic 4
+@pytest.mark.parametrize(
+    "tree",
+    [
+        Not(Eq("fa", "x2")),
+        Cmp("raw", "<", 4),
+        Or(Eq("fa", "x2"), Cmp("raw", "<", 4)),
+    ],
+)
+def test_h4_everything_else_filters(controlled, tree):
+    store, _, _ = controlled
+    p = plan_query(store, tree, 0, T_RANGE)
+    assert p.mode == "filter" and p.residual is tree
+
+
+def test_use_index_false_always_filters(controlled):
+    store, _, _ = controlled
+    p = plan_query(store, Eq("fa", "x2"), 0, T_RANGE, use_index=False)
+    assert p.mode == "filter"
