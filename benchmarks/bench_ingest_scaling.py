@@ -153,12 +153,14 @@ def device_sweep(
                 ts, cols = parse_web_proxy_lines(lines)
                 nbytes = sum(len(l) for l in lines)
                 parsed.append((ts, cols, nbytes))
-            # Warm the plane's three jitted programs (append/minor/major)
-            # so the timed window measures steady-state ingest, not XLA
+            # Warm the plane's jitted programs (append, and minor/major
+            # via compact — publish no longer runs compactions) so the
+            # timed window measures steady-state ingest, not XLA
             # compilation; the telemetry baseline is subtracted below.
             warm = np.arange(64, dtype=np.int32)
             plane.ingest(warm, np.zeros((64, store.schema.n_fields), np.int32),
                          warm % plane.n_tablets)
+            plane.compact()
             plane.publish()
             base_tel = plane.telemetry()
             plane.blocked_seconds = 0.0
@@ -189,6 +191,100 @@ def device_sweep(
                     "device_rows": int((tel["rows"] - base_tel["rows"]).sum()),
                 }
             )
+    return out
+
+
+# ------------------------------------------------- measured/publish latency
+def publish_latency_sweep(
+    base_rows_list=(6_000, 60_000),
+    delta_rows: int = 512,
+    n_cycles: int = 5,
+    mem_rows: int = 1024,
+    max_runs: int = 4,
+) -> List[Dict]:
+    """publish() cost vs base fill — the headline fix of the run-aware
+    read path. publish used to fold every run slab into the base (a
+    device merge over the full tablet capacity) before queries could see
+    fresh rows, so freshness cost grew with DATABASE size. Now reads
+    search base + runs + sealed memtable and publish is a memtable seal
+    (O(mem_rows)) plus a metadata flip: its latency must stay flat as the
+    base fill grows 10x, and it must never trip a compaction.
+
+    Per base size: bulk-ingest base_rows and fold them into the base via
+    compact() (the batched background fold point), then run timed
+    query-while-ingest cycles — ingest a small delta, publish, query —
+    recording publish and query latency and asserting every delta row is
+    visible. Ingest may trip its own minors as the deltas accumulate
+    across cycles (normal LSM behavior, excluded by the per-publish
+    telemetry deltas); what must stay zero is compaction attributable to
+    PUBLISH itself — the measured publish cost is the pure freshness
+    flip."""
+    import jax
+
+    from repro.core import EventStore, web_proxy_schema
+    from repro.core.dist_ingest import DistBatchWriter, DistIngestPlane
+    from repro.core.dist_query import DistQueryProcessor
+    from repro.launch.mesh import make_dev_mesh
+
+    out = []
+    src = SyntheticWebProxySource(seed=31)
+    for base_rows in base_rows_list:
+        store = EventStore(web_proxy_schema(), n_shards=4)  # dictionary carrier
+        mesh = make_dev_mesh(1, 1)
+        plane = DistIngestPlane.for_store(
+            store,
+            mesh,
+            capacity=int(base_rows * 0.75) + n_cycles * delta_rows + mem_rows,
+            tablets_per_device=2,
+            mem_rows=mem_rows,
+            max_runs=max_runs,
+            append_rows=min(mem_rows, 512),
+        )
+        w = DistBatchWriter(store, plane, batch_rows=4096, writer_id=0)
+        lines = src.gen_lines(base_rows + n_cycles * delta_rows, 0, 3600)
+        ts, cols = parse_web_proxy_lines(lines)
+        w.add(ts[:base_rows], {k: v[:base_rows] for k, v in cols.items()})
+        w.close()
+        plane.compact()  # fold the bulk load: base fill == base_rows
+        dq = DistQueryProcessor(store, plane=plane)
+        dq.scan_range(None, 0, 7200)  # warm seal + scan compiles
+        base_fill = int(plane.telemetry()["base_n"].sum())
+        pub_s, query_s = [], []
+        pub_minors = pub_majors = 0
+        visible = base_rows
+        for c in range(n_cycles):
+            sl = slice(base_rows + c * delta_rows, base_rows + (c + 1) * delta_rows)
+            wc = DistBatchWriter(store, plane, batch_rows=delta_rows, writer_id=1)
+            wc.add(ts[sl], {k: v[sl] for k, v in cols.items()})
+            wc.close()
+            visible += delta_rows
+            tel0 = plane.telemetry()
+            t0 = time.perf_counter()
+            ds = plane.publish()
+            jax.block_until_ready(ds.mem_rev_ts)
+            pub_s.append(time.perf_counter() - t0)
+            # Compactions attributable to publish ITSELF (ingest may trip
+            # its own minors between cycles) — MUST stay 0: the whole
+            # point is that publish never folds.
+            tel1 = plane.telemetry()
+            pub_minors += int((tel1["minor"] - tel0["minor"]).sum())
+            pub_majors += int((tel1["major"] - tel0["major"]).sum())
+            t0 = time.perf_counter()
+            count, _, _ = dq.scan_range(None, 0, 7200)
+            query_s.append(time.perf_counter() - t0)
+            assert count == visible, (count, visible)
+        out.append(
+            {
+                "base_rows": base_fill,
+                "delta_rows": delta_rows,
+                "publish_us": float(np.median(pub_s) * 1e6),
+                "query_us": float(np.median(query_s) * 1e6),
+                "rows_visible": visible,
+                "publish_majors": pub_majors,
+                "publish_minors": pub_minors,
+                "overflow": int(plane.telemetry()["overflow"].sum()),
+            }
+        )
     return out
 
 
@@ -291,6 +387,9 @@ def run(quick: bool = False) -> Dict:
         tablets_list=(1, 2) if quick else (1, 2, 4),
         rows_per_worker=4_000 if quick else 10_000,
     )
+    sweep_publish = publish_latency_sweep(
+        base_rows_list=(4_000, 40_000) if quick else (6_000, 60_000),
+    )
     sims = fig3_sweep(client["rows_per_s"], tablet["rows_per_s"])
     regimes = fig4_regimes(client["rows_per_s"], tablet["rows_per_s"])
     return {
@@ -298,6 +397,7 @@ def run(quick: bool = False) -> Dict:
         "tablet": tablet,
         "real_sweep": sweep_real,
         "device_sweep": sweep_device,
+        "publish_sweep": sweep_publish,
         "fig3": sims,
         "fig4": regimes,
     }
@@ -319,6 +419,12 @@ def emit_csv(res: Dict) -> List[str]:
             f"{1e6 * r['workers'] / max(r['rows_per_s'], 1):.2f},"
             f"rows_per_s={r['rows_per_s']:.0f};blocked_s={r['blocked_s']:.3f};"
             f"minor={r['minor_compactions']};major={r['major_compactions']}"
+        )
+    for r in res.get("publish_sweep", []):
+        lines.append(
+            f"publish_latency_base{r['base_rows']},{r['publish_us']:.1f},"
+            f"query_us={r['query_us']:.1f};rows={r['rows_visible']};"
+            f"publish_majors={r['publish_majors']}"
         )
     for s in res["fig3"]:
         lines.append(
@@ -350,6 +456,26 @@ def validate(res: Dict) -> List[str]:
         r["major_compactions"] > 0 for r in res["device_sweep"]
     ):
         fails.append("device sweep never tripped a major compaction")
+    # Run-aware publish: NO compaction attributable to publish, every delta
+    # row visible to the query-while-ingest cycle, and flat latency — the
+    # largest base fill is 10x the smallest, so a publish that still paid
+    # an O(capacity) re-merge would show an order-of-magnitude spread.
+    pub = res.get("publish_sweep", [])
+    for r in pub:
+        if r["publish_majors"] or r["publish_minors"]:
+            fails.append(
+                f"publish folded at base={r['base_rows']}: "
+                f"{r['publish_minors']} minors, {r['publish_majors']} majors"
+            )
+        if r["overflow"]:
+            fails.append(f"publish sweep tablet overflow at base={r['base_rows']}")
+    if pub:
+        lo = min(r["publish_us"] for r in pub)
+        hi = max(r["publish_us"] for r in pub)
+        if hi / max(lo, 1e-9) > 5.0:
+            fails.append(
+                f"publish latency not flat vs base fill: {lo:.0f}us -> {hi:.0f}us"
+            )
     # Linear scaling at low load: sim throughput for (w, s=8) ~ w * client.
     c = res["client"]["rows_per_s"]
     for s in res["fig3"]:

@@ -44,10 +44,15 @@ seconds accrue PER WRITER (each writer's own tripped-major drains), with
 the plane scalar kept as their sum — the paper's §IV-A per-client
 backpressure curve is directly plottable from telemetry().
 
-publish() folds everything into the base runs and returns a DistStore
-view of them — the incremental-update path: freshly ingested rows AND
-their index/aggregate entries become visible to DistQueryProcessor
-without a host round trip or re-scatter.
+publish() is a SNAPSHOT, not a fold: it seals the memtables (one
+delta-sized sort, O(mem_rows)) and hands out a DistStore view of ALL
+levels — base, run slabs, sealed memtable — for every family. The
+distributed read path (core/dist_query.py) searches every level, so
+freshly ingested rows AND their index/aggregate entries become visible
+to DistQueryProcessor without a host round trip, a re-scatter, or the
+former O(capacity) run->base re-merge per freshness flip. Major
+compaction (threshold-driven during ingest, or batched in the
+background via compact()) is the ONLY fold point.
 
 Host-side flush triggers are exact with zero device syncs: tablet
 assignments are computed host-side, so a bincount per chunk mirrors the
@@ -109,7 +114,7 @@ class _Family:
     col_dtype: np.dtype
     mem_rows: int
     capacity: int
-    combine: bool = False
+    combine: str = "none"  # major-scope fold: "none" | "sum" | "dedup"
 
 
 def _combine_dup_keys(keys, vals, sentinel):
@@ -126,6 +131,17 @@ def _combine_dup_keys(keys, vals, sentinel):
     # scatter is idempotent; the sentinel segment (if any) is the last.
     ukeys = jnp.full((n,), sentinel, keys.dtype).at[seg].set(keys)
     return ukeys, sums, n_unique
+
+
+def _sort_masked(keys, cols, n, sentinel):
+    """Mask entries past the fill to the sentinel and sort (payload travels
+    with its key) — memtable slots beyond n hold stale rows left over from
+    before the last flush. Shared by minor compaction and the publish seal
+    so both produce the same sorted, sentinel-tailed level layout."""
+    valid = jnp.arange(keys.shape[0], dtype=jnp.int32) < n
+    masked = jnp.where(valid, keys, sentinel)
+    order = jnp.argsort(masked)
+    return masked[order], cols[order]
 
 
 class DistIngestPlane:
@@ -204,13 +220,14 @@ class DistIngestPlane:
                 _Family(
                     "ix", np.dtype(np.int64), KEY_PAD64, 0,
                     np.dtype(np.int32), n_idx * self.mem_rows, n_idx * self.capacity,
+                    combine="dedup",
                 )
             )
             fams.append(
                 _Family(
                     "ag", np.dtype(np.int64), KEY_PAD64, 1,
                     np.dtype(np.int64), n_idx * self.mem_rows, n_idx * self.capacity,
-                    combine=True,
+                    combine="sum",
                 )
             )
         return tuple(fams)
@@ -380,13 +397,11 @@ class DistIngestPlane:
                 slot = jnp.clip(nr, 0, k - 1)
                 out = dict(loc)
                 for f in families:
-                    p, m = f.name, f.mem_rows
+                    p = f.name
                     n = loc[f"{p}_mem_n"]
-                    valid = jnp.arange(m, dtype=jnp.int32) < n
-                    keys = jnp.where(valid, loc[f"{p}_mem_k"], f.sentinel)
-                    order = jnp.argsort(keys)
-                    skeys = keys[order]
-                    scols = loc[f"{p}_mem_c"][order]
+                    skeys, scols = _sort_masked(
+                        loc[f"{p}_mem_k"], loc[f"{p}_mem_c"], n, f.sentinel
+                    )
                     rk, rc, rn = loc[f"{p}_run_k"], loc[f"{p}_run_c"], loc[f"{p}_run_n"]
                     out[f"{p}_run_k"] = rk.at[slot].set(jnp.where(do, skeys, rk[slot]))
                     out[f"{p}_run_c"] = rc.at[slot].set(jnp.where(do, scols, rc[slot]))
@@ -405,7 +420,10 @@ class DistIngestPlane:
             out_specs=self._specs(names),
             check_rep=False,
         )
-        self._steps["minor"] = jax.jit(smapped, donate_argnums=(0,))
+        # NOT donated: publish() hands out DistStore views of the run
+        # slabs (run-aware reads), and on backends that implement donation
+        # a donated minor would delete arrays a caller may still hold.
+        self._steps["minor"] = jax.jit(smapped)
         return self._steps["minor"]
 
     def _major_names(self):
@@ -454,12 +472,24 @@ class DistIngestPlane:
                     fk, fc = merge_sorted_device(
                         jnp.stack([pad_a, pad_b]), jnp.stack([ca, cb]), backend=backend
                     )
-                    if f.combine:
+                    if f.combine == "sum":
                         # Aggregate family: sum duplicate (field, value,
                         # bucket) keys — Accumulo's combiner at compaction
                         # scope. The base stays at unique-key cardinality.
                         fk, sums, total = _combine_dup_keys(fk, fc[:, 0], f.sentinel)
                         fc = sums[:, None].astype(fc.dtype)
+                    elif f.combine == "dedup":
+                        # Index family: repeated field|value|rev_ts keys
+                        # collapse (the same key compaction, payload
+                        # discarded — ix rows are zero-width) — without
+                        # this the ix base accumulates duplicate postings
+                        # forever. Exactness holds because the row fetch
+                        # expands a candidate rev_ts by binary search over
+                        # the event levels: ONE posting finds EVERY
+                        # matching row.
+                        fk, _, total = _combine_dup_keys(
+                            fk, jnp.zeros(fk.shape, jnp.int32), f.sentinel
+                        )
                     else:
                         total = bn + rn.sum()
                     new_bn = jnp.where(do, jnp.minimum(total, jnp.int32(c)), bn)
@@ -482,13 +512,66 @@ class DistIngestPlane:
             out_specs=(self._specs(run_names), self._specs(base_names)),
             check_rep=False,
         )
-        # The base buffers are deliberately NOT donated: publish() hands
-        # out DistStore views of them, and on backends that implement
-        # donation (TPU/GPU) a donated major would delete the arrays a
-        # caller may still hold. Majors are rare; one base copy each is
-        # the price of stable published views.
-        self._steps["major"] = jax.jit(smapped, donate_argnums=(0,))
+        # Deliberately NOT donated (neither runs nor bases): publish()
+        # hands out DistStore views of run slabs AND base runs, and on
+        # backends that implement donation (TPU/GPU) a donated major
+        # would delete arrays a caller may still hold. Majors are rare;
+        # one copy each is the price of stable published views.
+        self._steps["major"] = jax.jit(smapped)
         return self._steps["major"]
+
+    def _seal_names(self):
+        names = []
+        for f in self.families:
+            p = f.name
+            names += [f"{p}_mem_k", f"{p}_mem_c", f"{p}_mem_n"]
+        return names
+
+    def _seal_step(self):
+        """Sorted SNAPSHOT of the memtables — the only per-publish device
+        work. O(mem_rows log mem_rows) per tablet, independent of base
+        fill: this is what makes publish() a freshness flip instead of an
+        O(capacity) re-merge. Reads the live memtable slabs (no donation)
+        and writes fresh sealed arrays, so later appends can't tear a
+        published view."""
+        if "seal" in self._steps:
+            return self._steps["seal"]
+        mesh = self.mesh
+        families = self.families
+        names = self._seal_names()
+        out_specs = {}
+        for f in families:
+            p = f.name
+            out_specs[f"{p}_sealed_k"] = P(self.axes, None)
+            out_specs[f"{p}_sealed_c"] = P(self.axes, None, None)
+            out_specs[f"{p}_sealed_n"] = P(self.axes)
+
+        def device_fn(st):
+            def one(loc):
+                out = {}
+                for f in families:
+                    p = f.name
+                    n = loc[f"{p}_mem_n"]
+                    # Same mask-past-fill + sort as a minor flush: sealed
+                    # levels obey the sorted + sentinel-tailed invariant
+                    # of runs and base.
+                    out[f"{p}_sealed_k"], out[f"{p}_sealed_c"] = _sort_masked(
+                        loc[f"{p}_mem_k"], loc[f"{p}_mem_c"], n, f.sentinel
+                    )
+                    out[f"{p}_sealed_n"] = n
+                return out
+
+            return jax.vmap(one)(st)
+
+        smapped = shard_map(
+            device_fn,
+            mesh=mesh,
+            in_specs=(self._specs(names),),
+            out_specs=out_specs,
+            check_rep=False,
+        )
+        self._steps["seal"] = jax.jit(smapped)
+        return self._steps["seal"]
 
     # ------------------------------------------------------------- ingest
     def _run_minor(self) -> None:
@@ -573,21 +656,24 @@ class DistIngestPlane:
 
     # -------------------------------------------------------------- reads
     def publish(self) -> DistStore:
-        """Fold memtables and runs into the base runs (device-side merges
-        only) and return the query-visible DistStore view — event rows plus
-        live index postings and aggregate counts. Cheap when nothing was
+        """Snapshot the plane into a query-visible DistStore — ALL levels
+        of every family: base runs, sorted-run slabs, and a sealed (sorted)
+        copy of the memtables. NO fold happens here: the run-aware read
+        path searches every level, so publish costs O(mem_rows) device
+        work (the seal sort) + a metadata flip, independent of base fill —
+        major compaction, threshold-driven during ingest or batched via
+        compact(), is the only point where runs merge into the base.
+
+        The whole snapshot — seal program, state references, cache flip —
+        happens under the plane lock, so a publish racing concurrent
+        writer ingest can never observe a torn state (a chunk half
+        appended, or memtables sealed mid-compaction): every ingest call
+        mutates state under the same lock. Cheap no-op when nothing was
         ingested since the last publish."""
         with self._lock:
             if not self._dirty and self._published is not None:
                 return self._published
-            for _ in range(3):
-                self._run_minor()
-                self._run_major()
-                if int(self._fill.max()) == 0:  # exact mirror: no device sync
-                    break
-            else:  # pragma: no cover — the invariant bounds this to 2 passes
-                raise RuntimeError("publish did not drain the memtables")
-            self._dirty = False
+            sealed = self._seal_step()(self._sub(self._seal_names()))
             s = self.state
             has_ix = len(self.families) > 1
             self._published = DistStore(
@@ -595,14 +681,52 @@ class DistIngestPlane:
                 cols=s["ev_base_c"],
                 counts=s["ev_base_n"],
                 mesh=self.mesh,
+                run_rev_ts=s["ev_run_k"],
+                run_cols=s["ev_run_c"],
+                run_counts=s["ev_run_n"],
+                mem_rev_ts=sealed["ev_sealed_k"],
+                mem_cols=sealed["ev_sealed_c"],
+                mem_counts=sealed["ev_sealed_n"],
                 ix_keys=s["ix_base_k"] if has_ix else None,
                 ix_counts=s["ix_base_n"] if has_ix else None,
+                ix_run_k=s["ix_run_k"] if has_ix else None,
+                ix_run_n=s["ix_run_n"] if has_ix else None,
+                ix_mem_k=sealed["ix_sealed_k"] if has_ix else None,
+                ix_mem_n=sealed["ix_sealed_n"] if has_ix else None,
                 ag_keys=s["ag_base_k"] if has_ix else None,
                 ag_vals=s["ag_base_c"] if has_ix else None,
                 ag_counts=s["ag_base_n"] if has_ix else None,
+                ag_run_k=s["ag_run_k"] if has_ix else None,
+                ag_run_c=s["ag_run_c"] if has_ix else None,
+                ag_run_n=s["ag_run_n"] if has_ix else None,
+                ag_mem_k=sealed["ag_sealed_k"] if has_ix else None,
+                ag_mem_c=sealed["ag_sealed_c"] if has_ix else None,
+                ag_mem_n=sealed["ag_sealed_n"] if has_ix else None,
                 agg_bucket_s=self.agg_bucket_s if has_ix else None,
             )
+            self._dirty = False
             return self._published
+
+    def compact(self) -> None:
+        """Batched background fold: drain memtables into runs (minor) and
+        runs into the base (major) for every family. This — plus the
+        threshold-driven majors ingest itself trips — is the ONLY place
+        runs fold into the base; publish() never does. Call it off the
+        query path (a maintenance thread, an idle writer) to keep run
+        counts low; queries stay exact either way, the fold only moves
+        where rows live. No-op (and keeps the published-view cache) when
+        there is nothing to fold."""
+        with self._lock:
+            if int(self._fill.max()) == 0 and int(self._runs_host.max()) == 0:
+                return  # exact mirrors: nothing in memtables or run slots
+            for _ in range(3):
+                self._run_minor()
+                self._run_major()
+                if int(self._fill.max()) == 0:  # exact mirror: no device sync
+                    break
+            else:  # pragma: no cover — the invariant bounds this to 2 passes
+                raise RuntimeError("compact did not drain the memtables")
+            self._dirty = True  # published view now points at stale levels
 
     def telemetry(self) -> Dict[str, np.ndarray]:
         """Per-tablet device counters (the paper's backpressure signals),

@@ -20,6 +20,19 @@ and a query executes as ONE jitted shard_map program:
                              group-id space is dense by construction —
                              see core/iterators.py ResolvedGrouping)
 
+RUN-AWARE READS: every read primitive searches ALL LSM LEVELS of a
+published DistIngestPlane snapshot — the major-compacted base, the K
+sorted-run slabs from minor compactions, and a sealed (sorted) copy of
+the memtable — for all three table families. Each level is sorted, so
+the same searchsorted/filter/top-k machinery applies per level and the
+per-tablet partials merge device-side (scan: rev_ts-ordered top-k merge
+across levels; index: postings from every level feed the
+intersect/union; aggregate/density: sums across levels, duplicates only
+ever fold at major compaction). This is what lets
+DistIngestPlane.publish() be a metadata flip instead of an O(capacity)
+re-merge: freshness costs O(delta), not O(database), per the
+high-rate-ingest literature (arXiv:1406.4923).
+
 The adaptive batcher (Algs 1-2) drives this exactly like the host path:
 each batch is one device-program invocation over a time sub-range — the
 paper's design, 256 tablets wide. dryrun.py lowers + compiles it on the
@@ -28,14 +41,13 @@ single-pod and multi-pod meshes as the extra `llcysa-store` cells.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
 from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental.shard_map import shard_map
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from . import keypack
 from .filter import FilterProgram, compile_tree
@@ -49,44 +61,81 @@ _I32_MAX = np.iinfo(np.int32).max
 
 @dataclass
 class DistStore:
-    """Device-resident tablet grid — the paper's three tables per source.
+    """Device-resident tablet grid — the paper's three tables per source,
+    snapshotted at ALL LSM levels (base + sorted runs + sealed memtable).
 
-    rev_ts:  (T, R) int32   reversed timestamps, ascending per tablet
-                            (newest first), padded with TS_MAX+... sentinel
+    Event family (always present):
+
+    rev_ts:  (T, R) int32   base run: reversed timestamps, ascending per
+                            tablet (newest first), sentinel-padded
     cols:    (T, R, F) int32 dictionary codes, pad rows carry junk codes
                             (masked by counts in every scan)
-    counts:  (T,) int32     live rows per tablet
+    counts:  (T,) int32     live rows in the BASE level per tablet
+    run_rev_ts: (T, K, M) int32  minor-compaction sorted-run slabs
+    run_cols:   (T, K, M, F) int32
+    run_counts: (T, K) int32     live rows per run slot (0 = empty/stale)
+    mem_rev_ts: (T, M) int32     sealed memtable: sorted snapshot taken at
+    mem_cols:   (T, M, F) int32  publish() time (the only per-publish
+    mem_counts: (T,) int32       device work — O(memtable), not O(base))
+
     T = number of tablets = n_devices * tablets_per_device (T must divide
     evenly across the mesh); R = tablet capacity. The grid is either a
-    one-shot scatter of a host store (from_event_store) or the live base
-    run of a DistIngestPlane (dist_ingest.publish) — the latter updates
-    incrementally as writers ingest, no re-scatter.
+    bulk replay of a host store (from_event_store) or a live snapshot of
+    a DistIngestPlane (dist_ingest.publish) — the latter updates
+    incrementally as writers ingest, no re-scatter and NO fold: rows
+    may live at any level and every read searches them all.
 
-    Planes that maintain the index/aggregate families additionally expose:
+    Planes that maintain the index/aggregate families additionally expose
+    the same three levels per family:
 
     ix_keys:  (T, Ci) int64  sorted packed index keys (field|value|rev_ts)
                              — postings for one (field, value) over a time
                              range are one contiguous slice, INT64_MAX pad
-    ix_counts: (T,) int32    live postings per tablet
+    ix_counts: (T,) int32    live postings in the base per tablet
+    ix_run_k / ix_run_n, ix_mem_k / ix_mem_n — run + sealed levels
     ag_keys:  (T, Ca) int64  sorted packed aggregate keys
-                             (field|value|bucket), unique per tablet
+                             (field|value|bucket), unique per tablet AT
+                             THE BASE level only (duplicates fold at
+                             major); run/mem levels may repeat keys and
+                             readers sum across levels
     ag_vals:  (T, Ca, 1) int64 occurrence counts per aggregate key
-    ag_counts: (T,) int32    live aggregate keys per tablet
+    ag_counts: (T,) int32    live aggregate keys in the base per tablet
+    ag_run_k / ag_run_c / ag_run_n, ag_mem_k / ag_mem_c / ag_mem_n
     agg_bucket_s: int        the bucketing the densities were counted at
 
-    These are None for index-less stores (a plane built without
-    indexed_fids); DistQueryProcessor then falls back to filter-scan.
+    Index/aggregate fields are None for index-less stores (a plane built
+    without indexed_fids); DistQueryProcessor then falls back to
+    filter-scan. Run/mem fields are None for base-only grids (a
+    from_event_store bulk replay — folded up front, nothing unfolded to
+    search — hand-built stores, dry-run shapes); reads then search the
+    base alone.
     """
 
     rev_ts: jax.Array
     cols: jax.Array
     counts: jax.Array
     mesh: Mesh
+    run_rev_ts: Optional[jax.Array] = None
+    run_cols: Optional[jax.Array] = None
+    run_counts: Optional[jax.Array] = None
+    mem_rev_ts: Optional[jax.Array] = None
+    mem_cols: Optional[jax.Array] = None
+    mem_counts: Optional[jax.Array] = None
     ix_keys: Optional[jax.Array] = None
     ix_counts: Optional[jax.Array] = None
+    ix_run_k: Optional[jax.Array] = None
+    ix_run_n: Optional[jax.Array] = None
+    ix_mem_k: Optional[jax.Array] = None
+    ix_mem_n: Optional[jax.Array] = None
     ag_keys: Optional[jax.Array] = None
     ag_vals: Optional[jax.Array] = None
     ag_counts: Optional[jax.Array] = None
+    ag_run_k: Optional[jax.Array] = None
+    ag_run_c: Optional[jax.Array] = None
+    ag_run_n: Optional[jax.Array] = None
+    ag_mem_k: Optional[jax.Array] = None
+    ag_mem_c: Optional[jax.Array] = None
+    ag_mem_n: Optional[jax.Array] = None
     agg_bucket_s: Optional[int] = None
 
     @property
@@ -101,6 +150,12 @@ class DistStore:
     def has_index(self) -> bool:
         return self.ix_keys is not None
 
+    @property
+    def has_runs(self) -> bool:
+        """True when the snapshot carries run + sealed-memtable levels
+        (a plane publish); False for base-only grids."""
+        return self.run_rev_ts is not None
+
 
 def tablet_specs(mesh: Mesh) -> Dict[str, P]:
     """Tablets shard over ALL mesh axes (every chip is a tablet server)."""
@@ -110,6 +165,28 @@ def tablet_specs(mesh: Mesh) -> Dict[str, P]:
         "cols": P(axes, None, None),
         "counts": P(axes),
     }
+
+
+def _ev_level_specs(axes) -> Tuple[P, ...]:
+    """Partition specs for the event family's run + sealed-mem levels:
+    (run_rev_ts, run_cols, run_counts, mem_rev_ts, mem_cols, mem_counts)."""
+    return (
+        P(axes, None, None), P(axes, None, None, None), P(axes, None),
+        P(axes, None), P(axes, None, None), P(axes),
+    )
+
+
+def _ix_level_specs(axes) -> Tuple[P, ...]:
+    """(ix_run_k, ix_run_n, ix_mem_k, ix_mem_n)."""
+    return (P(axes, None, None), P(axes, None), P(axes, None), P(axes))
+
+
+def _ag_level_specs(axes) -> Tuple[P, ...]:
+    """(ag_run_k, ag_run_c, ag_run_n, ag_mem_k, ag_mem_c, ag_mem_n)."""
+    return (
+        P(axes, None, None), P(axes, None, None, None), P(axes, None),
+        P(axes, None), P(axes, None, None), P(axes),
+    )
 
 
 def dist_store_shapes(mesh: Mesh, rows_per_tablet: int, n_fields: int, tablets_per_device: int = 1):
@@ -149,7 +226,17 @@ def from_event_store(
         rk = np.zeros((0, 2), np.int64)
         rc = np.zeros((0, store.schema.n_fields), np.int32)
     assign = (rk[:, 1] % t).astype(np.int64)  # hash-uniform tablet choice
-    cap = capacity or max(int(np.bincount(assign, minlength=t).max()), 1)
+    per_tablet = np.bincount(assign, minlength=t)
+    cap = capacity or max(int(per_tablet.max()), 1)
+    if int(per_tablet.max()) > cap:
+        # An explicitly undersized capacity must fail loudly BEFORE the
+        # replay: publish() no longer folds runs into the base, so the
+        # device overflow counter would only trip at some later major —
+        # the host-side assignment counts are exact now, use them.
+        raise ValueError(
+            f"tablet overflow: {int(per_tablet.max())} rows for one tablet "
+            f"over capacity {cap}"
+        )
     # The plane's flush triggers are exact per tablet (host-side fill
     # mirror), so fixed per-tablet buffers suffice: a tablet majors every
     # max_runs * mem_rows of ITS OWN rows — run-slab memory stays
@@ -166,13 +253,30 @@ def from_event_store(
         append_rows=2048,
     )
     plane.ingest(rk[:, 0].astype(np.int32), rc, assign.astype(np.int32))
-    dist = plane.publish()
+    # A bulk replay is one-shot: fold everything into the base up front
+    # and snapshot ONLY the base level. The replay plane's big run slabs
+    # (8 slots x 8192 rows) would otherwise ride along empty in every
+    # compiled read — fixed-shape level work with nothing in it. Live
+    # planes (DistQueryProcessor(plane=...)) keep the full run-aware
+    # snapshot; this static view has nothing unfolded to search.
+    plane.compact()
     overflow = int(plane.telemetry()["overflow"].sum())
-    if overflow:
-        # An explicitly undersized capacity must fail loudly, exactly as
-        # the pre-plane scatter implementation did.
+    if overflow:  # pragma: no cover — the pre-check above bounds this
         raise ValueError(f"tablet overflow: {overflow} rows over capacity {cap}")
-    return dist
+    s = plane.state
+    has_ix = len(plane.families) > 1
+    return DistStore(
+        rev_ts=s["ev_base_k"],
+        cols=s["ev_base_c"],
+        counts=s["ev_base_n"],
+        mesh=mesh,
+        ix_keys=s["ix_base_k"] if has_ix else None,
+        ix_counts=s["ix_base_n"] if has_ix else None,
+        ag_keys=s["ag_base_k"] if has_ix else None,
+        ag_vals=s["ag_base_c"] if has_ix else None,
+        ag_counts=s["ag_base_n"] if has_ix else None,
+        agg_bucket_s=plane.agg_bucket_s if has_ix else None,
+    )
 
 
 def _program_eval(cols, opcodes, arg0, arg1, codesets):
@@ -183,52 +287,167 @@ def _program_eval(cols, opcodes, arg0, arg1, codesets):
     return program_eval_rows(cols, opcodes, arg0, arg1, codesets)
 
 
-def build_scan_step(mesh: Mesh, n_fields: int, prog_len: int, set_shape: Tuple[int, int], top_k: int = 128):
+def _merge_level_topk(rev_parts, col_parts, top_k):
+    """Device-side merge of per-level top-k candidates: concatenate the
+    (sentinel-padded, _I32_MAX) rev_ts slates and keep the k smallest —
+    smallest rev_ts == newest row, matching per-level order."""
+    all_rev = jnp.concatenate(rev_parts)
+    all_cols = jnp.concatenate(col_parts)
+    order = jnp.argsort(all_rev)[:top_k]
+    return all_rev[order], all_cols[order]
+
+
+def build_scan_step(
+    mesh: Mesh,
+    n_fields: int,
+    prog_len: int,
+    set_shape: Tuple[int, int],
+    top_k: int = 128,
+    runs: bool = False,
+):
     """Jitted distributed scan: (store, program, t-range) -> (global count,
     per-tablet top-k newest matches). One invocation per adaptive batch.
     Each device vmaps over its local tablets (tablets_per_device may
     exceed 1 — the ingest plane's W x T sweeps size T independently of
-    the mesh), then psums across the mesh."""
+    the mesh), then psums across the mesh.
+
+    With runs=True the scan is RUN-AWARE: the same range-restrict +
+    filter + top-k runs per LSM level (base, each sorted-run slab, the
+    sealed memtable), counts sum, and the per-level top-k slates merge by
+    rev_ts on device — unfolded rows are exactly as visible as the base."""
     axes = tuple(mesh.axis_names)
     specs = tablet_specs(mesh)
 
-    def tablet_scan(rev_ts, cols, counts, opcodes, arg0, arg1, codesets, rts_lo, rts_hi):
-        # Local slab: (Tl, R), (Tl, R, F), (Tl,) after shard_map slicing.
-        r = rev_ts.shape[1]
+    def tablet_scan(*args):
+        if runs:
+            (rev_ts, cols, counts, run_k, run_c, run_n, mem_k, mem_c, mem_n,
+             opcodes, arg0, arg1, codesets, rts_lo, rts_hi) = args
+        else:
+            (rev_ts, cols, counts,
+             opcodes, arg0, arg1, codesets, rts_lo, rts_hi) = args
 
-        def one(rev_l, cols_l, n):
-            # Range restriction on sorted rev_ts: [lo, hi) via searchsorted.
-            a = jnp.searchsorted(rev_l, rts_lo, side="left")
-            b = jnp.searchsorted(rev_l, rts_hi, side="left")
-            idx = jnp.arange(r, dtype=jnp.int32)
-            in_range = (idx >= a) & (idx < b) & (idx < n)
-            hit = _program_eval(cols_l, opcodes, arg0, arg1, codesets) & in_range
-            count = hit.sum(dtype=jnp.int32)
-            # Top-k newest matches (smallest rev_ts == newest; rows sorted).
-            rank = jnp.where(hit, idx, r)
-            top = jnp.sort(rank)[:top_k]
-            valid = top < r
-            safe = jnp.clip(top, 0, r - 1)
-            out_ts = jnp.where(valid, rev_l[safe], INVALID_TS)
-            out_cols = jnp.where(valid[:, None], cols_l[safe], -1)
+        def one(rev_l, cols_l, n, *lv):
+            def level(rev, cl, nn):
+                r = rev.shape[0]
+                # Range restriction on sorted rev_ts: [lo, hi) via
+                # searchsorted; nn masks pad rows AND stale run slots.
+                a = jnp.searchsorted(rev, rts_lo, side="left")
+                b = jnp.searchsorted(rev, rts_hi, side="left")
+                idx = jnp.arange(r, dtype=jnp.int32)
+                in_range = (idx >= a) & (idx < b) & (idx < nn)
+                hit = _program_eval(cl, opcodes, arg0, arg1, codesets) & in_range
+                count = hit.sum(dtype=jnp.int32)
+                # Top-k newest matches (smallest rev_ts == newest).
+                rank = jnp.where(hit, idx, r)
+                top = jnp.sort(rank)[:top_k]
+                valid = top < r
+                safe = jnp.clip(top, 0, r - 1)
+                out_rev = jnp.where(valid, rev[safe], jnp.int32(_I32_MAX))
+                out_cols = jnp.where(valid[:, None], cl[safe], -1)
+                return count, out_rev, out_cols
+
+            count, out_rev, out_cols = level(rev_l, cols_l, n)
+            if runs:
+                rk, rc, rn, mk, mc, mn = lv
+                rcnt, rrev, rcols = jax.vmap(level)(rk, rc, rn)
+                mcnt, mrev, mcols = level(mk, mc, mn)
+                count = count + rcnt.sum(dtype=jnp.int32) + mcnt
+                out_rev, out_cols = _merge_level_topk(
+                    [out_rev, rrev.reshape(-1), mrev],
+                    [out_cols, rcols.reshape(-1, out_cols.shape[1]), mcols],
+                    top_k,
+                )
+            out_ts = jnp.where(out_rev < jnp.int32(_I32_MAX), out_rev, INVALID_TS)
             return count, out_ts, out_cols
 
-        count_l, out_ts, out_cols = jax.vmap(one)(rev_ts, cols, counts)
+        if runs:
+            count_l, out_ts, out_cols = jax.vmap(one)(
+                rev_ts, cols, counts, run_k, run_c, run_n, mem_k, mem_c, mem_n
+            )
+        else:
+            count_l, out_ts, out_cols = jax.vmap(one)(rev_ts, cols, counts)
         total = jax.lax.psum(count_l.sum(dtype=jnp.int32), axes)
         return total, out_ts, out_cols
 
+    in_specs = (specs["rev_ts"], specs["cols"], specs["counts"])
+    if runs:
+        in_specs += _ev_level_specs(axes)
+    in_specs += (
+        P(None), P(None), P(None), P(None, None),  # program: replicated
+        P(), P(),
+    )
     smapped = shard_map(
         tablet_scan,
         mesh=mesh,
-        in_specs=(
-            specs["rev_ts"], specs["cols"], specs["counts"],
-            P(None), P(None), P(None), P(None, None),  # program: replicated
-            P(), P(),
-        ),
+        in_specs=in_specs,
         out_specs=(P(), P(axes, None), P(axes, None, None)),
         check_rep=False,
     )
     return jax.jit(smapped)
+
+
+def _segment_aggregate(r_rev, r_cols, hit, fids, strides, n_groups, bucket_s,
+                       bucket_lo, op, value_fid, value_table, identity):
+    """Fused dense segment aggregation over one slab of gathered rows —
+    the CombinerIterator body shared by the scan-time and index-time
+    aggregate steps. Junk codes on masked rows clamp into range; their
+    contribution is the identity anyway."""
+    r = r_rev.shape[0]
+    gid = jnp.zeros((r,), jnp.int32)
+    for fid, stride in zip(fids, strides):
+        gid = gid + r_cols[:, fid] * jnp.int32(stride)
+    if bucket_s is not None:
+        ts_l = jnp.int32(keypack.TS_MAX) - r_rev
+        gid = gid + ts_l // jnp.int32(bucket_s) - bucket_lo
+    gid = jnp.clip(gid, 0, n_groups - 1)
+    if value_fid is not None:
+        codes = jnp.clip(r_cols[:, value_fid], 0, value_table.shape[0] - 1)
+        val = value_table[codes]
+    else:
+        val = jnp.ones((r,), jnp.int32)
+    if op in ("count", "sum"):
+        # Sums accumulate in int64, matching the host iterator stack — a
+        # tablet of large int32 values must not wrap before the psum
+        # (min/max are order statistics).
+        contrib = jnp.where(hit, val.astype(jnp.int64), jnp.int64(identity))
+        aggs = jax.ops.segment_sum(contrib, gid, num_segments=n_groups)
+    elif op == "min":
+        contrib = jnp.where(hit, val, jnp.int32(identity))
+        aggs = jax.ops.segment_min(contrib, gid, num_segments=n_groups)
+    else:
+        contrib = jnp.where(hit, val, jnp.int32(identity))
+        aggs = jax.ops.segment_max(contrib, gid, num_segments=n_groups)
+    cnts = jax.ops.segment_sum(hit.astype(jnp.int64), gid, num_segments=n_groups)
+    return aggs, cnts
+
+
+def _fold_runs_axis(raggs, rcnts, op):
+    """Fold the leading run-slot axis of vmapped per-run (aggs, cnts)
+    partials into one level part — same dispatch as the cross-level merge
+    (counts always add; only the aggregate folds per op)."""
+    if op in ("count", "sum"):
+        return raggs.sum(axis=0), rcnts.sum(axis=0)
+    if op == "min":
+        return raggs.min(axis=0), rcnts.sum(axis=0)
+    return raggs.max(axis=0), rcnts.sum(axis=0)
+
+
+def _combine_level_aggs(parts, op):
+    """Merge per-level (aggs, cnts) partials: rows are disjoint across
+    levels, so sum/count add and min/max fold elementwise."""
+    aggs_parts = [a for a, _ in parts]
+    cnts = sum(c for _, c in parts)
+    if op in ("count", "sum"):
+        aggs = sum(aggs_parts)
+    elif op == "min":
+        aggs = aggs_parts[0]
+        for a in aggs_parts[1:]:
+            aggs = jnp.minimum(aggs, a)
+    else:
+        aggs = aggs_parts[0]
+        for a in aggs_parts[1:]:
+            aggs = jnp.maximum(aggs, a)
+    return aggs, cnts
 
 
 def build_aggregate_step(
@@ -240,11 +459,15 @@ def build_aggregate_step(
     bucket_s: Optional[int],
     op: str,
     value_fid: Optional[int],
+    runs: bool = False,
 ):
     """Jitted distributed scan-time aggregation: the iterator stack's
     terminal CombinerIterator lowered into the mesh program. Each tablet
-    evaluates the fused filter + dense segment aggregation locally; the
-    dense group-id space (mixed-radix codes x time buckets, see
+    evaluates the fused filter + dense segment aggregation locally — per
+    LSM level when runs=True, partials summed across levels (rows are
+    disjoint between levels; the agg FAMILY only folds duplicates at
+    major, but this step aggregates event rows, which never duplicate) —
+    then the dense group-id space (mixed-radix codes x time buckets, see
     ResolvedGrouping) makes the cross-tablet merge a single psum (sum /
     count) or pmin/pmax — no gather of raw rows ever happens."""
     axes = tuple(mesh.axis_names)
@@ -253,47 +476,44 @@ def build_aggregate_step(
     int32_min = jnp.iinfo(jnp.int32).min
     identity = {"count": 0, "sum": 0, "min": int32_max, "max": int32_min}[op]
 
-    def tablet_agg(rev_ts, cols, counts, opcodes, arg0, arg1, codesets,
-                   value_table, rts_lo, rts_hi, bucket_lo):
-        r = rev_ts.shape[1]
+    def tablet_agg(*args):
+        if runs:
+            (rev_ts, cols, counts, run_k, run_c, run_n, mem_k, mem_c, mem_n,
+             opcodes, arg0, arg1, codesets, value_table,
+             rts_lo, rts_hi, bucket_lo) = args
+        else:
+            (rev_ts, cols, counts,
+             opcodes, arg0, arg1, codesets, value_table,
+             rts_lo, rts_hi, bucket_lo) = args
 
-        def one(rev_l, cols_l, n):
-            a = jnp.searchsorted(rev_l, rts_lo, side="left")
-            b = jnp.searchsorted(rev_l, rts_hi, side="left")
-            idx = jnp.arange(r, dtype=jnp.int32)
-            in_range = (idx >= a) & (idx < b) & (idx < n)
-            hit = _program_eval(cols_l, opcodes, arg0, arg1, codesets) & in_range
-            gid = jnp.zeros((r,), jnp.int32)
-            for fid, stride in zip(fids, strides):
-                gid = gid + cols_l[:, fid] * jnp.int32(stride)
-            if bucket_s is not None:
-                ts_l = jnp.int32(keypack.TS_MAX) - rev_l
-                gid = gid + ts_l // jnp.int32(bucket_s) - bucket_lo
-            # Padded/out-of-range rows can carry junk codes: clamp, their
-            # contribution is masked to the identity anyway.
-            gid = jnp.clip(gid, 0, n_groups - 1)
-            if value_fid is not None:
-                codes = jnp.clip(cols_l[:, value_fid], 0, value_table.shape[0] - 1)
-                val = value_table[codes]
-            else:
-                val = jnp.ones((r,), jnp.int32)
-            if op in ("count", "sum"):
-                # Sums accumulate in int64, matching the host iterator
-                # stack — a tablet of large int32 values must not wrap
-                # before the psum (min/max are order statistics).
-                contrib = jnp.where(hit, val.astype(jnp.int64), jnp.int64(identity))
-                aggs = jax.ops.segment_sum(contrib, gid, num_segments=n_groups)
-            elif op == "min":
-                contrib = jnp.where(hit, val, jnp.int32(identity))
-                aggs = jax.ops.segment_min(contrib, gid, num_segments=n_groups)
-            else:
-                contrib = jnp.where(hit, val, jnp.int32(identity))
-                aggs = jax.ops.segment_max(contrib, gid, num_segments=n_groups)
-            cnts = jax.ops.segment_sum(hit.astype(jnp.int64), gid, num_segments=n_groups)
-            return aggs, cnts
+        def one(rev_l, cols_l, n, *lv):
+            def level(rev, cl, nn):
+                r = rev.shape[0]
+                a = jnp.searchsorted(rev, rts_lo, side="left")
+                b = jnp.searchsorted(rev, rts_hi, side="left")
+                idx = jnp.arange(r, dtype=jnp.int32)
+                in_range = (idx >= a) & (idx < b) & (idx < nn)
+                hit = _program_eval(cl, opcodes, arg0, arg1, codesets) & in_range
+                return _segment_aggregate(
+                    rev, cl, hit, fids, strides, n_groups, bucket_s,
+                    bucket_lo, op, value_fid, value_table, identity,
+                )
+
+            parts = [level(rev_l, cols_l, n)]
+            if runs:
+                rk, rc, rn, mk, mc, mn = lv
+                raggs, rcnts = jax.vmap(level)(rk, rc, rn)
+                parts.append(_fold_runs_axis(raggs, rcnts, op))
+                parts.append(level(mk, mc, mn))
+            return _combine_level_aggs(parts, op)
 
         # Local tablets first (vmap + reduce), then one mesh collective.
-        aggs_l, cnts_l = jax.vmap(one)(rev_ts, cols, counts)
+        if runs:
+            aggs_l, cnts_l = jax.vmap(one)(
+                rev_ts, cols, counts, run_k, run_c, run_n, mem_k, mem_c, mem_n
+            )
+        else:
+            aggs_l, cnts_l = jax.vmap(one)(rev_ts, cols, counts)
         if op in ("count", "sum"):
             aggs = jax.lax.psum(aggs_l.sum(axis=0), axes)
         elif op == "min":
@@ -303,19 +523,154 @@ def build_aggregate_step(
         cnts = jax.lax.psum(cnts_l.sum(axis=0), axes)
         return aggs, cnts
 
+    in_specs = (specs["rev_ts"], specs["cols"], specs["counts"])
+    if runs:
+        in_specs += _ev_level_specs(axes)
+    in_specs += (
+        P(None), P(None), P(None), P(None, None),  # program: replicated
+        P(None),  # value table: replicated
+        P(), P(), P(),
+    )
     smapped = shard_map(
         tablet_agg,
         mesh=mesh,
-        in_specs=(
-            specs["rev_ts"], specs["cols"], specs["counts"],
-            P(None), P(None), P(None), P(None, None),  # program: replicated
-            P(None),  # value table: replicated
-            P(), P(), P(),
-        ),
+        in_specs=in_specs,
         out_specs=(P(None), P(None)),
         check_rep=False,
     )
     return jax.jit(smapped)
+
+
+def _posting_slabs(ik_l, ix_lv, cond_lo, cond_hi, n_conds, max_postings, runs):
+    """Per-condition candidate rev_ts slabs from EVERY index level.
+
+    For one tablet: the postings for condition i over the batch's rev_ts
+    range are one contiguous slice of each sorted index level (two binary
+    searches per level, clamped by the level's live count — run slots can
+    hold stale rows past run_n after a major). Each level contributes up
+    to min(max_postings, level size) newest-first rev_ts values (a small
+    level can't yield more postings than it holds); the per-level slates
+    sort into one slab per condition. Returns (slabs (n_conds, S),
+    overflow) where S sums the per-level caps."""
+
+    def posting(ik, nn, lo_i, hi_i):
+        ci = ik.shape[0]
+        cap = min(max_postings, ci)  # static per level
+        a = jnp.minimum(jnp.searchsorted(ik, lo_i, side="left").astype(jnp.int32), nn)
+        b = jnp.minimum(jnp.searchsorted(ik, hi_i, side="left").astype(jnp.int32), nn)
+        cnt = b - a
+        j = jnp.arange(cap, dtype=jnp.int32)
+        valid = j < cnt
+        kk = ik[jnp.clip(a + j, 0, ci - 1)]
+        rts = jnp.where(
+            valid, (kk & jnp.int64(keypack.TS_MAX)).astype(jnp.int32),
+            jnp.int32(_I32_MAX),
+        )
+        return rts, jnp.maximum(cnt - jnp.int32(cap), 0)
+
+    def cond_slab(i):
+        s0, over = posting(ik_l, jnp.int32(ik_l.shape[0]), cond_lo[i], cond_hi[i])
+        if runs:
+            xrk, xrn, xmk, xmn = ix_lv
+            sr, orr = jax.vmap(lambda k, nr: posting(k, nr, cond_lo[i], cond_hi[i]))(
+                xrk, xrn
+            )
+            sm, om = posting(xmk, xmn, cond_lo[i], cond_hi[i])
+            slab = jnp.sort(jnp.concatenate([s0, sr.reshape(-1), sm]))
+            over = over + orr.sum() + om
+        else:
+            slab = s0
+        return slab, over
+
+    slabs, over = jax.vmap(cond_slab)(jnp.arange(n_conds, dtype=jnp.int32))
+    return slabs, over.sum()
+
+
+def _combine_postings(slabs, combine, n_conds):
+    """Device-side key-set combine (paper Fig 2): k-way intersect via
+    merge_intersect membership searches (AND) or a sorted merge (OR).
+    Returns (cand sorted ascending, live mask) — duplicates masked out,
+    since equal rev_ts candidates expand to the same base rows."""
+    from ..kernels.merge_intersect import member_mask_keys
+
+    if combine == "intersect":
+        cand = slabs[0]
+        keep = cand < jnp.int32(_I32_MAX)
+        for i in range(1, n_conds):
+            keep &= member_mask_keys(cand, slabs[i])
+        cand = jnp.sort(jnp.where(keep, cand, jnp.int32(_I32_MAX)))
+    else:
+        cand = jnp.sort(slabs.reshape(-1))
+    is_dup = jnp.concatenate([jnp.zeros((1,), bool), cand[1:] == cand[:-1]])
+    live = (cand < jnp.int32(_I32_MAX)) & ~is_dup
+    return cand, live
+
+
+def _expand_levels(consume, cand, live, rev_l, cols_l, ev_lv, max_rows, runs):
+    """Expand the candidate rev_ts set against EVERY event level and feed
+    each level's gathered row slab to `consume(r_rev, r_cols, valid_m)`.
+
+    Per level: candidate j covers rows [lo_pos[j], hi_pos[j]) by binary
+    search (clamped by the level's live count — stale run slots), and the
+    prefix-sum expansion maps output slot m back through one binary
+    search; rows come out ascending in rev_ts (newest first). The slab is
+    min(max_rows, level size) — a run or sealed-mem level can never yield
+    more rows than it holds, so the compiled gather + predicate work per
+    small level is bounded by the level, not the global cap. Returns
+    (outs, totals, truncs), each as (base, runs | None, mem | None) with
+    runs carrying a leading K axis — the caller merges the outs and sums
+    totals/truncs."""
+    cc = cand.shape[0]
+
+    def expand(rev, cl, nn):
+        r = rev.shape[0]
+        cap = min(max_rows, r)  # static per level
+        lo_pos = jnp.minimum(
+            jnp.searchsorted(rev, cand, side="left").astype(jnp.int32), nn
+        )
+        hi_pos = jnp.minimum(
+            jnp.searchsorted(rev, cand, side="right").astype(jnp.int32), nn
+        )
+        cnt_rows = jnp.where(live, hi_pos - lo_pos, 0)
+        offs = jnp.cumsum(cnt_rows)
+        total = offs[-1]
+        start = offs - cnt_rows
+        m = jnp.arange(cap, dtype=jnp.int32)
+        j = jnp.searchsorted(offs, m, side="right").astype(jnp.int32)
+        jc = jnp.clip(j, 0, cc - 1)
+        row_idx = lo_pos[jc] + (m - start[jc])
+        valid_m = m < total
+        safe = jnp.clip(row_idx, 0, r - 1)
+        r_rev = jnp.where(valid_m, rev[safe], jnp.int32(_I32_MAX))
+        r_cols = jnp.where(valid_m[:, None], cl[safe], -1)
+        trunc = jnp.maximum(total - jnp.int32(cap), 0)
+        return consume(r_rev, r_cols, valid_m), total, trunc
+
+    base_out, base_total, base_trunc = expand(
+        rev_l, cols_l, jnp.int32(rev_l.shape[0])
+    )
+    if not runs:
+        return (base_out, None, None), (base_total, None, None), (base_trunc, None, None)
+    rk, rc, rn, mk, mc, mn = ev_lv
+    runs_out, runs_total, runs_trunc = jax.vmap(expand)(rk, rc, rn)
+    mem_out, mem_total, mem_trunc = expand(mk, mc, mn)
+    return (
+        (base_out, runs_out, mem_out),
+        (base_total, runs_total, mem_total),
+        (base_trunc, runs_trunc, mem_trunc),
+    )
+
+
+def _sum_levels(parts):
+    """Sum a (base, runs | None, mem | None) scalar triple — runs carries
+    the K axis."""
+    base, run_part, mem_part = parts
+    total = base
+    if run_part is not None:
+        total = total + run_part.sum()
+    if mem_part is not None:
+        total = total + mem_part
+    return total
 
 
 def build_index_step(
@@ -327,153 +682,284 @@ def build_index_step(
     top_k: int = 128,
     max_postings: int = 2048,
     max_rows: int = 4096,
+    runs: bool = False,
 ):
     """Jitted distributed index scan — the paper's winning batched-index
     scheme lowered to the mesh (Fig 2: index lookups -> key-set combine ->
-    row fetch -> residual filter, all device-side).
+    row fetch -> residual filter, all device-side), RUN-AWARE: postings
+    come from every index level (base + run slabs + sealed memtable) and
+    candidates expand against every event level, so unfolded rows are
+    index-visible with no fold at publish.
 
-    Per tablet, per condition: the postings for (field, value) over the
-    batch's rev_ts range are ONE contiguous slice of the sorted index base
-    (two binary searches), gathered into a fixed slab of max_postings
-    newest-first rev_ts values. The slabs combine device-side — k-way
-    intersect via kernels/merge_intersect membership searches (AND), or a
-    sorted merge (OR). Candidate rev_ts values then expand to base rows by
-    binary search + prefix-sum expansion, and the predicate program runs
-    ONLY on the gathered candidate rows (max_rows of them) — never on the
-    full tablet, which is the whole latency win over filter-scan.
+    Per tablet, per condition, per level: the postings for (field, value)
+    over the batch's rev_ts range are ONE contiguous slice of that sorted
+    level (two binary searches), gathered into a fixed max_postings slab;
+    the per-level slates sort into one slab per condition. The slabs
+    combine device-side — k-way intersect via kernels/merge_intersect
+    membership searches (AND), or a sorted merge (OR). Candidate rev_ts
+    values then expand to rows of each event level by binary search +
+    prefix-sum expansion, and the predicate program runs ONLY on the
+    gathered candidate rows (max_rows per level) — never on the full
+    tablet, which is the whole latency win over filter-scan.
 
     Correctness does not rest on the index: the FULL query tree re-checks
     every candidate row, so rev_ts collisions between distinct rows cost a
-    wasted candidate, never a wrong result. Slab overflow is reported in
-    the `truncated` output; the executor falls back to the exact
-    filter-scan step for that batch (adaptive batching keeps per-batch
-    result sets small, so this is rare).
+    wasted candidate, never a wrong result (and the ix family's
+    dedup-at-major never loses a row for the same reason). Slab overflow
+    is reported in the `truncated` output; the executor falls back to the
+    exact filter-scan step for that batch (adaptive batching keeps
+    per-batch result sets small, so this is rare).
 
     Returns (global_count, per-tablet top-k (ts, cols), truncated,
     candidate_rows) — the last is the diagnostic 'index entries actually
     used' count (psum'd)."""
     axes = tuple(mesh.axis_names)
     specs = tablet_specs(mesh)
-    from ..kernels.merge_intersect import member_mask_keys
 
-    # Live-count inputs are deliberately absent: the base and index slabs
-    # are ALWAYS sentinel-padded past *_base_n (init, merges, and
-    # non-donated majors all preserve it), and every probe key is below
-    # the sentinel, so binary searches never land in the pad tail.
-    def tablet_ix(rev_ts, cols, ix_keys,
-                  opcodes, arg0, arg1, codesets, cond_lo, cond_hi):
-        r = rev_ts.shape[1]
+    # Base slabs are ALWAYS sentinel-padded past *_base_n (init, merges,
+    # and non-donated majors all preserve it) and every probe key is below
+    # the sentinel, so base binary searches never land in the pad tail.
+    # Run slots DO hold stale rows past run_n after a major — the level
+    # helpers clamp by the live counts.
+    def tablet_ix(*args):
+        if runs:
+            (rev_ts, cols, ix_keys,
+             run_k, run_c, run_n, mem_k, mem_c, mem_n,
+             ix_run_k, ix_run_n, ix_mem_k, ix_mem_n,
+             opcodes, arg0, arg1, codesets, cond_lo, cond_hi) = args
+        else:
+            (rev_ts, cols, ix_keys,
+             opcodes, arg0, arg1, codesets, cond_lo, cond_hi) = args
 
-        def one(rev_l, cols_l, ik_l):
-            ci = ik_l.shape[0]
+        def one(rev_l, cols_l, ik_l, *lv):
+            ev_lv, ix_lv = (lv[:6], lv[6:]) if runs else (None, None)
+            slabs, post_over = _posting_slabs(
+                ik_l, ix_lv, cond_lo, cond_hi, n_conds, max_postings, runs
+            )
+            cand, live = _combine_postings(slabs, combine, n_conds)
 
-            def posting(i):
-                a = jnp.searchsorted(ik_l, cond_lo[i], side="left").astype(jnp.int32)
-                b = jnp.searchsorted(ik_l, cond_hi[i], side="left").astype(jnp.int32)
-                cnt = b - a
-                j = jnp.arange(max_postings, dtype=jnp.int32)
-                valid = j < cnt
-                kk = ik_l[jnp.clip(a + j, 0, ci - 1)]
-                rts = jnp.where(
-                    valid, (kk & jnp.int64(keypack.TS_MAX)).astype(jnp.int32),
-                    jnp.int32(_I32_MAX),
-                )
-                return rts, jnp.maximum(cnt - jnp.int32(max_postings), 0)
+            def consume(r_rev, r_cols, valid_m):
+                # Exactness: the FULL tree re-checks candidates (residual
+                # AND indexed conditions), so over-approximate candidate
+                # sets are filtered here, at candidate cardinality.
+                n = r_rev.shape[0]  # this level's slab size (<= max_rows)
+                hit = _program_eval(r_cols, opcodes, arg0, arg1, codesets) & valid_m
+                count = hit.sum(dtype=jnp.int32)
+                m = jnp.arange(n, dtype=jnp.int32)
+                rank = jnp.where(hit, m, jnp.int32(n))
+                top = jnp.sort(rank)[:top_k]
+                tvalid = top < n
+                tsafe = jnp.clip(top, 0, n - 1)
+                out_rev = jnp.where(tvalid, r_rev[tsafe], jnp.int32(_I32_MAX))
+                out_cols = jnp.where(tvalid[:, None], r_cols[tsafe], -1)
+                return count, out_rev, out_cols
 
-            slabs, over = jax.vmap(posting)(jnp.arange(n_conds, dtype=jnp.int32))
-            if combine == "intersect":
-                # Probe the first condition's slab against every other —
-                # the same membership computation the merge_intersect
-                # kernel runs for host key sets.
-                cand = slabs[0]
-                keep = cand < jnp.int32(_I32_MAX)
-                for i in range(1, n_conds):
-                    keep &= member_mask_keys(cand, slabs[i])
-                cand = jnp.sort(jnp.where(keep, cand, jnp.int32(_I32_MAX)))
-            else:
-                cand = jnp.sort(slabs.reshape(-1))
-            cc = cand.shape[0]
-            # Distinct candidates only: duplicate rev_ts values (shared
-            # postings, OR overlaps) expand to the same base rows.
-            is_dup = jnp.concatenate([jnp.zeros((1,), bool), cand[1:] == cand[:-1]])
-            live = (cand < jnp.int32(_I32_MAX)) & ~is_dup
-            lo_pos = jnp.searchsorted(rev_l, cand, side="left").astype(jnp.int32)
-            hi_pos = jnp.searchsorted(rev_l, cand, side="right").astype(jnp.int32)
-            cnt_rows = jnp.where(live, hi_pos - lo_pos, 0)
-            offs = jnp.cumsum(cnt_rows)
-            total = offs[-1]
-            start = offs - cnt_rows
-            # Prefix-sum expansion: candidate j covers output slots
-            # [start[j], offs[j]) — row m maps back through one binary
-            # search. Rows come out ascending in rev_ts (newest first).
-            m = jnp.arange(max_rows, dtype=jnp.int32)
-            j = jnp.searchsorted(offs, m, side="right").astype(jnp.int32)
-            jc = jnp.clip(j, 0, cc - 1)
-            row_idx = lo_pos[jc] + (m - start[jc])
-            valid_m = m < total
-            safe = jnp.clip(row_idx, 0, r - 1)
-            r_rev = jnp.where(valid_m, rev_l[safe], jnp.int32(_I32_MAX))
-            r_cols = jnp.where(valid_m[:, None], cols_l[safe], -1)
-            # Exactness: the FULL tree re-checks candidates (residual AND
-            # indexed conditions), so over-approximate candidate sets are
-            # filtered here, at candidate cardinality.
-            hit = _program_eval(r_cols, opcodes, arg0, arg1, codesets) & valid_m
-            count = hit.sum(dtype=jnp.int32)
-            rank = jnp.where(hit, m, jnp.int32(max_rows))
-            top = jnp.sort(rank)[:top_k]
-            tvalid = top < max_rows
-            tsafe = jnp.clip(top, 0, max_rows - 1)
-            out_ts = jnp.where(tvalid, r_rev[tsafe], INVALID_TS)
-            out_cols = jnp.where(tvalid[:, None], r_cols[tsafe], -1)
-            trunc = over.sum() + jnp.maximum(total - jnp.int32(max_rows), 0)
-            return count, out_ts, out_cols, trunc, total
+            outs, totals, truncs = _expand_levels(
+                consume, cand, live, rev_l, cols_l, ev_lv, max_rows, runs
+            )
+            (c0, rev0, cols0), runs_out, mem_out = outs
+            count = c0
+            rev_parts, col_parts = [rev0], [cols0]
+            if runs:
+                cr, revr, colsr = runs_out
+                cm, revm, colsm = mem_out
+                count = count + cr.sum(dtype=jnp.int32) + cm
+                rev_parts += [revr.reshape(-1), revm]
+                col_parts += [colsr.reshape(-1, cols0.shape[1]), colsm]
+            out_rev, out_cols = _merge_level_topk(rev_parts, col_parts, top_k)
+            out_ts = jnp.where(out_rev < jnp.int32(_I32_MAX), out_rev, INVALID_TS)
+            trunc = post_over + _sum_levels(truncs)
+            return count, out_ts, out_cols, trunc, _sum_levels(totals)
 
-        count_l, ts_l, cols_l, trunc_l, cand_l = jax.vmap(one)(
-            rev_ts, cols, ix_keys
-        )
+        if runs:
+            count_l, ts_l, cols_l, trunc_l, cand_l = jax.vmap(one)(
+                rev_ts, cols, ix_keys,
+                run_k, run_c, run_n, mem_k, mem_c, mem_n,
+                ix_run_k, ix_run_n, ix_mem_k, ix_mem_n,
+            )
+        else:
+            count_l, ts_l, cols_l, trunc_l, cand_l = jax.vmap(one)(
+                rev_ts, cols, ix_keys
+            )
         total = jax.lax.psum(count_l.sum(dtype=jnp.int32), axes)
         truncated = jax.lax.psum(trunc_l.sum(dtype=jnp.int32), axes)
         candidates = jax.lax.psum(cand_l.sum(dtype=jnp.int32), axes)
         return total, ts_l, cols_l, truncated, candidates
 
+    in_specs = (specs["rev_ts"], specs["cols"], P(axes, None))
+    if runs:
+        in_specs += _ev_level_specs(axes) + _ix_level_specs(axes)
+    in_specs += (
+        P(None), P(None), P(None), P(None, None),  # program: replicated
+        P(None), P(None),  # per-condition packed key ranges
+    )
     smapped = shard_map(
         tablet_ix,
         mesh=mesh,
-        in_specs=(
-            specs["rev_ts"], specs["cols"],
-            P(axes, None),  # index base keys
-            P(None), P(None), P(None), P(None, None),  # program: replicated
-            P(None), P(None),  # per-condition packed key ranges
-        ),
+        in_specs=in_specs,
         out_specs=(P(), P(axes, None), P(axes, None, None), P(), P()),
         check_rep=False,
     )
     return jax.jit(smapped)
 
 
-def build_density_step(mesh: Mesh):
+def build_index_aggregate_step(
+    mesh: Mesh,
+    n_conds: int,
+    combine: str,
+    prog_len: int,
+    set_shape: Tuple[int, int],
+    fids: Tuple[int, ...],
+    strides: Tuple[int, ...],
+    n_groups: int,
+    bucket_s: Optional[int],
+    op: str,
+    value_fid: Optional[int],
+    max_postings: int = 2048,
+    max_rows: int = 4096,
+    runs: bool = False,
+):
+    """Jitted index-driven aggregation: the batched-index candidate gather
+    of build_index_step feeding the CombinerIterator segment aggregation
+    of build_aggregate_step — selective aggregates combine over ONLY the
+    gathered candidate rows instead of filter-scanning the full tablet.
+    Same exactness contract: the FULL tree re-checks every candidate, and
+    slab overflow reports in `truncated` so the caller can fall back to
+    the exact scan-time aggregation.
+
+    Returns (aggs (n_groups,), cnts (n_groups,), truncated, candidates)."""
+    axes = tuple(mesh.axis_names)
+    specs = tablet_specs(mesh)
+    int32_max = jnp.iinfo(jnp.int32).max
+    int32_min = jnp.iinfo(jnp.int32).min
+    identity = {"count": 0, "sum": 0, "min": int32_max, "max": int32_min}[op]
+
+    def tablet_ixagg(*args):
+        if runs:
+            (rev_ts, cols, ix_keys,
+             run_k, run_c, run_n, mem_k, mem_c, mem_n,
+             ix_run_k, ix_run_n, ix_mem_k, ix_mem_n,
+             opcodes, arg0, arg1, codesets, value_table,
+             cond_lo, cond_hi, bucket_lo) = args
+        else:
+            (rev_ts, cols, ix_keys,
+             opcodes, arg0, arg1, codesets, value_table,
+             cond_lo, cond_hi, bucket_lo) = args
+
+        def one(rev_l, cols_l, ik_l, *lv):
+            ev_lv, ix_lv = (lv[:6], lv[6:]) if runs else (None, None)
+            slabs, post_over = _posting_slabs(
+                ik_l, ix_lv, cond_lo, cond_hi, n_conds, max_postings, runs
+            )
+            cand, live = _combine_postings(slabs, combine, n_conds)
+
+            def consume(r_rev, r_cols, valid_m):
+                hit = _program_eval(r_cols, opcodes, arg0, arg1, codesets) & valid_m
+                return _segment_aggregate(
+                    r_rev, r_cols, hit, fids, strides, n_groups, bucket_s,
+                    bucket_lo, op, value_fid, value_table, identity,
+                )
+
+            outs, totals, truncs = _expand_levels(
+                consume, cand, live, rev_l, cols_l, ev_lv, max_rows, runs
+            )
+            base_out, runs_out, mem_out = outs
+            parts = [base_out]
+            if runs:
+                raggs, rcnts = runs_out
+                parts.append(_fold_runs_axis(raggs, rcnts, op))
+                parts.append(mem_out)
+            aggs, cnts = _combine_level_aggs(parts, op)
+            trunc = post_over + _sum_levels(truncs)
+            return aggs, cnts, trunc, _sum_levels(totals)
+
+        if runs:
+            aggs_l, cnts_l, trunc_l, cand_l = jax.vmap(one)(
+                rev_ts, cols, ix_keys,
+                run_k, run_c, run_n, mem_k, mem_c, mem_n,
+                ix_run_k, ix_run_n, ix_mem_k, ix_mem_n,
+            )
+        else:
+            aggs_l, cnts_l, trunc_l, cand_l = jax.vmap(one)(rev_ts, cols, ix_keys)
+        if op in ("count", "sum"):
+            aggs = jax.lax.psum(aggs_l.sum(axis=0), axes)
+        elif op == "min":
+            aggs = jax.lax.pmin(aggs_l.min(axis=0), axes)
+        else:
+            aggs = jax.lax.pmax(aggs_l.max(axis=0), axes)
+        cnts = jax.lax.psum(cnts_l.sum(axis=0), axes)
+        truncated = jax.lax.psum(trunc_l.sum(dtype=jnp.int32), axes)
+        candidates = jax.lax.psum(cand_l.sum(dtype=jnp.int32), axes)
+        return aggs, cnts, truncated, candidates
+
+    in_specs = (specs["rev_ts"], specs["cols"], P(axes, None))
+    if runs:
+        in_specs += _ev_level_specs(axes) + _ix_level_specs(axes)
+    in_specs += (
+        P(None), P(None), P(None), P(None, None),  # program: replicated
+        P(None),  # value table: replicated
+        P(None), P(None), P(),  # cond ranges + bucket origin
+    )
+    smapped = shard_map(
+        tablet_ixagg,
+        mesh=mesh,
+        in_specs=in_specs,
+        out_specs=(P(None), P(None), P(), P()),
+        check_rep=False,
+    )
+    return jax.jit(smapped)
+
+
+def build_density_step(mesh: Mesh, runs: bool = False):
     """Jitted distributed density read for the query planner: total count
     over one packed aggregate-key range — per-tablet searchsorted + masked
-    sum, merged with a single psum. This is how plan_query's d_i estimates
-    come off the mesh instead of the host aggregate table."""
+    sum per LSM level (the agg family folds duplicate keys only at major
+    compaction, so unfolded levels may repeat a key: the counts are
+    additive by construction and SUM across levels), merged with a single
+    psum. This is how plan_query's d_i estimates come off the mesh instead
+    of the host aggregate table."""
     axes = tuple(mesh.axis_names)
 
-    def fn(ag_keys, ag_vals, lo, hi):
-        ca = ag_keys.shape[1]
+    def fn(*args):
+        if runs:
+            (ag_keys, ag_vals, ag_run_k, ag_run_c, ag_run_n,
+             ag_mem_k, ag_mem_c, ag_mem_n, lo, hi) = args
+        else:
+            ag_keys, ag_vals, lo, hi = args
 
-        def one(k_l, v_l):
+        def level(k_l, v_l, nn):
+            ca = k_l.shape[0]
             a = jnp.searchsorted(k_l, lo, side="left")
             b = jnp.searchsorted(k_l, hi, side="left")
             idx = jnp.arange(ca)
-            in_r = (idx >= a) & (idx < b)
+            in_r = (idx >= a) & (idx < b) & (idx < nn)
             return jnp.where(in_r, v_l[:, 0], 0).sum()
 
-        return jax.lax.psum(jax.vmap(one)(ag_keys, ag_vals).sum(), axes)
+        def one(k_l, v_l, *lv):
+            total = level(k_l, v_l, jnp.int32(k_l.shape[0]))
+            if runs:
+                rk, rc, rn, mk, mc, mn = lv
+                total = total + jax.vmap(level)(rk, rc, rn).sum()
+                total = total + level(mk, mc, mn)
+            return total
 
+        if runs:
+            local = jax.vmap(one)(
+                ag_keys, ag_vals, ag_run_k, ag_run_c, ag_run_n,
+                ag_mem_k, ag_mem_c, ag_mem_n,
+            )
+        else:
+            local = jax.vmap(one)(ag_keys, ag_vals)
+        return jax.lax.psum(local.sum(), axes)
+
+    in_specs = (P(axes, None), P(axes, None, None))
+    if runs:
+        in_specs += _ag_level_specs(axes)
+    in_specs += (P(), P())
     smapped = shard_map(
         fn,
         mesh=mesh,
-        in_specs=(P(axes, None), P(axes, None, None), P(), P()),
+        in_specs=in_specs,
         out_specs=P(),
         check_rep=False,
     )
@@ -505,13 +991,17 @@ class DistQueryProcessor:
     batched_index) running distributed.
 
     With `plane=` (a DistIngestPlane), every query first syncs to the
-    plane's latest published base — rows written through DistBatchWriter
-    become query-visible with no host round trip (publish is device-side
-    compaction only, and a no-op when nothing was ingested). Planes that
-    maintain the index/aggregate families (DistIngestPlane.for_store /
+    plane's latest published snapshot — rows written through
+    DistBatchWriter become query-visible with no host round trip: publish
+    is a sealed-memtable sort plus a metadata flip (never a fold into the
+    base — every read here searches base + runs + sealed memtable), and a
+    no-op when nothing was ingested. Planes that maintain the
+    index/aggregate families (DistIngestPlane.for_store /
     from_event_store) additionally enable the index schemes: plan_query
-    reads densities from the distributed aggregate tablets (agg_count,
-    a psum) and index-mode plans execute as build_index_step programs.
+    reads densities from the distributed aggregate tablets (agg_count, a
+    psum over all levels) and index-mode plans execute as build_index_step
+    programs — including selective AGGREGATES, which combine over the
+    gathered index candidates only (build_index_aggregate_step).
     Index-less stores fall back to filter-scan for every plan."""
 
     def __init__(
@@ -541,6 +1031,21 @@ class DistQueryProcessor:
         if self.plane is not None:
             self.dist = self.plane.publish()
 
+    # ------------------------------------------------- level input helpers
+    def _ev_levels(self) -> Tuple[jax.Array, ...]:
+        d = self.dist
+        return (d.run_rev_ts, d.run_cols, d.run_counts,
+                d.mem_rev_ts, d.mem_cols, d.mem_counts)
+
+    def _ix_levels(self) -> Tuple[jax.Array, ...]:
+        d = self.dist
+        return (d.ix_run_k, d.ix_run_n, d.ix_mem_k, d.ix_mem_n)
+
+    def _ag_levels(self) -> Tuple[jax.Array, ...]:
+        d = self.dist
+        return (d.ag_run_k, d.ag_run_c, d.ag_run_n,
+                d.ag_mem_k, d.ag_mem_c, d.ag_mem_n)
+
     # ------------------------------------------------- planner density source
     # plan_query duck-types its store argument: it needs .schema,
     # .dictionaries and .agg_count. Exposing them here makes the processor
@@ -555,8 +1060,9 @@ class DistQueryProcessor:
 
     def agg_count(self, field: str, value: str, t_start: int, t_stop: int) -> int:
         """Occurrences of field=value in the bucketed time range, from the
-        DISTRIBUTED aggregate tablets (psum of per-tablet counts) — the
-        planner's d_i, served by the mesh instead of the host store."""
+        DISTRIBUTED aggregate tablets (psum of per-tablet, per-level
+        counts) — the planner's d_i, served by the mesh instead of the
+        host store, fresh through unfolded runs."""
         self._sync()
         if not self.dist.has_index:
             return self.store.agg_count(field, value, t_start, t_stop)
@@ -569,32 +1075,42 @@ class DistQueryProcessor:
         b1 = int(t_stop) // bs
         lo = int(keypack.pack_agg_key(fid, code, b0))
         hi = int(keypack.pack_agg_key(fid, code, b1)) + 1
-        if "density" not in self._step_cache:
-            self._step_cache["density"] = build_density_step(self.dist.mesh)
-        step = self._step_cache["density"]
-        return int(step(self.dist.ag_keys, self.dist.ag_vals, jnp.int64(lo), jnp.int64(hi)))
+        key = ("density", self.dist.has_runs)
+        if key not in self._step_cache:
+            self._step_cache[key] = build_density_step(
+                self.dist.mesh, runs=self.dist.has_runs
+            )
+        step = self._step_cache[key]
+        args = (self.dist.ag_keys, self.dist.ag_vals)
+        if self.dist.has_runs:
+            args += self._ag_levels()
+        return int(step(*args, jnp.int64(lo), jnp.int64(hi)))
 
     def _step(self, prog: FilterProgram):
         from ..kernels.filter_scan.ops import pad_program
 
         opc, a0, a1, cs = pad_program(prog)
-        key = (len(opc), cs.shape)
+        key = (len(opc), cs.shape, self.dist.has_runs)
         if key not in self._step_cache:
             self._step_cache[key] = build_scan_step(
-                self.dist.mesh, self.store.schema.n_fields, len(opc), cs.shape, self.top_k
+                self.dist.mesh, self.store.schema.n_fields, len(opc), cs.shape,
+                self.top_k, runs=self.dist.has_runs,
             )
         return self._step_cache[key], (opc, a0, a1, cs)
 
     def scan_range(self, tree, t0: int, t1: int):
-        """One range scan across all tablets. Returns (global_count,
-        top-k rows per tablet as (ts, cols) numpy arrays)."""
+        """One range scan across all tablets and all LSM levels. Returns
+        (global_count, top-k rows per tablet as (ts, cols) numpy arrays)."""
         self._sync()
         prog = compile_tree(self.store, tree)
         step, (opc, a0, a1, cs) = self._step(prog)
         rts_lo = jnp.int32(keypack.rev_ts(t1))
         rts_hi = jnp.int32(keypack.rev_ts(t0) + 1)
+        args = (self.dist.rev_ts, self.dist.cols, self.dist.counts)
+        if self.dist.has_runs:
+            args += self._ev_levels()
         total, top_ts, top_cols = step(
-            self.dist.rev_ts, self.dist.cols, self.dist.counts,
+            *args,
             jnp.asarray(opc), jnp.asarray(a0), jnp.asarray(a1), jnp.asarray(cs),
             rts_lo, rts_hi,
         )
@@ -607,26 +1123,18 @@ class DistQueryProcessor:
         from ..kernels.filter_scan.ops import pad_program
 
         opc, a0, a1, cs = pad_program(prog)
-        key = ("index", n_conds, combine, len(opc), cs.shape)
+        key = ("index", n_conds, combine, len(opc), cs.shape, self.dist.has_runs)
         if key not in self._step_cache:
             self._step_cache[key] = build_index_step(
                 self.dist.mesh, n_conds, combine, len(opc), cs.shape,
                 self.top_k, self.index_postings, self.index_rows,
+                runs=self.dist.has_runs,
             )
         return self._step_cache[key], (opc, a0, a1, cs)
 
-    def scan_index_range(self, plan: QueryPlan, tree, t0: int, t1: int):
-        """One index-mode range across all tablets (paper Fig 2 on-mesh):
-        postings lookup per condition, device-side intersect/union,
-        candidate-row fetch, and the FULL tree re-checked on candidates.
-        Returns (global_count, top-k (ts, cols), truncated, candidates);
-        `truncated` > 0 means a posting/row slab overflowed and the count
-        is a lower bound — the executor falls back to filter-scan then."""
-        self._sync()
-        prog = compile_tree(self.store, tree)
-        step, (opc, a0, a1, cs) = self._index_step(
-            prog, len(plan.index_conds), plan.combine
-        )
+    def _cond_ranges(self, plan: QueryPlan, t0: int, t1: int):
+        """Per-condition packed index-key [lo, hi) ranges for the batch's
+        time window (lo == hi for never-seen values: empty posting range)."""
         rts_lo = keypack.rev_ts(t1)
         rts_hi = keypack.rev_ts(t0)
         k = len(plan.index_conds)
@@ -635,12 +1143,34 @@ class DistQueryProcessor:
         for i, c in enumerate(plan.index_conds):
             code = self.store.dictionaries[c.field].lookup(c.value)
             if code is None:
-                continue  # lo == hi: empty posting range
+                continue
             fid = self.store.schema.field_id(c.field)
             lo[i] = keypack.pack_index_key(fid, code, rts_lo)
             hi[i] = keypack.pack_index_key(fid, code, rts_hi) + 1
+        return lo, hi
+
+    def _index_args(self):
+        args = (self.dist.rev_ts, self.dist.cols, self.dist.ix_keys)
+        if self.dist.has_runs:
+            args += self._ev_levels() + self._ix_levels()
+        return args
+
+    def scan_index_range(self, plan: QueryPlan, tree, t0: int, t1: int):
+        """One index-mode range across all tablets (paper Fig 2 on-mesh):
+        postings lookup per condition per level, device-side
+        intersect/union, candidate-row fetch from every level, and the
+        FULL tree re-checked on candidates.
+        Returns (global_count, top-k (ts, cols), truncated, candidates);
+        `truncated` > 0 means a posting/row slab overflowed and the count
+        is a lower bound — the executor falls back to filter-scan then."""
+        self._sync()
+        prog = compile_tree(self.store, tree)
+        step, (opc, a0, a1, cs) = self._index_step(
+            prog, len(plan.index_conds), plan.combine
+        )
+        lo, hi = self._cond_ranges(plan, t0, t1)
         total, top_ts, top_cols, truncated, cands = step(
-            self.dist.rev_ts, self.dist.cols, self.dist.ix_keys,
+            *self._index_args(),
             jnp.asarray(opc), jnp.asarray(a0), jnp.asarray(a1), jnp.asarray(cs),
             jnp.asarray(lo), jnp.asarray(hi),
         )
@@ -732,7 +1262,7 @@ class DistQueryProcessor:
         key = (
             "agg", len(opc), cs.shape, grouping.fids, grouping.strides,
             grouping.size, grouping.n_buckets, grouping.spec.time_bucket_s,
-            grouping.spec.op, grouping.value_fid,
+            grouping.spec.op, grouping.value_fid, self.dist.has_runs,
         )
         if key not in self._step_cache:
             self._step_cache[key] = build_aggregate_step(
@@ -744,35 +1274,97 @@ class DistQueryProcessor:
                 grouping.spec.time_bucket_s,
                 grouping.spec.op,
                 grouping.value_fid,
+                runs=self.dist.has_runs,
             )
         return self._step_cache[key], (opc, a0, a1, cs)
 
-    def aggregate_range(
-        self, spec: AggregateSpec, tree, t0: int, t1: int
-    ) -> AggregateResult:
-        """Scan-time aggregation across all tablets in ONE device program —
-        the distributed lowering of QueryProcessor.aggregate(). Returns the
-        already-merged (psum'd) per-group result; only groups with at least
-        one matching row are materialized host-side."""
-        self._sync()
-        grouping = resolve_grouping(self.store, spec, t0, t1)
-        prog = compile_tree(self.store, tree)
-        step, (opc, a0, a1, cs) = self._agg_step(prog, grouping)
-        vt = grouping.value_table
-        if vt is None:
-            vt = np.ones(1, np.int32)  # unused placeholder (count op)
-        aggs, cnts = step(
-            self.dist.rev_ts, self.dist.cols, self.dist.counts,
-            jnp.asarray(opc), jnp.asarray(a0), jnp.asarray(a1), jnp.asarray(cs),
-            jnp.asarray(vt),
-            jnp.int32(keypack.rev_ts(t1)), jnp.int32(keypack.rev_ts(t0) + 1),
-            jnp.int32(grouping.bucket_lo),
+    def _index_agg_step(self, prog: FilterProgram, grouping: ResolvedGrouping,
+                        n_conds: int, combine: str):
+        from ..kernels.filter_scan.ops import pad_program
+
+        opc, a0, a1, cs = pad_program(prog)
+        key = (
+            "aggix", n_conds, combine, len(opc), cs.shape, grouping.fids,
+            grouping.strides, grouping.size, grouping.spec.time_bucket_s,
+            grouping.spec.op, grouping.value_fid, self.dist.has_runs,
         )
+        if key not in self._step_cache:
+            self._step_cache[key] = build_index_aggregate_step(
+                self.dist.mesh, n_conds, combine, len(opc), cs.shape,
+                grouping.fids, grouping.strides, grouping.size,
+                grouping.spec.time_bucket_s, grouping.spec.op,
+                grouping.value_fid, self.index_postings, self.index_rows,
+                runs=self.dist.has_runs,
+            )
+        return self._step_cache[key], (opc, a0, a1, cs)
+
+    @staticmethod
+    def _materialize_agg(grouping: ResolvedGrouping, aggs, cnts) -> AggregateResult:
+        """Host-side epilogue: only groups with >= 1 matching row exist."""
         aggs = np.asarray(aggs).astype(np.int64)
         cnts = np.asarray(cnts)
         live = cnts > 0
         gids = np.flatnonzero(live).astype(np.int64)
         return AggregateResult(grouping, gids, aggs[live], cnts[live])
+
+    def aggregate_range(
+        self, spec: AggregateSpec, tree, t0: int, t1: int,
+        use_index: bool = True, stats=None,
+    ) -> AggregateResult:
+        """Scan-time aggregation across all tablets in ONE device program —
+        the distributed lowering of QueryProcessor.aggregate(), planner
+        driven: selective trees (index-mode plans) aggregate over ONLY the
+        gathered index candidates (build_index_aggregate_step), provably
+        empty plans skip the device entirely, and everything else — or an
+        overflowed candidate slab — runs the exact filter-scan
+        aggregation. Returns the already-merged (psum'd) per-group
+        result; only groups with at least one matching row materialize
+        host-side."""
+        self._sync()
+        grouping = resolve_grouping(self.store, spec, t0, t1)
+        source = self if self.dist.has_index else self.store
+        plan = plan_query(
+            source, tree, t0, t1, w=self.w,
+            use_index=use_index and self.dist.has_index,
+        )
+        if stats is not None:
+            stats.plan = plan
+        if plan.mode == "empty":
+            e = np.empty(0, np.int64)
+            return AggregateResult(grouping, e, e.copy(), e.copy())
+        prog = compile_tree(self.store, tree)
+        vt = grouping.value_table
+        if vt is None:
+            vt = np.ones(1, np.int32)  # unused placeholder (count op)
+        if plan.mode == "index" and self.dist.has_index:
+            step, (opc, a0, a1, cs) = self._index_agg_step(
+                prog, grouping, len(plan.index_conds), plan.combine
+            )
+            lo, hi = self._cond_ranges(plan, t0, t1)
+            aggs, cnts, truncated, cands = step(
+                *self._index_args(),
+                jnp.asarray(opc), jnp.asarray(a0), jnp.asarray(a1), jnp.asarray(cs),
+                jnp.asarray(vt),
+                jnp.asarray(lo), jnp.asarray(hi),
+                jnp.int32(grouping.bucket_lo),
+            )
+            if stats is not None:
+                stats.index_keys_scanned += int(cands)
+            if not int(truncated):
+                return self._materialize_agg(grouping, aggs, cnts)
+            # Slab overflow: exact filter-scan aggregation below.
+        step, (opc, a0, a1, cs) = self._agg_step(prog, grouping)
+        args = (self.dist.rev_ts, self.dist.cols, self.dist.counts)
+        if self.dist.has_runs:
+            args += self._ev_levels()
+        aggs, cnts = step(
+            *args,
+            jnp.asarray(opc), jnp.asarray(a0), jnp.asarray(a1), jnp.asarray(cs),
+            jnp.asarray(vt),
+            jnp.int32(keypack.rev_ts(t1)), jnp.int32(keypack.rev_ts(t0) + 1),
+            jnp.int32(grouping.bucket_lo),
+        )
+        return self._materialize_agg(grouping, aggs, cnts)
 
     def execute_batched(self, tree, t_start: int, t_stop: int, stats=None):
         """Algorithm 2 over the distributed scan."""

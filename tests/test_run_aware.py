@@ -1,0 +1,384 @@
+"""Run-aware distributed reads: publish() is a snapshot (never a fold),
+every read primitive searches base + sorted runs + sealed memtable, the
+ix family dedups postings at major, selective aggregates ride the index
+path, and a publish racing live ingest never observes a torn state."""
+import threading
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax
+
+from repro.core import (
+    AggregateSpec, And, Eq, EventStore, Not, Or, QueryProcessor,
+    web_proxy_schema,
+)
+from repro.core import keypack
+from repro.core.dist_ingest import DistBatchWriter, DistIngestPlane
+from repro.core.dist_query import DistQueryProcessor
+from repro.core.query import QueryStats
+from repro.launch.mesh import make_dev_mesh
+
+T_SPAN = 4 * 3600
+SCHEMES = ["scan", "batched_scan", "index", "batched_index"]
+
+
+def _gen(seed, n):
+    rng = np.random.default_rng(seed)
+    ts = np.sort(rng.integers(0, T_SPAN, n))
+    vals = {
+        "domain": rng.choice(
+            ["a.com", "b.com", "c.com", "rare.net"], p=[0.6, 0.25, 0.13, 0.02], size=n
+        ).tolist(),
+        "method": rng.choice(["GET", "POST"], size=n).tolist(),
+        "status": rng.choice(["200", "404"], size=n, p=[0.8, 0.2]).tolist(),
+    }
+    return ts, vals
+
+
+@pytest.fixture(scope="module")
+def live_runs():
+    """The same events through the host store and a plane sized so that NO
+    major compaction ever fires: at publish time the base is EMPTY and
+    every row (and index posting, and aggregate count) lives in unfolded
+    run slabs or the sealed memtable. Everything the dist path answers
+    here, it answers from the non-base levels."""
+    ts, vals = _gen(seed=19, n=10_000)
+    store = EventStore(web_proxy_schema(), n_shards=4)
+    store.ingest(ts, vals)
+    store.flush_all()
+    store.compact_all()
+    mesh = make_dev_mesh(1, 1)
+    plane = DistIngestPlane.for_store(
+        store, mesh, capacity=12_000, tablets_per_device=2,
+        mem_rows=1024, max_runs=6, append_rows=512,
+    )
+    w = DistBatchWriter(store, plane, batch_rows=1500)
+    step = 997  # misaligned with every internal batch size
+    for off in range(0, len(ts), step):
+        sl = slice(off, off + step)
+        w.add(ts[sl], {k: v[sl] for k, v in vals.items()})
+    w.close()
+    tel = plane.telemetry()
+    assert int(tel["major"].sum()) == 0  # the whole point of this fixture
+    assert int(tel["base_n"].sum()) == 0
+    assert int(tel["minor"].sum()) > 0  # rows really sit in run slabs
+    dq = DistQueryProcessor(store, plane=plane)
+    return store, plane, dq, ts, {k: np.array(v) for k, v in vals.items()}
+
+
+TREES = [
+    Eq("domain", "rare.net"),
+    Eq("domain", "c.com"),
+    And(Eq("domain", "c.com"), Eq("status", "404"), Eq("method", "POST")),
+    And(Eq("domain", "c.com"), Not(Eq("method", "POST"))),
+    Or(Eq("domain", "rare.net"), Eq("domain", "c.com")),
+    Or(Eq("domain", "rare.net"), Eq("status", "404")),
+    None,
+]
+
+
+# ------------------------------------------------- publish is merge-free
+def test_publish_is_snapshot_not_fold(live_runs):
+    """publish() must do NO run->base fold: compaction counters frozen,
+    base/run state buffers untouched (the DistStore is a zero-copy view of
+    them), only the sealed memtable arrays are fresh."""
+    store, plane, dq, ts, vals = live_runs
+    # Force a fresh publish even if another test left a cached one.
+    with plane._lock:
+        plane._dirty = True
+    before = {
+        k: plane.state[k]
+        for k in ("ev_base_k", "ev_run_k", "ix_base_k", "ag_run_k", "n_runs")
+    }
+    tel0 = plane.telemetry()
+    ds = plane.publish()
+    tel1 = plane.telemetry()
+    for c in ("minor", "major", "base_n", "n_runs"):
+        np.testing.assert_array_equal(tel0[c], tel1[c], err_msg=c)
+    for k, arr in before.items():
+        assert plane.state[k] is arr, f"publish replaced {k}"
+    # The published view aliases the live buffers (snapshot, not copy) ...
+    assert ds.rev_ts is plane.state["ev_base_k"]
+    assert ds.run_rev_ts is plane.state["ev_run_k"]
+    assert ds.ix_run_k is plane.state["ix_run_k"]
+    # ... except the sealed memtable, which is a fresh sorted copy.
+    assert ds.mem_rev_ts is not plane.state["ev_mem_k"]
+    mem = np.asarray(jax.device_get(ds.mem_rev_ts))
+    mn = np.asarray(jax.device_get(ds.mem_counts))
+    for t in range(ds.n_tablets):
+        assert (np.diff(mem[t, : mn[t]]) >= 0).all()  # sealed level sorted
+
+
+def test_publish_noop_when_clean(live_runs):
+    _, plane, _, _, _ = live_runs
+    assert plane.publish() is plane.publish()
+
+
+# ------------------------------------------------- scheme agreement, no base
+@pytest.mark.parametrize("tree", TREES)
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_schemes_agree_with_unfolded_runs(live_runs, tree, scheme):
+    store, _, dq, ts, vals = live_runs
+    qp = QueryProcessor(store)
+    hs, ds = QueryStats(), QueryStats()
+    t0, t1 = 900, 9000
+    want = sum(b.n for b in qp.run_scheme(scheme, t0, t1, tree, stats=hs))
+    got = sum(b.n for b in dq.run_scheme(scheme, t0, t1, tree, stats=ds))
+    assert got == want
+    assert hs.plan.mode == ds.plan.mode  # densities agree level-summed
+
+
+@given(seed=st.integers(0, 2**31), span=st.integers(1, T_SPAN))
+@settings(max_examples=12, deadline=None)
+def test_randomized_ranges_agree_with_unfolded_runs(live_runs, seed, span):
+    store, _, dq, ts, vals = live_runs
+    rng = np.random.default_rng(seed)
+    t0 = int(rng.integers(0, T_SPAN))
+    t1 = min(t0 + span, T_SPAN)
+    tree = TREES[int(rng.integers(0, len(TREES) - 1))]
+    want = sum(b.n for b in QueryProcessor(store).run_scheme("batched_index", t0, t1, tree))
+    got = sum(b.n for b in dq.run_scheme("batched_index", t0, t1, tree))
+    assert got == want, (tree, t0, t1)
+
+
+def test_density_reads_unfolded_levels(live_runs):
+    """Planner densities come off run + sealed-mem aggregate entries (the
+    base is empty here) and still match the host aggregate table."""
+    store, _, dq, _, _ = live_runs
+    for f, v in [("domain", "rare.net"), ("domain", "a.com"), ("status", "404")]:
+        for t0, t1 in [(0, T_SPAN), (1800, 5400)]:
+            assert dq.agg_count(f, v, t0, t1) == store.agg_count(f, v, t0, t1)
+
+
+# -------------------------------------------------- aggregates over levels
+AGG_SPECS = [
+    AggregateSpec(group_by=("status",), time_bucket_s=3600),
+    AggregateSpec(group_by=("domain", "method")),
+    AggregateSpec(group_by=("domain",), op="min", value_field="status"),
+]
+
+
+def _as_map(res, store):
+    return {
+        tuple(sorted((k, v) for k, v in r.items() if k not in ("value", "count"))): (
+            r["value"], r["count"],
+        )
+        for r in res.rows(store)
+    }
+
+
+@pytest.mark.parametrize("spec", AGG_SPECS)
+@pytest.mark.parametrize("tree", [Eq("domain", "rare.net"), None])
+def test_aggregates_agree_with_unfolded_runs(live_runs, spec, tree):
+    store, _, dq, _, _ = live_runs
+    host = QueryProcessor(store).aggregate(spec, 0, T_SPAN, tree)
+    dist = dq.aggregate_range(spec, tree, 0, T_SPAN)
+    assert _as_map(host, store) == _as_map(dist, store)
+
+
+def test_aggregate_uses_index_path(live_runs):
+    """Satellite bugfix: a selective aggregate must ride the batched-index
+    candidate gather (plan mode 'index', postings actually expanded), not
+    filter-scan the full tablets."""
+    store, _, dq, _, _ = live_runs
+    spec = AggregateSpec(group_by=("method",))
+    stats = QueryStats()
+    dist = dq.aggregate_range(spec, Eq("domain", "rare.net"), 0, T_SPAN, stats=stats)
+    assert stats.plan.mode == "index"
+    assert stats.index_keys_scanned > 0
+    host = QueryProcessor(store).aggregate(spec, 0, T_SPAN, Eq("domain", "rare.net"))
+    assert _as_map(host, store) == _as_map(dist, store)
+
+
+def test_aggregate_index_truncation_falls_back_exact(live_runs):
+    """Pathologically small slabs: the index-driven aggregation overflows,
+    falls back to the exact scan-time aggregation, result unchanged."""
+    store, plane, _, _, _ = live_runs
+    dq = DistQueryProcessor(store, plane=plane, index_postings=8, index_rows=8)
+    spec = AggregateSpec(group_by=("method",))
+    tree = Eq("domain", "c.com")
+    host = QueryProcessor(store).aggregate(spec, 0, T_SPAN, tree)
+    dist = dq.aggregate_range(spec, tree, 0, T_SPAN)
+    assert _as_map(host, store) == _as_map(dist, store)
+
+
+def test_aggregate_empty_plan_skips_device(live_runs):
+    store, _, dq, _, _ = live_runs
+    stats = QueryStats()
+    res = dq.aggregate_range(
+        AggregateSpec(group_by=("method",)),
+        And(Eq("domain", "rare.net"), Eq("domain", "never-seen.com")),
+        0, T_SPAN, stats=stats,
+    )
+    assert stats.plan.mode == "empty" and res.n_groups == 0
+
+
+# ------------------------------------------------------ fold still correct
+def test_compact_preserves_results():
+    """compact() (the batched background fold) only moves rows between
+    levels: every scheme and aggregate answers identically before/after,
+    the fold really happened (base now holds the rows), and an idle
+    compact is a no-op that keeps the cached published view. Uses its own
+    plane — live_runs stays unfolded for the level-read tests."""
+    ts, vals = _gen(seed=23, n=4000)
+    store = EventStore(web_proxy_schema(), n_shards=2)
+    store.ingest(ts, vals)
+    store.flush_all()
+    mesh = make_dev_mesh(1, 1)
+    plane = DistIngestPlane.for_store(
+        store, mesh, capacity=5000, tablets_per_device=2,
+        mem_rows=1024, max_runs=6, append_rows=512,
+    )
+    w = DistBatchWriter(store, plane, batch_rows=997)
+    w.add(ts, vals)
+    w.close()
+    assert int(plane.telemetry()["major"].sum()) == 0  # nothing folded yet
+    dq = DistQueryProcessor(store, plane=plane)
+    tree = Or(Eq("domain", "rare.net"), Eq("status", "404"))
+    spec = AggregateSpec(group_by=("domain",))
+    before = {s: sum(b.n for b in dq.run_scheme(s, 900, 9000, tree)) for s in SCHEMES}
+    agg_before = _as_map(dq.aggregate_range(spec, tree, 0, T_SPAN), store)
+    plane.compact()
+    tel = plane.telemetry()
+    assert int(tel["major"].sum()) >= 1
+    assert int(tel["base_n"].sum()) == len(ts)
+    assert int(tel["mem_n"].sum()) == 0
+    for s in SCHEMES:
+        assert sum(b.n for b in dq.run_scheme(s, 900, 9000, tree)) == before[s]
+    assert _as_map(dq.aggregate_range(spec, tree, 0, T_SPAN), store) == agg_before
+    # Idle compact: nothing to fold -> no-op, published cache intact.
+    view = plane.publish()
+    plane.compact()
+    assert plane.publish() is view
+    assert int(plane.telemetry()["major"].sum()) == int(tel["major"].sum())
+
+
+# ----------------------------------------------------------- ix dedup
+def test_ix_dedup_at_major_postings_oracle():
+    """Satellite bugfix: duplicate field|value|rev_ts postings (events
+    sharing a timestamp and a value in one tablet) collapse at major —
+    the ix base holds exactly the distinct-key count, stays sorted and
+    unique, and index queries remain exact."""
+    rng = np.random.default_rng(3)
+    n = 3000
+    ts = np.sort(rng.integers(0, 1200, n))  # dense ts -> heavy duplication
+    vals = {
+        "domain": rng.choice(["a.com", "b.com"], size=n).tolist(),
+        "method": rng.choice(["GET", "POST"], size=n).tolist(),
+        "status": ["200"] * n,
+    }
+    store = EventStore(web_proxy_schema(), n_shards=2)
+    store.ingest(ts, vals)
+    store.flush_all()
+    mesh = make_dev_mesh(1, 1)
+    plane = DistIngestPlane.for_store(
+        store, mesh, capacity=6000, tablets_per_device=1,
+        mem_rows=512, max_runs=4, append_rows=256,
+    )
+    w = DistBatchWriter(store, plane, batch_rows=700, writer_id=0)
+    w.add(ts, vals)
+    w.close()
+    plane.compact()
+    assert int(plane.telemetry()["major"].sum()) >= 1
+    ixk = np.asarray(jax.device_get(plane.state["ix_base_k"]))[0]
+    ixn = int(np.asarray(jax.device_get(plane.state["ix_base_n"]))[0])
+    live = ixk[:ixn]
+    assert (np.diff(live) > 0).all()  # sorted AND strictly unique
+    assert (ixk[ixn:] == np.iinfo(np.int64).max).all()  # sentinel tail
+    # NumPy oracle: distinct (fid, code, rev_ts) triples over all rows.
+    cols = store.encode_events(np.asarray(ts, np.int64), vals)
+    rts = keypack.rev_ts(np.asarray(ts, np.int64))
+    want = {
+        int(keypack.pack_index_key(fid, int(c), int(r)))
+        for fid in plane.indexed_fids
+        for c, r in zip(cols[:, fid], rts)
+    }
+    assert ixn == len(want)
+    assert set(live.tolist()) == want
+    assert ixn < n * len(plane.indexed_fids)  # duplicates really collapsed
+    # Idempotent: a second fold cycle must not shrink or grow the base.
+    w2 = DistBatchWriter(store, plane, batch_rows=700, writer_id=1)
+    w2.add(ts[:1], {k: v[:1] for k, v in vals.items()})
+    w2.close()
+    plane.compact()
+    ixn2 = int(np.asarray(jax.device_get(plane.state["ix_base_n"]))[0])
+    assert ixn2 == ixn  # re-ingested duplicate of an existing key
+    dq = DistQueryProcessor(store, plane=plane)
+    want_rows = int((np.array(vals["domain"]) == "a.com").sum())
+    want_rows += int(vals["domain"][0] == "a.com")  # the re-ingested row
+    got = sum(b.n for b in dq.run_scheme("batched_index", 0, 2000, Eq("domain", "a.com")))
+    assert got == want_rows
+
+
+def test_from_event_store_is_base_only():
+    """A bulk replay is one-shot: from_event_store folds up front and
+    snapshots only the base level, so the compiled read programs carry no
+    empty run/mem slabs (the replay plane's are 8 x 8192 rows)."""
+    from repro.core.dist_query import from_event_store
+
+    ts, vals = _gen(seed=5, n=2000)
+    store = EventStore(web_proxy_schema(), n_shards=2)
+    store.ingest(ts, vals)
+    store.flush_all()
+    dist = from_event_store(store, make_dev_mesh(1, 1), tablets_per_device=2)
+    assert not dist.has_runs and dist.has_index
+    assert int(np.asarray(jax.device_get(dist.counts)).sum()) == len(ts)
+    dq = DistQueryProcessor(store, dist)
+    count, _, _ = dq.scan_range(Eq("domain", "c.com"), 0, T_SPAN)
+    assert count == int((np.array(vals["domain"]) == "c.com").sum())
+
+
+# -------------------------------------------------- freshness under ingest
+def test_publish_freshness_under_concurrent_ingest():
+    """Satellite bugfix: a publish racing a live writer takes the plane
+    lock around the whole snapshot, so (a) every row whose ingest call
+    returned before publish is visible, and (b) visibility moves in whole
+    ingest-call units — never a torn chunk."""
+    n, chunk = 4110, 137
+    ts, vals = _gen(seed=41, n=n)
+    store = EventStore(web_proxy_schema(), n_shards=2)
+    mesh = make_dev_mesh(1, 1)
+    plane = DistIngestPlane.for_store(
+        store, mesh, capacity=6000, tablets_per_device=2,
+        mem_rows=512, max_runs=8, append_rows=256,
+    )
+    cols = store.encode_events(np.asarray(ts, np.int64), vals)
+    rts = keypack.rev_ts(np.asarray(ts, np.int64)).astype(np.int32)
+    tab = (keypack.short_hash(rts.astype(np.int64)) % plane.n_tablets).astype(np.int32)
+    done = {"rows": 0}
+
+    def writer():
+        for off in range(0, n, chunk):
+            sl = slice(off, off + chunk)
+            plane.ingest(rts[sl], cols[sl], tab[sl])
+            done["rows"] = off + len(rts[sl])  # acknowledged AFTER the call
+
+    # Warm the compile paths before racing, so the timed window interleaves
+    # real appends with real publishes instead of serializing on tracing.
+    plane.ingest(rts[:1], cols[:1], tab[:1])
+    dq = DistQueryProcessor(store, plane=plane)
+    dq.scan_range(None, 0, T_SPAN)
+    probe = DistQueryProcessor(store, dist=plane.publish())
+    probe._step_cache = dq._step_cache  # reuse compiled steps, no plane sync
+    base = 1  # the warm-up row
+
+    t = threading.Thread(target=writer)
+    t.start()
+    observed = []
+    while t.is_alive():
+        lo = done["rows"]
+        probe.dist = plane.publish()  # pinned snapshot: probe has no plane
+        count, _, _ = probe.scan_range(None, 0, T_SPAN)
+        hi = done["rows"]
+        assert count >= lo + base, (count, lo)  # acknowledged rows visible
+        assert count <= hi + base + chunk  # at most one in-flight chunk
+        assert (count - base) % chunk == 0  # whole ingest calls only
+        observed.append(count)
+    t.join()
+    probe.dist = plane.publish()
+    count, _, _ = probe.scan_range(None, 0, T_SPAN)
+    assert count == n + base
+    assert observed == sorted(observed)  # visibility is monotone
