@@ -1,0 +1,336 @@
+"""Latency vs concurrent clients — the paper's query experiments, plural.
+
+The paper measures query performance as "latency of the client receiving
+initial result sets" with clients querying WHILE the database ingests
+(§IV-B/§V); the D4M follow-up (arXiv:1406.4923) scales by multiplying
+client processes against shared tablet servers. This benchmark drives the
+serve plane (repro.serve_db.QueryService) the same way: N concurrent
+sessions, each streaming a fixed mix of paper-style queries against ONE
+shared live DistIngestPlane, at N = 1 / 2 / 4 / 8 — once at rest and once
+with a concurrent ingest writer — reporting per-session time-to-first-
+result (the Table I metric) and queue wait.
+
+Reproduction targets (validate()):
+  - no starvation: at 4 concurrent sessions every session's median TTFR
+    stays within 3x its solo-session value (the TTFR-priority scheduler's
+    whole job);
+  - exactness under concurrency: every session's counts equal the
+    single-caller host oracle (rest rounds; ingest rounds bound-checked
+    between the before/after oracles since each query pins a snapshot);
+  - compaction stays off the query path: the background compactor ran
+    >= 1 fold during the sweep and every fold in
+    telemetry()["fold_events"] is attributed to a non-query source.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import Eq, EventStore, QueryProcessor, web_proxy_schema
+from repro.core.dist_ingest import DistBatchWriter, DistIngestPlane
+from repro.pipeline.sources import SyntheticWebProxySource, parse_web_proxy_lines
+from repro.serve_db import QueryService
+
+FOUR_HOURS = 4 * 3600
+SESSIONS = (1, 2, 4, 8)
+
+
+def _build(n_rows: int, seed: int = 41):
+    """Host store + live plane with the same rows (the host is the
+    oracle), plus a reserve of parsed-but-uningested rows for the
+    concurrent-ingest rounds."""
+    from repro.launch.mesh import make_dev_mesh
+
+    src = SyntheticWebProxySource(seed=seed)
+    reserve = n_rows  # up to n_rows more arrive during ingest rounds
+    lines = src.gen_lines(n_rows + reserve, 0, FOUR_HOURS)
+    ts, cols = parse_web_proxy_lines(lines)
+    store = EventStore(web_proxy_schema(), n_shards=4, flush_rows=32768)
+    head = {k: v[:n_rows] for k, v in cols.items()}
+    store.ingest(ts[:n_rows], head)
+    store.flush_all()
+    store.compact_all()
+    plane = DistIngestPlane.for_store(
+        store,
+        make_dev_mesh(1, 1),
+        capacity=n_rows + reserve + 8192,
+        tablets_per_device=2,
+        mem_rows=2048,
+        max_runs=6,
+        append_rows=1024,
+    )
+    w = DistBatchWriter(store, plane, batch_rows=8192)
+    w.add(ts[:n_rows], head)
+    w.close()
+    # Warm every one-time XLA compile a live sweep would otherwise hit
+    # mid-measurement (what a serving deployment does at startup): the
+    # seal program at every fill bucket, and the minor/major fold pair
+    # the background compactor drives — a cold major compile is seconds,
+    # and it would land inside some session's TTFR.
+    plane.warm_seal()
+    plane.compact()
+    return store, plane, src, (ts, cols, n_rows)
+
+
+def _paper_mix(store, src) -> List[Dict]:
+    """Query mix per session: the paper's A/B/C selectivity tiers (most /
+    somewhat / un-popular domain), each under the winning batched_index
+    scheme plus a batched_scan on B — four streamed queries per session
+    pass."""
+    counts = {}
+    for q in np.linspace(0, 0.5, 60):
+        dom = src.domain_by_popularity(q)
+        counts[dom] = store.agg_count("domain", dom, 0, FOUR_HOURS)
+    ranked = sorted(counts.items(), key=lambda kv: -kv[1])
+    top = ranked[0][1]
+    a = ranked[0][0]
+    b = next(
+        (d for d, c in ranked if c <= top * 0.15 and c > max(top * 0.02, 50)),
+        ranked[len(ranked) // 4][0],
+    )
+    c = next((d for d, cc in reversed(ranked) if cc >= 20), ranked[-1][0])
+    return [
+        {"name": "A_bindex", "scheme": "batched_index", "tree": Eq("domain", a)},
+        {"name": "B_bindex", "scheme": "batched_index", "tree": Eq("domain", b)},
+        {"name": "C_bindex", "scheme": "batched_index", "tree": Eq("domain", c)},
+        {"name": "B_bscan", "scheme": "batched_scan", "tree": Eq("domain", b)},
+    ]
+
+
+def _oracle_counts(store, mix) -> Dict[str, int]:
+    return {
+        q["name"]: sum(
+            b.n
+            for b in QueryProcessor(store).run_scheme(
+                q["scheme"], 0, FOUR_HOURS, q["tree"]
+            )
+        )
+        for q in mix
+    }
+
+
+def _session_pass(svc, mix, out: Dict, name: str):
+    """One client: stream the whole query mix through one session,
+    recording per-query TTFR, total latency and counts."""
+    s = svc.session(name)
+    ttfr, totals, counts, waits = [], [], {}, []
+    for q in mix:
+        sq = s.submit(q["scheme"], 0, FOUR_HOURS, q["tree"])
+        n = sq.count()
+        counts[q["name"]] = n
+        ttfr.append(sq.first_result_s)
+        totals.append(sq.total_s)
+        waits.append(sq.queue_wait_s)
+    s.close()
+    out["ttfr"] = ttfr
+    out["totals"] = totals
+    out["counts"] = counts
+    out["queue_wait_s"] = float(sum(waits))
+
+
+def _round(svc, mix, n_sessions: int, ingest_feed=None) -> Dict:
+    """One sweep point: n_sessions client threads streaming the mix
+    concurrently; optionally a writer thread ingesting throughout."""
+    outs = [dict() for _ in range(n_sessions)]
+    threads = [
+        threading.Thread(
+            target=_session_pass, args=(svc, mix, outs[i], f"s{i}")
+        )
+        for i in range(n_sessions)
+    ]
+    stop_feed = threading.Event()
+    feeder = None
+    if ingest_feed is not None:
+        feeder = threading.Thread(target=ingest_feed, args=(stop_feed,))
+    t0 = time.perf_counter()
+    if feeder is not None:
+        feeder.start()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    stop_feed.set()
+    if feeder is not None:
+        feeder.join()
+    dt = time.perf_counter() - t0
+    med = [float(np.median(o["ttfr"])) for o in outs]
+    return {
+        "sessions": n_sessions,
+        "ingest": ingest_feed is not None,
+        "wall_s": dt,
+        "queries": n_sessions * len(mix),
+        "ttfr_median_per_session": med,
+        "ttfr_median_max": max(med),
+        "ttfr_mean": float(np.mean([t for o in outs for t in o["ttfr"]])),
+        "ttfr_max": float(np.max([t for o in outs for t in o["ttfr"]])),
+        "queue_wait_s": float(sum(o["queue_wait_s"] for o in outs)),
+        "counts": [o["counts"] for o in outs],
+    }
+
+
+def run(quick: bool = False, n_rows: int = None) -> Dict:
+    n_rows = n_rows or (15_000 if quick else 40_000)
+    store, plane, src, (ts, cols, used) = _build(n_rows)
+    mix = _paper_mix(store, src)
+    oracle = _oracle_counts(store, mix)
+    res: Dict = {"n_rows": n_rows, "mix": [q["name"] for q in mix]}
+    with QueryService(store, plane, compaction_interval=0.01) as svc:
+
+        def settle():
+            # Round boundary: fold any leftover debt NOW (blocking until
+            # any in-progress background fold finishes too), so a
+            # multi-second major never straddles into the next round's
+            # first TTFR. Mid-round folds still happen and are reported —
+            # that stall is the paper's Fig 4 physics — but each round's
+            # numbers are self-contained.
+            svc.wait_idle()
+            plane.compact()
+
+        # Warm every compiled path once (XLA compiles are not the
+        # scheduling cost under study), then measure the solo baseline —
+        # two passes, median of both, since solo TTFR is the fairness
+        # yardstick and a 4-sample median alone is noisy.
+        _session_pass(svc, mix, {}, "warmup")
+        settle()
+        solo = _round(svc, mix, 1)
+        settle()
+        solo_b = _round(svc, mix, 1)
+        res["solo_ttfr_median"] = float(
+            np.median(
+                solo["ttfr_median_per_session"] + solo_b["ttfr_median_per_session"]
+            )
+        )
+        rounds = [solo]
+        for n_s in SESSIONS[1:]:
+            settle()
+            rounds.append(_round(svc, mix, n_s))
+
+        # With concurrent ingest: a writer streams reserve rows in small
+        # chunks while the sessions query. Each query pins a publish
+        # snapshot, so counts land between the before/after oracles.
+        feed_pos = [used]
+
+        def make_feed(chunk=256):
+            # Paced writer: a saturating feeder would hold the plane lock
+            # near-continuously and the benchmark would measure lock
+            # starvation, not scheduling (the paper's ingest clients are
+            # rate-limited by parsing; ~25ms between flushes plays that
+            # role here).
+            def feed(stop: threading.Event):
+                w = DistBatchWriter(store, plane, batch_rows=chunk)
+                while not stop.is_set() and feed_pos[0] + chunk <= len(ts):
+                    sl = slice(feed_pos[0], feed_pos[0] + chunk)
+                    w.add(ts[sl], {k: v[sl] for k, v in cols.items()})
+                    feed_pos[0] += chunk
+                    time.sleep(0.025)
+                w.close()
+
+            return feed
+
+        oracle_before = oracle
+        ingest_rounds = []
+        for n_s in SESSIONS:
+            settle()
+            before = feed_pos[0]
+            r = _round(svc, mix, n_s, ingest_feed=make_feed())
+            # Sync the host oracle to everything acknowledged so far.
+            sl = slice(before, feed_pos[0])
+            if feed_pos[0] > before:
+                store.ingest(ts[sl], {k: v[sl] for k, v in cols.items()})
+                store.flush_all()
+            r["oracle_before"] = oracle_before
+            r["oracle_after"] = _oracle_counts(store, mix)
+            oracle_before = r["oracle_after"]
+            ingest_rounds.append(r)
+        res["rounds"] = rounds
+        res["ingest_rounds"] = ingest_rounds
+        res["oracle"] = oracle
+
+        # Sweep epilogue: the sessions are idle now; the background
+        # compactor must get the device and fold the ingest leftovers.
+        svc.wait_idle()
+        deadline = time.time() + 120
+        while plane.has_unfolded() and time.time() < deadline:
+            time.sleep(0.02)
+        res["compactor_folds"] = svc.compactor.folds
+        res["compactor_skipped_busy"] = svc.compactor.skipped_busy
+    tel = plane.telemetry()
+    res["fold_events"] = tel["fold_events"]
+    res["sessions_telemetry"] = tel["sessions"]
+    res["rows_ingested_live"] = feed_pos[0] - used
+    return res
+
+
+def emit_csv(res: Dict) -> List[str]:
+    lines = []
+    for r in res["rounds"] + res["ingest_rounds"]:
+        tag = f"table1_concurrency_s{r['sessions']}" + ("_ingest" if r["ingest"] else "")
+        lines.append(
+            f"{tag},{r['ttfr_median_max'] * 1e6:.0f},"
+            f"ttfr_mean_us={r['ttfr_mean'] * 1e6:.0f};"
+            f"ttfr_max_us={r['ttfr_max'] * 1e6:.0f};"
+            f"queries={r['queries']};wall_s={r['wall_s']:.2f};"
+            f"queue_wait_s={r['queue_wait_s']:.2f}"
+        )
+    fe = ";".join(f"{k}={v}" for k, v in sorted(res["fold_events"].items()))
+    lines.append(
+        f"table1_concurrency_folds,{res['compactor_folds']},{fe or 'none'}"
+    )
+    return lines
+
+
+def validate(res: Dict) -> List[str]:
+    fails = []
+    oracle = res["oracle"]
+    # Exactness: every session of every at-rest round matches the oracle.
+    for r in res["rounds"]:
+        for i, counts in enumerate(r["counts"]):
+            for name, got in counts.items():
+                if got != oracle[name]:
+                    fails.append(
+                        f"s{r['sessions']} session {i} {name}: {got} != oracle {oracle[name]}"
+                    )
+    # Ingest rounds: pinned snapshots put every count between the
+    # before/after oracles (monotone ingest, append-only workload).
+    for r in res["ingest_rounds"]:
+        for i, counts in enumerate(r["counts"]):
+            for name, got in counts.items():
+                lo, hi = r["oracle_before"][name], r["oracle_after"][name]
+                if not (lo <= got <= hi):
+                    fails.append(
+                        f"ingest s{r['sessions']} session {i} {name}: "
+                        f"{got} outside [{lo}, {hi}]"
+                    )
+    # No starvation: at 4 concurrent sessions every session's median TTFR
+    # within 3x the solo value.
+    solo = res["solo_ttfr_median"]
+    four = next(r for r in res["rounds"] if r["sessions"] == 4)
+    for i, m in enumerate(four["ttfr_median_per_session"]):
+        if m > 3.0 * solo:
+            fails.append(
+                f"starvation at 4 sessions: session {i} ttfr {m * 1e3:.1f}ms "
+                f"> 3x solo {solo * 1e3:.1f}ms"
+            )
+    # Background compaction happened, and nothing folded on the query path.
+    if res["compactor_folds"] < 1:
+        fails.append("background compactor never folded during the sweep")
+    bad_sources = set(res["fold_events"]) - {"ingest", "background", "explicit"}
+    if bad_sources:
+        fails.append(f"fold attributed to unexpected source(s): {bad_sources}")
+    if res["fold_events"].get("background", 0) < 1:
+        fails.append("no fold attributed to the background compactor")
+    if res["rows_ingested_live"] <= 0:
+        fails.append("concurrent-ingest rounds never ingested a row")
+    return fails
+
+
+if __name__ == "__main__":
+    r = run(quick=True)
+    print("\n".join(emit_csv(r)))
+    f = validate(r)
+    print(f"# {len(f)} validation failure(s)")
+    for line in f:
+        print("#", line)

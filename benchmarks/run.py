@@ -8,6 +8,8 @@ the paper's qualitative claims. Tables map to the paper as:
     fig3_*    Fig 3   ingest scaling vs clients x servers (+ saturation)
     fig4_*    Fig 4   backpressure regimes (rate variance)
     table1_*  Table I query responsiveness (time-to-first-result)
+    table1_concurrency_*  (ours) first-result latency vs concurrent
+              sessions over the serve plane, at rest and under live ingest
     table2_*  Table II query total runtime
     kernel_*  (ours)  store kernel throughput
 """
@@ -23,7 +25,13 @@ def main() -> None:
     ap.add_argument("--rows", type=int, default=None, help="bench store size")
     args = ap.parse_args()
 
-    from . import bench_ingest_scaling, bench_kernels, bench_query_responsiveness, bench_query_runtime
+    from . import (
+        bench_ingest_scaling,
+        bench_kernels,
+        bench_query_concurrency,
+        bench_query_responsiveness,
+        bench_query_runtime,
+    )
     from .common import build_bench_store
 
     lines = []
@@ -47,6 +55,11 @@ def main() -> None:
     r3 = bench_ingest_scaling.run(quick=args.quick)
     lines += bench_ingest_scaling.emit_csv(r3)
     failures += [f"ingest: {f}" for f in bench_ingest_scaling.validate(r3)]
+
+    print("# serve plane: latency vs concurrent sessions ...", file=sys.stderr, flush=True)
+    r5 = bench_query_concurrency.run(quick=args.quick)
+    lines += bench_query_concurrency.emit_csv(r5)
+    failures += [f"concurrency: {f}" for f in bench_query_concurrency.validate(r5)]
 
     print("# kernels ...", file=sys.stderr, flush=True)
     r4 = bench_kernels.run()

@@ -26,6 +26,7 @@ the paper's technique applied beyond the paper.
 """
 from __future__ import annotations
 
+import threading
 from dataclasses import dataclass, field
 from typing import Callable, Iterator, List, Tuple
 
@@ -34,6 +35,31 @@ DEFAULT_C = 1.5
 DEFAULT_T_MAX = 30.0
 DEFAULT_T_MIN = 1.0
 DEFAULT_EPS = 1
+
+
+def alg1_next_k(
+    k: float, runtime: float, rows: int, c: float, t_max: float, t_min: float
+) -> float:
+    """The Alg-1 UPDATE law for the desired result count, shared verbatim
+    by every admission policy in the repo: the range batcher below, the
+    LM serving admission (repro.serving.batcher) and the query-serving
+    scheduler's turn quantum (repro.serve_db.scheduler). Grow k
+    geometrically; if the projected next runtime k' * (T/r) leaves
+    [t_min, t_max], re-derive k' from the observed rate r/T so the next
+    unit of work lands back inside the latency window. Returns the raw
+    k' — callers apply their own floors/caps (the batcher floors at 1,
+    serving caps at the slot pool, the scheduler caps at its turn
+    budget). rows == 0 keeps k (the rate is unobservable)."""
+    t_i = max(float(runtime), 1e-9)
+    if rows <= 0:
+        return float(k)
+    k_next = c * k
+    t_hat = k_next * (t_i / rows)
+    if t_hat > t_max:
+        k_next = t_max * (rows / t_i)
+    elif t_hat < t_min:
+        k_next = t_min * (rows / t_i)
+    return float(k_next)
 
 
 @dataclass
@@ -82,14 +108,9 @@ class AdaptiveBatcher:
         """Alg 1 UPDATE(T_i, r_i)."""
         rec = BatchRecord(self._i, self._p, self._b, self._k, runtime, rows)
         self.history.append(rec)
-        t_i = max(float(runtime), 1e-9)
         if rows > 0:
-            k_next = self.c * self._k  # line 2
-            t_hat = k_next * (t_i / rows)  # line 3
-            if t_hat > self.t_max:  # line 4
-                k_next = self.t_max * (rows / t_i)  # line 5: too large
-            elif t_hat < self.t_min:  # line 6
-                k_next = self.t_min * (rows / t_i)  # line 7: too small
+            # Lines 2-7 are the shared law (alg1_next_k).
+            k_next = alg1_next_k(self._k, runtime, rows, self.c, self.t_max, self.t_min)
             b_next = k_next * (self._b / rows)  # line 9
         else:
             # r_i == 0 guard (see module docstring).
@@ -142,15 +163,21 @@ def iter_batches(
 class HitRateTracker:
     """Per-table historical hit rate r/b used to seed b_0 (paper: 'b_0
     pre-computed for the particular Accumulo table being queried based on
-    the typical hit-rates of previous queries on that table')."""
+    the typical hit-rates of previous queries on that table').
+
+    Thread-safe: one tracker is shared by every session querying the same
+    table through the serve plane, so concurrent observe() calls must not
+    tear the EWMA update."""
 
     def __init__(self, default_rate: float = 1.0, alpha: float = 0.2):
         self._rate = default_rate  # rows per time unit
         self._alpha = alpha
+        self._lock = threading.Lock()
 
     def observe(self, rows: int, b: float) -> None:
         if b > 0:
-            self._rate = (1 - self._alpha) * self._rate + self._alpha * (rows / b)
+            with self._lock:
+                self._rate = (1 - self._alpha) * self._rate + self._alpha * (rows / b)
 
     def initial_b(self, k0: float = DEFAULT_K0) -> float:
         return max(k0 / max(self._rate, 1e-9), 1.0)

@@ -45,7 +45,8 @@ the plane scalar kept as their sum — the paper's §IV-A per-client
 backpressure curve is directly plottable from telemetry().
 
 publish() is a SNAPSHOT, not a fold: it seals the memtables (one
-delta-sized sort, O(mem_rows)) and hands out a DistStore view of ALL
+fill-bounded sort, O(live fill) — the host fill mirror picks the slab
+head to sort, pow2-bucketed) and hands out a DistStore view of ALL
 levels — base, run slabs, sealed memtable — for every family. The
 distributed read path (core/dist_query.py) searches every level, so
 freshly ingested rows AND their index/aggregate entries become visible
@@ -188,6 +189,21 @@ class DistIngestPlane:
         self._published: Optional[DistStore] = None
         self.blocked_seconds = 0.0  # sum over writers; per-writer below
         self.blocked_by_writer: Dict[int, float] = {}
+        # Fold accounting: every run->base fold is attributed to whoever
+        # drove it — "ingest" counts BLOCKING majors tripped by a
+        # writer's flush (one per major), and each `source` passed to
+        # compact() ("explicit" callers, "background" for the serve
+        # plane's compactor) counts that call's drain passes. Routine
+        # minor flushes are not folds and are not attributed (the
+        # per-tablet `minor` counter already tracks them). What matters
+        # for the serve plane: the query path NEVER appears here — reads
+        # cannot fold by construction — and telemetry()["fold_events"]
+        # proves it.
+        self.fold_events: Dict[str, int] = {}
+        # Serve-plane sessions report through the same telemetry structure
+        # as ingest writers (record_session); key = session id.
+        self.session_stats: Dict[int, Dict[str, float]] = {}
+        self.last_seal_rows = 0  # event-family slots the last publish sorted
         # Concurrent DistBatchWriters (paper: many parallel ingest clients)
         # share one plane: the lock serializes state/counter updates, like
         # the host Tablet's lock. Writers blocked here while another's
@@ -527,18 +543,37 @@ class DistIngestPlane:
             names += [f"{p}_mem_k", f"{p}_mem_c", f"{p}_mem_n"]
         return names
 
-    def _seal_step(self):
-        """Sorted SNAPSHOT of the memtables — the only per-publish device
-        work. O(mem_rows log mem_rows) per tablet, independent of base
-        fill: this is what makes publish() a freshness flip instead of an
-        O(capacity) re-merge. Reads the live memtable slabs (no donation)
-        and writes fresh sealed arrays, so later appends can't tear a
-        published view."""
-        if "seal" in self._steps:
-            return self._steps["seal"]
+    def _seal_bucket(self, fill_max: int) -> int:
+        """Event-family slot count the seal program must sort to cover a
+        memtable fill of fill_max — the live fill rounded up to a power of
+        two (floored at 8) so the number of distinct seal compilations is
+        log2-bounded, clamped to the slab capacity."""
+        return int(min(max(_pow2(max(fill_max, 1)), 8), self.mem_rows))
+
+    def _seal_step(self, seal_rows: int):
+        """FILL-BOUNDED sorted snapshot of the memtables — the only
+        per-publish device work. Only the first `seal_rows` slots of each
+        event memtable (scaled per family: ix/ag slabs are n_indexed x
+        wider) are sorted — O(fill log fill), not O(mem_rows log
+        mem_rows): a publish right after a flush or a compact() pays for
+        the handful of live rows, not the slab capacity. The sealed
+        OUTPUT keeps the full (T, mem_rows) shape — sorted head +
+        sentinel tail — so published DistStore level shapes never change
+        and the compiled read programs never re-trace. Reads the live
+        memtable slabs (no donation) and writes fresh sealed arrays, so
+        later appends can't tear a published view."""
+        key = ("seal", seal_rows)
+        if key in self._steps:
+            return self._steps[key]
         mesh = self.mesh
         families = self.families
         names = self._seal_names()
+        # Per-family head length: ix/ag fills are exactly n_indexed x the
+        # event fill (one entry per indexed field per event).
+        heads = {
+            f.name: int(min(seal_rows * (f.mem_rows // self.mem_rows), f.mem_rows))
+            for f in families
+        }
         out_specs = {}
         for f in families:
             p = f.name
@@ -550,13 +585,20 @@ class DistIngestPlane:
             def one(loc):
                 out = {}
                 for f in families:
-                    p = f.name
+                    p, m, h = f.name, f.mem_rows, heads[f.name]
                     n = loc[f"{p}_mem_n"]
-                    # Same mask-past-fill + sort as a minor flush: sealed
-                    # levels obey the sorted + sentinel-tailed invariant
-                    # of runs and base.
-                    out[f"{p}_sealed_k"], out[f"{p}_sealed_c"] = _sort_masked(
-                        loc[f"{p}_mem_k"], loc[f"{p}_mem_c"], n, f.sentinel
+                    # Same mask-past-fill + sort as a minor flush — over
+                    # the live head only (publish() guarantees n <= h);
+                    # the sentinel tail keeps the sealed level's sorted +
+                    # sentinel-tailed invariant at full slab shape.
+                    head_k, head_c = _sort_masked(
+                        loc[f"{p}_mem_k"][:h], loc[f"{p}_mem_c"][:h], n, f.sentinel
+                    )
+                    out[f"{p}_sealed_k"] = jnp.concatenate(
+                        [head_k, jnp.full((m - h,), f.sentinel, head_k.dtype)]
+                    )
+                    out[f"{p}_sealed_c"] = jnp.concatenate(
+                        [head_c, jnp.zeros((m - h, f.width), head_c.dtype)]
                     )
                     out[f"{p}_sealed_n"] = n
                 return out
@@ -570,8 +612,8 @@ class DistIngestPlane:
             out_specs=out_specs,
             check_rep=False,
         )
-        self._steps["seal"] = jax.jit(smapped)
-        return self._steps["seal"]
+        self._steps[key] = jax.jit(smapped)
+        return self._steps[key]
 
     # ------------------------------------------------------------- ingest
     def _run_minor(self) -> None:
@@ -637,6 +679,7 @@ class DistIngestPlane:
                     self._run_major()
                     jax.block_until_ready(self.state["ev_base_n"])
                     blocked += time.perf_counter() - t0
+                    self.fold_events["ingest"] = self.fold_events.get("ingest", 0) + 1
                 self._run_minor()
             pad_rts = np.zeros((b,), np.int32)
             pad_cols = np.zeros((b, self.n_fields), np.int32)
@@ -659,8 +702,9 @@ class DistIngestPlane:
         """Snapshot the plane into a query-visible DistStore — ALL levels
         of every family: base runs, sorted-run slabs, and a sealed (sorted)
         copy of the memtables. NO fold happens here: the run-aware read
-        path searches every level, so publish costs O(mem_rows) device
-        work (the seal sort) + a metadata flip, independent of base fill —
+        path searches every level, so publish costs O(live memtable fill)
+        device work (the seal sort) + a metadata flip, independent of base
+        fill AND of memtable capacity —
         major compaction, threshold-driven during ingest or batched via
         compact(), is the only point where runs merge into the base.
 
@@ -673,7 +717,13 @@ class DistIngestPlane:
         with self._lock:
             if not self._dirty and self._published is not None:
                 return self._published
-            sealed = self._seal_step()(self._sub(self._seal_names()))
+            # Fill-bounded seal: the host fill mirror is exact, so the
+            # seal program sorts only the live head of each memtable
+            # (pow2-bucketed to bound compilations) — a near-empty
+            # memtable seals in O(fill), not O(mem_rows).
+            seal_rows = self._seal_bucket(int(self._fill.max()))
+            self.last_seal_rows = seal_rows
+            sealed = self._seal_step(seal_rows)(self._sub(self._seal_names()))
             s = self.state
             has_ix = len(self.families) > 1
             self._published = DistStore(
@@ -707,26 +757,82 @@ class DistIngestPlane:
             self._dirty = False
             return self._published
 
-    def compact(self) -> None:
+    def warm_seal(self) -> None:
+        """Pre-compile (and once-execute) the fill-bounded seal program
+        for every pow2 bucket up to mem_rows — log2-many variants.
+        Serving deployments call this once at startup so no publish ever
+        pays an XLA compile mid-query (a cold bucket otherwise lands its
+        compile time in some session's time-to-first-result)."""
+        with self._lock:
+            seal_rows = 8
+            while True:
+                self._seal_step(seal_rows)(self._sub(self._seal_names()))
+                if seal_rows >= self.mem_rows:
+                    break
+                seal_rows = min(seal_rows * 2, self.mem_rows)
+
+    def has_unfolded(self) -> bool:
+        """True when memtables or run slots hold rows — i.e. compact()
+        would actually fold something. Exact from the host-side fill/run
+        mirrors: zero device syncs, so the serve plane's background
+        compactor can poll it from its idle loop for free."""
+        with self._lock:
+            return bool(int(self._fill.max()) or int(self._runs_host.max()))
+
+    def fold_debt(self) -> int:
+        """Deepest run-slot usage across tablets (host mirror, free): how
+        close ingest is to tripping a blocking major (at max_runs). The
+        background compactor folds urgently above its debt threshold and
+        otherwise waits for a sustained idle window — a major costs
+        seconds of device time at scale, so WHEN it runs is the whole
+        game."""
+        with self._lock:
+            return int(self._runs_host.max())
+
+    def compact(self, source: str = "explicit") -> int:
         """Batched background fold: drain memtables into runs (minor) and
         runs into the base (major) for every family. This — plus the
         threshold-driven majors ingest itself trips — is the ONLY place
         runs fold into the base; publish() never does. Call it off the
-        query path (a maintenance thread, an idle writer) to keep run
-        counts low; queries stay exact either way, the fold only moves
-        where rows live. No-op (and keeps the published-view cache) when
-        there is nothing to fold."""
+        query path (the serve plane's BackgroundCompactor, an idle
+        writer) to keep run counts low; queries stay exact either way,
+        the fold only moves where rows live. No-op (and keeps the
+        published-view cache) when there is nothing to fold.
+
+        `source` attributes the fold in telemetry()["fold_events"]
+        (see __init__); returns the number of minor+major passes run
+        (0 for the no-op), so callers like the compactor can count real
+        folds without a telemetry round trip."""
         with self._lock:
             if int(self._fill.max()) == 0 and int(self._runs_host.max()) == 0:
-                return  # exact mirrors: nothing in memtables or run slots
+                return 0  # exact mirrors: nothing in memtables or run slots
+            passes = 0
             for _ in range(3):
                 self._run_minor()
                 self._run_major()
+                passes += 1
                 if int(self._fill.max()) == 0:  # exact mirror: no device sync
                     break
             else:  # pragma: no cover — the invariant bounds this to 2 passes
                 raise RuntimeError("compact did not drain the memtables")
+            self.fold_events[source] = self.fold_events.get(source, 0) + passes
             self._dirty = True  # published view now points at stale levels
+            return passes
+
+    def record_session(self, session_id: int, stats: Dict[str, float]) -> None:
+        """Serve-plane hook: a QuerySession reports its telemetry (batches
+        served, time-to-first-result, queue-wait seconds, ...) into the
+        plane, so clients of the query-serving plane and ingest writers
+        surface through ONE structure — telemetry()["sessions"] next to
+        ["blocked_seconds_per_writer"]. Bounded: only the most recent
+        1024 sessions are retained (insertion order), so per-connection
+        sessions on a long-lived service don't grow the plane without
+        limit."""
+        with self._lock:
+            self.session_stats.pop(int(session_id), None)  # refresh position
+            self.session_stats[int(session_id)] = dict(stats)
+            while len(self.session_stats) > 1024:
+                self.session_stats.pop(next(iter(self.session_stats)))
 
     def telemetry(self) -> Dict[str, np.ndarray]:
         """Per-tablet device counters (the paper's backpressure signals),
@@ -750,6 +856,10 @@ class DistIngestPlane:
                 )
             out["blocked_seconds"] = np.float64(self.blocked_seconds)
             out["blocked_seconds_per_writer"] = dict(self.blocked_by_writer)
+            # One reporting structure for both planes: ingest writers
+            # above, serve-plane query sessions + fold attribution below.
+            out["sessions"] = {k: dict(v) for k, v in self.session_stats.items()}
+            out["fold_events"] = dict(self.fold_events)
             return out
 
 

@@ -40,7 +40,9 @@ single-pod and multi-pod meshes as the extra `llcysa-store` cells.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+import threading
+import time
+from dataclasses import dataclass, field
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -50,6 +52,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 from . import keypack
+from .batching import AdaptiveBatcher
 from .filter import FilterProgram, compile_tree
 from .iterators import AggregateResult, AggregateSpec, ResolvedGrouping, resolve_grouping
 from .planner import QueryPlan, plan_query
@@ -137,6 +140,10 @@ class DistStore:
     ag_mem_c: Optional[jax.Array] = None
     ag_mem_n: Optional[jax.Array] = None
     agg_bucket_s: Optional[int] = None
+    # Per-snapshot memo for planner density reads (_agg_count_on): a
+    # published snapshot is immutable, so a density within it never goes
+    # stale; the memo dies with the snapshot at the next publish flip.
+    density_cache: Dict[Tuple, int] = field(default_factory=dict, repr=False)
 
     @property
     def n_tablets(self) -> int:
@@ -970,11 +977,15 @@ def build_density_step(mesh: Mesh, runs: bool = False):
 class DistBatch:
     """One batch's result from the distributed executor: the exact global
     matching-row count plus the per-tablet top-k newest rows (BatchScanner
-    semantics: unordered across tablets, newest-first within)."""
+    semantics: unordered across tablets, newest-first within). lo/hi are
+    the adaptive batch's time sub-range when stepped through a QueryRun
+    (the serve plane streams these to clients and checks monotonicity)."""
 
     count: int
     ts: np.ndarray
     cols: np.ndarray
+    lo: float = 0.0
+    hi: float = 0.0
 
     @property
     def n(self) -> int:
@@ -983,6 +994,112 @@ class DistBatch:
     @property
     def nbytes(self) -> int:
         return self.ts.nbytes + self.cols.nbytes
+
+
+class _PinnedSource:
+    """plan_query density source bound to ONE published snapshot: an
+    in-flight query's planning reads d_i from the same LSM state its
+    batches will execute against, even while publishes and background
+    compactions race the query (per-call isolation for the serve plane)."""
+
+    def __init__(self, proc: "DistQueryProcessor", dist: DistStore):
+        self._proc = proc
+        self._dist = dist
+
+    @property
+    def schema(self):
+        return self._proc.store.schema
+
+    @property
+    def dictionaries(self):
+        return self._proc.store.dictionaries
+
+    def agg_count(self, field: str, value: str, t_start: int, t_stop: int) -> int:
+        return self._proc._agg_count_on(self._dist, field, value, t_start, t_stop)
+
+
+class QueryRun:
+    """One planned query pinned to one published snapshot, stepped one
+    adaptive batch at a time — the re-entrant form of
+    DistQueryProcessor.execute().
+
+    The serve plane's scheduler (repro.serve_db) interleaves many
+    sessions' QueryRuns under a device lock: step() executes exactly ONE
+    Alg-2 batch (one device program in filter mode; index mode adds the
+    filter-scan redo only on slab overflow) and feeds the observed
+    (runtime, rows) back into the run's own AdaptiveBatcher. Nothing here
+    mutates processor state beyond the lock-guarded jit step caches, so
+    any number of runs step concurrently; and because the snapshot is
+    pinned at construction — published levels are stable, compaction
+    programs never donate their buffers — a background compact() or a
+    concurrent publish can never change this run's results mid-flight."""
+
+    def __init__(
+        self,
+        proc: "DistQueryProcessor",
+        tree,
+        t_start: int,
+        t_stop: int,
+        use_index: bool = True,
+        batched: bool = True,
+        stats=None,
+    ):
+        self.proc = proc
+        self.tree = tree
+        self.t_start = t_start
+        self.t_stop = t_stop
+        self.stats = stats
+        self.dist = proc._sync()  # pinned for the whole run
+        source = _PinnedSource(proc, self.dist) if self.dist.has_index else proc.store
+        self.plan = plan_query(
+            source, tree, t_start, t_stop, w=proc.w,
+            use_index=use_index and self.dist.has_index,
+        )
+        if stats is not None:
+            stats.plan = self.plan
+        self._empty = self.plan.mode == "empty"
+        self._single_done = False
+        if batched and not self._empty:
+            rps = proc.store.rows_per_second()
+            self.batcher: Optional[AdaptiveBatcher] = AdaptiveBatcher(
+                t_start=t_start, t_stop=t_stop, b0=rps and 10.0 / rps
+            )
+        else:
+            self.batcher = None
+
+    @property
+    def done(self) -> bool:
+        if self._empty:
+            return True
+        if self.batcher is None:
+            return self._single_done
+        return self.batcher.done
+
+    def step(self) -> Optional[DistBatch]:
+        """Execute the next adaptive batch and return it (lo/hi carry the
+        batch's time sub-range); None once the run is done — provably
+        empty plans never dispatch a device program at all."""
+        if self.done:
+            return None
+        if self.batcher is None:
+            lo, hi = float(self.t_start), float(self.t_stop)
+        else:
+            lo, hi = self.batcher.next_range()
+        t0 = time.perf_counter()
+        blk = self.proc._exec_range(
+            self.plan, self.tree, int(lo), int(hi), self.stats, dist=self.dist
+        )
+        runtime = time.perf_counter() - t0
+        if self.batcher is None:
+            self._single_done = True
+        else:
+            self.batcher.update(runtime, blk.count)
+        if self.stats is not None:
+            self.stats.batches += 1
+            self.stats.rows += blk.count
+            self.stats.batch_log.append((lo, hi, runtime, blk.count))
+        blk.lo, blk.hi = float(lo), float(hi)
+        return blk
 
 
 class DistQueryProcessor:
@@ -1026,25 +1143,41 @@ class DistQueryProcessor:
         self.index_postings = index_postings
         self.index_rows = index_rows
         self._step_cache: Dict[Tuple, object] = {}
+        # Re-entrancy: many serve-plane sessions step queries through ONE
+        # processor concurrently. The cache lock guards the jit-step dict;
+        # per-query state (plan, batcher, stats, the pinned snapshot)
+        # lives in each QueryRun, never on self.
+        self._cache_lock = threading.Lock()
 
-    def _sync(self) -> None:
+    def _sync(self) -> DistStore:
+        """Refresh to the plane's latest published snapshot and return it.
+        Callers pin the RETURNED snapshot for the duration of one
+        operation (self.dist may be re-flipped by a concurrent caller at
+        any time; a published snapshot itself is immutable)."""
         if self.plane is not None:
             self.dist = self.plane.publish()
+        return self.dist
 
     # ------------------------------------------------- level input helpers
-    def _ev_levels(self) -> Tuple[jax.Array, ...]:
-        d = self.dist
+    @staticmethod
+    def _ev_levels(d: DistStore) -> Tuple[jax.Array, ...]:
         return (d.run_rev_ts, d.run_cols, d.run_counts,
                 d.mem_rev_ts, d.mem_cols, d.mem_counts)
 
-    def _ix_levels(self) -> Tuple[jax.Array, ...]:
-        d = self.dist
+    @staticmethod
+    def _ix_levels(d: DistStore) -> Tuple[jax.Array, ...]:
         return (d.ix_run_k, d.ix_run_n, d.ix_mem_k, d.ix_mem_n)
 
-    def _ag_levels(self) -> Tuple[jax.Array, ...]:
-        d = self.dist
+    @staticmethod
+    def _ag_levels(d: DistStore) -> Tuple[jax.Array, ...]:
         return (d.ag_run_k, d.ag_run_c, d.ag_run_n,
                 d.ag_mem_k, d.ag_mem_c, d.ag_mem_n)
+
+    def _cached_step(self, key: Tuple, build):
+        with self._cache_lock:
+            if key not in self._step_cache:
+                self._step_cache[key] = build()
+            return self._step_cache[key]
 
     # ------------------------------------------------- planner density source
     # plan_query duck-types its store argument: it needs .schema,
@@ -1063,52 +1196,72 @@ class DistQueryProcessor:
         DISTRIBUTED aggregate tablets (psum of per-tablet, per-level
         counts) — the planner's d_i, served by the mesh instead of the
         host store, fresh through unfolded runs."""
-        self._sync()
-        if not self.dist.has_index:
+        return self._agg_count_on(self._sync(), field, value, t_start, t_stop)
+
+    def _agg_count_on(self, d: DistStore, field: str, value: str,
+                      t_start: int, t_stop: int) -> int:
+        """agg_count against ONE pinned snapshot (no re-publish): planning
+        for an in-flight QueryRun reads densities from the same LSM state
+        its batches will execute against. Memoized PER SNAPSHOT (a
+        published DistStore is immutable, so a density read never goes
+        stale within it): concurrent sessions planning the same
+        conditions — the common case on the serve plane — pay the device
+        read once, which is most of a follower query's
+        time-to-first-result."""
+        if not d.has_index:
             return self.store.agg_count(field, value, t_start, t_stop)
+        cache = d.density_cache
+        ckey = (field, value, int(t_start), int(t_stop))
+        hit = cache.get(ckey)
+        if hit is not None:
+            return hit
         code = self.store.dictionaries[field].lookup(value)
         if code is None:
+            cache[ckey] = 0
             return 0
         fid = self.store.schema.field_id(field)
-        bs = self.dist.agg_bucket_s
+        bs = d.agg_bucket_s
         b0 = int(t_start) // bs
         b1 = int(t_stop) // bs
         lo = int(keypack.pack_agg_key(fid, code, b0))
         hi = int(keypack.pack_agg_key(fid, code, b1)) + 1
-        key = ("density", self.dist.has_runs)
-        if key not in self._step_cache:
-            self._step_cache[key] = build_density_step(
-                self.dist.mesh, runs=self.dist.has_runs
-            )
-        step = self._step_cache[key]
-        args = (self.dist.ag_keys, self.dist.ag_vals)
-        if self.dist.has_runs:
-            args += self._ag_levels()
-        return int(step(*args, jnp.int64(lo), jnp.int64(hi)))
+        step = self._cached_step(
+            ("density", d.has_runs),
+            lambda: build_density_step(d.mesh, runs=d.has_runs),
+        )
+        args = (d.ag_keys, d.ag_vals)
+        if d.has_runs:
+            args += self._ag_levels(d)
+        out = int(step(*args, jnp.int64(lo), jnp.int64(hi)))
+        cache[ckey] = out
+        return out
 
-    def _step(self, prog: FilterProgram):
+    def _step(self, prog: FilterProgram, d: DistStore):
         from ..kernels.filter_scan.ops import pad_program
 
         opc, a0, a1, cs = pad_program(prog)
-        key = (len(opc), cs.shape, self.dist.has_runs)
-        if key not in self._step_cache:
-            self._step_cache[key] = build_scan_step(
-                self.dist.mesh, self.store.schema.n_fields, len(opc), cs.shape,
-                self.top_k, runs=self.dist.has_runs,
-            )
-        return self._step_cache[key], (opc, a0, a1, cs)
+        step = self._cached_step(
+            (len(opc), cs.shape, d.has_runs),
+            lambda: build_scan_step(
+                d.mesh, self.store.schema.n_fields, len(opc), cs.shape,
+                self.top_k, runs=d.has_runs,
+            ),
+        )
+        return step, (opc, a0, a1, cs)
 
-    def scan_range(self, tree, t0: int, t1: int):
+    def scan_range(self, tree, t0: int, t1: int, dist: Optional[DistStore] = None):
         """One range scan across all tablets and all LSM levels. Returns
-        (global_count, top-k rows per tablet as (ts, cols) numpy arrays)."""
-        self._sync()
+        (global_count, top-k rows per tablet as (ts, cols) numpy arrays).
+        `dist` pins an already-published snapshot (QueryRun); default
+        syncs to the plane's latest."""
+        d = dist if dist is not None else self._sync()
         prog = compile_tree(self.store, tree)
-        step, (opc, a0, a1, cs) = self._step(prog)
+        step, (opc, a0, a1, cs) = self._step(prog, d)
         rts_lo = jnp.int32(keypack.rev_ts(t1))
         rts_hi = jnp.int32(keypack.rev_ts(t0) + 1)
-        args = (self.dist.rev_ts, self.dist.cols, self.dist.counts)
-        if self.dist.has_runs:
-            args += self._ev_levels()
+        args = (d.rev_ts, d.cols, d.counts)
+        if d.has_runs:
+            args += self._ev_levels(d)
         total, top_ts, top_cols = step(
             *args,
             jnp.asarray(opc), jnp.asarray(a0), jnp.asarray(a1), jnp.asarray(cs),
@@ -1119,18 +1272,20 @@ class DistQueryProcessor:
         return int(total), keypack.unrev_ts(ts[valid]), np.asarray(top_cols)[valid]
 
     # -------------------------------------------------------- index path
-    def _index_step(self, prog: FilterProgram, n_conds: int, combine: str):
+    def _index_step(self, prog: FilterProgram, n_conds: int, combine: str,
+                    d: DistStore):
         from ..kernels.filter_scan.ops import pad_program
 
         opc, a0, a1, cs = pad_program(prog)
-        key = ("index", n_conds, combine, len(opc), cs.shape, self.dist.has_runs)
-        if key not in self._step_cache:
-            self._step_cache[key] = build_index_step(
-                self.dist.mesh, n_conds, combine, len(opc), cs.shape,
+        step = self._cached_step(
+            ("index", n_conds, combine, len(opc), cs.shape, d.has_runs),
+            lambda: build_index_step(
+                d.mesh, n_conds, combine, len(opc), cs.shape,
                 self.top_k, self.index_postings, self.index_rows,
-                runs=self.dist.has_runs,
-            )
-        return self._step_cache[key], (opc, a0, a1, cs)
+                runs=d.has_runs,
+            ),
+        )
+        return step, (opc, a0, a1, cs)
 
     def _cond_ranges(self, plan: QueryPlan, t0: int, t1: int):
         """Per-condition packed index-key [lo, hi) ranges for the batch's
@@ -1149,13 +1304,14 @@ class DistQueryProcessor:
             hi[i] = keypack.pack_index_key(fid, code, rts_hi) + 1
         return lo, hi
 
-    def _index_args(self):
-        args = (self.dist.rev_ts, self.dist.cols, self.dist.ix_keys)
-        if self.dist.has_runs:
-            args += self._ev_levels() + self._ix_levels()
+    def _index_args(self, d: DistStore):
+        args = (d.rev_ts, d.cols, d.ix_keys)
+        if d.has_runs:
+            args += self._ev_levels(d) + self._ix_levels(d)
         return args
 
-    def scan_index_range(self, plan: QueryPlan, tree, t0: int, t1: int):
+    def scan_index_range(self, plan: QueryPlan, tree, t0: int, t1: int,
+                         dist: Optional[DistStore] = None):
         """One index-mode range across all tablets (paper Fig 2 on-mesh):
         postings lookup per condition per level, device-side
         intersect/union, candidate-row fetch from every level, and the
@@ -1163,14 +1319,14 @@ class DistQueryProcessor:
         Returns (global_count, top-k (ts, cols), truncated, candidates);
         `truncated` > 0 means a posting/row slab overflowed and the count
         is a lower bound — the executor falls back to filter-scan then."""
-        self._sync()
+        d = dist if dist is not None else self._sync()
         prog = compile_tree(self.store, tree)
         step, (opc, a0, a1, cs) = self._index_step(
-            prog, len(plan.index_conds), plan.combine
+            prog, len(plan.index_conds), plan.combine, d
         )
         lo, hi = self._cond_ranges(plan, t0, t1)
         total, top_ts, top_cols, truncated, cands = step(
-            *self._index_args(),
+            *self._index_args(d),
             jnp.asarray(opc), jnp.asarray(a0), jnp.asarray(a1), jnp.asarray(cs),
             jnp.asarray(lo), jnp.asarray(hi),
         )
@@ -1182,16 +1338,20 @@ class DistQueryProcessor:
         )
 
     # ---------------------------------------------------- planned execution
-    def _exec_range(self, plan: QueryPlan, tree, t0: int, t1: int, stats=None) -> DistBatch:
-        if plan.mode == "index" and self.dist.has_index:
-            count, ts, cols, truncated, cands = self.scan_index_range(plan, tree, t0, t1)
+    def _exec_range(self, plan: QueryPlan, tree, t0: int, t1: int, stats=None,
+                    dist: Optional[DistStore] = None) -> DistBatch:
+        d = dist if dist is not None else self.dist
+        if plan.mode == "index" and d.has_index:
+            count, ts, cols, truncated, cands = self.scan_index_range(
+                plan, tree, t0, t1, dist=d
+            )
             if stats is not None:
                 stats.index_keys_scanned += cands
             if not truncated:
                 return DistBatch(count, ts, cols)
             # Slab overflow: redo this range with the exact filter-scan
             # step (results identical, just without the candidate cap).
-        count, ts, cols = self.scan_range(tree, t0, t1)
+        count, ts, cols = self.scan_range(tree, t0, t1, dist=d)
         return DistBatch(count, ts, cols)
 
     def execute(
@@ -1207,42 +1367,17 @@ class DistQueryProcessor:
         QueryProcessor.execute. plan_query picks the access path from the
         mesh-resident densities (heuristics 1-4); index-mode plans run
         build_index_step per batch, filter plans the scan step; provably
-        empty plans (zero-density intersect branch) never touch a device."""
-        import time as _time
-        from .batching import AdaptiveBatcher
-
-        self._sync()
-        source = self if self.dist.has_index else self.store
-        plan = plan_query(
-            source, tree, t_start, t_stop, w=self.w,
-            use_index=use_index and self.dist.has_index,
+        empty plans (zero-density intersect branch) never touch a device.
+        Implemented over QueryRun: the whole query is pinned to one
+        published snapshot."""
+        run = QueryRun(
+            self, tree, t_start, t_stop,
+            use_index=use_index, batched=batched, stats=stats,
         )
-        if stats is not None:
-            stats.plan = plan
-        if plan.mode == "empty":
-            return
-        if not batched:
-            blk = self._exec_range(plan, tree, t_start, t_stop, stats)
-            if stats is not None:
-                stats.batches += 1
-                stats.rows += blk.count
-            yield blk
-            return
-        rps = self.store.rows_per_second()
-        batcher = AdaptiveBatcher(
-            t_start=t_start, t_stop=t_stop, b0=rps and 10.0 / rps
-        )
-        while not batcher.done:
-            lo, hi = batcher.next_range()
-            t0 = _time.perf_counter()
-            blk = self._exec_range(plan, tree, int(lo), int(hi), stats)
-            runtime = _time.perf_counter() - t0
-            batcher.update(runtime, blk.count)
-            if stats is not None:
-                stats.batches += 1
-                stats.rows += blk.count
-                stats.batch_log.append((lo, hi, runtime, blk.count))
-            yield blk
+        while not run.done:
+            blk = run.step()
+            if blk is not None:
+                yield blk
 
     def run_scheme(self, scheme: str, t_start: int, t_stop: int, tree=None, **kw):
         """The paper's four experimental schemes by name, distributed —
@@ -1255,18 +1390,20 @@ class DistQueryProcessor:
         }[scheme]
         return self.execute(tree, t_start, t_stop, **flags, **kw)
 
-    def _agg_step(self, prog: FilterProgram, grouping: ResolvedGrouping):
+    def _agg_step(self, prog: FilterProgram, grouping: ResolvedGrouping,
+                  d: DistStore):
         from ..kernels.filter_scan.ops import pad_program
 
         opc, a0, a1, cs = pad_program(prog)
         key = (
             "agg", len(opc), cs.shape, grouping.fids, grouping.strides,
             grouping.size, grouping.n_buckets, grouping.spec.time_bucket_s,
-            grouping.spec.op, grouping.value_fid, self.dist.has_runs,
+            grouping.spec.op, grouping.value_fid, d.has_runs,
         )
-        if key not in self._step_cache:
-            self._step_cache[key] = build_aggregate_step(
-                self.dist.mesh,
+        step = self._cached_step(
+            key,
+            lambda: build_aggregate_step(
+                d.mesh,
                 grouping.fids,
                 grouping.strides,
                 grouping.size,
@@ -1274,29 +1411,32 @@ class DistQueryProcessor:
                 grouping.spec.time_bucket_s,
                 grouping.spec.op,
                 grouping.value_fid,
-                runs=self.dist.has_runs,
-            )
-        return self._step_cache[key], (opc, a0, a1, cs)
+                runs=d.has_runs,
+            ),
+        )
+        return step, (opc, a0, a1, cs)
 
     def _index_agg_step(self, prog: FilterProgram, grouping: ResolvedGrouping,
-                        n_conds: int, combine: str):
+                        n_conds: int, combine: str, d: DistStore):
         from ..kernels.filter_scan.ops import pad_program
 
         opc, a0, a1, cs = pad_program(prog)
         key = (
             "aggix", n_conds, combine, len(opc), cs.shape, grouping.fids,
             grouping.strides, grouping.size, grouping.spec.time_bucket_s,
-            grouping.spec.op, grouping.value_fid, self.dist.has_runs,
+            grouping.spec.op, grouping.value_fid, d.has_runs,
         )
-        if key not in self._step_cache:
-            self._step_cache[key] = build_index_aggregate_step(
-                self.dist.mesh, n_conds, combine, len(opc), cs.shape,
+        step = self._cached_step(
+            key,
+            lambda: build_index_aggregate_step(
+                d.mesh, n_conds, combine, len(opc), cs.shape,
                 grouping.fids, grouping.strides, grouping.size,
                 grouping.spec.time_bucket_s, grouping.spec.op,
                 grouping.value_fid, self.index_postings, self.index_rows,
-                runs=self.dist.has_runs,
-            )
-        return self._step_cache[key], (opc, a0, a1, cs)
+                runs=d.has_runs,
+            ),
+        )
+        return step, (opc, a0, a1, cs)
 
     @staticmethod
     def _materialize_agg(grouping: ResolvedGrouping, aggs, cnts) -> AggregateResult:
@@ -1309,7 +1449,7 @@ class DistQueryProcessor:
 
     def aggregate_range(
         self, spec: AggregateSpec, tree, t0: int, t1: int,
-        use_index: bool = True, stats=None,
+        use_index: bool = True, stats=None, dist: Optional[DistStore] = None,
     ) -> AggregateResult:
         """Scan-time aggregation across all tablets in ONE device program —
         the distributed lowering of QueryProcessor.aggregate(), planner
@@ -1319,13 +1459,14 @@ class DistQueryProcessor:
         overflowed candidate slab — runs the exact filter-scan
         aggregation. Returns the already-merged (psum'd) per-group
         result; only groups with at least one matching row materialize
-        host-side."""
-        self._sync()
+        host-side. `dist` pins an already-published snapshot (serve-plane
+        sessions); default syncs to the plane's latest."""
+        d = dist if dist is not None else self._sync()
         grouping = resolve_grouping(self.store, spec, t0, t1)
-        source = self if self.dist.has_index else self.store
+        source = _PinnedSource(self, d) if d.has_index else self.store
         plan = plan_query(
             source, tree, t0, t1, w=self.w,
-            use_index=use_index and self.dist.has_index,
+            use_index=use_index and d.has_index,
         )
         if stats is not None:
             stats.plan = plan
@@ -1336,13 +1477,13 @@ class DistQueryProcessor:
         vt = grouping.value_table
         if vt is None:
             vt = np.ones(1, np.int32)  # unused placeholder (count op)
-        if plan.mode == "index" and self.dist.has_index:
+        if plan.mode == "index" and d.has_index:
             step, (opc, a0, a1, cs) = self._index_agg_step(
-                prog, grouping, len(plan.index_conds), plan.combine
+                prog, grouping, len(plan.index_conds), plan.combine, d
             )
             lo, hi = self._cond_ranges(plan, t0, t1)
             aggs, cnts, truncated, cands = step(
-                *self._index_args(),
+                *self._index_args(d),
                 jnp.asarray(opc), jnp.asarray(a0), jnp.asarray(a1), jnp.asarray(cs),
                 jnp.asarray(vt),
                 jnp.asarray(lo), jnp.asarray(hi),
@@ -1353,10 +1494,10 @@ class DistQueryProcessor:
             if not int(truncated):
                 return self._materialize_agg(grouping, aggs, cnts)
             # Slab overflow: exact filter-scan aggregation below.
-        step, (opc, a0, a1, cs) = self._agg_step(prog, grouping)
-        args = (self.dist.rev_ts, self.dist.cols, self.dist.counts)
-        if self.dist.has_runs:
-            args += self._ev_levels()
+        step, (opc, a0, a1, cs) = self._agg_step(prog, grouping, d)
+        args = (d.rev_ts, d.cols, d.counts)
+        if d.has_runs:
+            args += self._ev_levels(d)
         aggs, cnts = step(
             *args,
             jnp.asarray(opc), jnp.asarray(a0), jnp.asarray(a1), jnp.asarray(cs),
@@ -1368,18 +1509,16 @@ class DistQueryProcessor:
 
     def execute_batched(self, tree, t_start: int, t_stop: int, stats=None):
         """Algorithm 2 over the distributed scan."""
-        from .batching import AdaptiveBatcher
-        import time as _time
-
+        d = self._sync()
         batcher = AdaptiveBatcher(
             t_start=t_start, t_stop=t_stop, b0=self.store.rows_per_second() and 10.0 / self.store.rows_per_second()
         )
         results = []
         while not batcher.done:
             lo, hi = batcher.next_range()
-            t0 = _time.perf_counter()
-            count, ts, cols = self.scan_range(tree, int(lo), int(hi))
-            batcher.update(_time.perf_counter() - t0, count)
+            t0 = time.perf_counter()
+            count, ts, cols = self.scan_range(tree, int(lo), int(hi), dist=d)
+            batcher.update(time.perf_counter() - t0, count)
             results.append((count, ts, cols))
             if stats is not None:
                 stats.batches += 1

@@ -60,6 +60,20 @@ class QueryStats:
     batch_log: List[Tuple[float, float, float, int]] = field(default_factory=list)
 
 
+@dataclass
+class HostBatch:
+    """One adaptive batch's worth of host-path results, as stepped by a
+    HostQueryRun: the batch time sub-range, its blocks (RowBlocks, or an
+    AggregateBlock with aggregate=), and the matched-row count that drove
+    the Alg-1 update."""
+
+    lo: float
+    hi: float
+    blocks: List
+    runtime: float
+    rows: int
+
+
 class QueryProcessor:
     def __init__(self, store: EventStore, w: float = 10.0, kernel_backend: str = "auto"):
         self.store = store
@@ -180,55 +194,15 @@ class QueryProcessor:
         iterator stack terminates in a fused combiner and the stream yields
         AggregateBlocks (per-group partials) instead of rows. `_grouping`:
         an already-resolved grouping for `aggregate` (aggregate() passes its
-        own so value tables are not rebuilt)."""
-        plan = plan_query(self.store, tree, t_start, t_stop, w=self.w, use_index=use_index)
-        if stats is not None:
-            stats.plan = plan
-        if plan.mode == "empty":
-            # Provably empty (zero-density index condition): no scans, no
-            # batching loop — the whole time range is answered from the
-            # aggregate table alone.
-            return
-        residual_trivial = isinstance(plan.residual, TrueNode) or plan.residual is None
-        prog = None if residual_trivial else compile_tree(self.store, plan.residual)
-        combiner = None
-        if aggregate is not None:
-            grouping = _grouping or resolve_grouping(self.store, aggregate, t_start, t_stop)
-            combiner = CombinerIterator(grouping, prog=prog, backend=self.kernel_backend)
-
-        def _rows(blk) -> int:
-            # Matched-row count drives the adaptive batcher: for aggregate
-            # blocks that is the rows combined, not the groups shipped.
-            return getattr(blk, "matched", blk.n)
-
-        if not batched:
-            n = 0
-            for blk in self._execute_range(plan, t_start, t_stop, prog=prog, combiner=combiner):
-                n += _rows(blk)
-                yield blk
-            if stats is not None:
-                stats.batches = 1
-                stats.rows += n
-            return
-
-        # Alg 2 drive loop. b0 from the per-table historical hit rate.
-        batcher = AdaptiveBatcher(
-            t_start=t_start, t_stop=t_stop, b0=self.hit_rates.initial_b(DEFAULT_K0)
+        own so value tables are not rebuilt). Implemented over HostQueryRun
+        (one adaptive batch per step) — the serve plane drives the run
+        directly to interleave many sessions."""
+        run = HostQueryRun(
+            self, t_start, t_stop, tree,
+            use_index=use_index, batched=batched, stats=stats,
+            aggregate=aggregate, _grouping=_grouping,
         )
-        while not batcher.done:
-            lo, hi = batcher.next_range()
-            t_begin = time.perf_counter()
-            rows = 0
-            for blk in self._execute_range(plan, int(lo), int(hi), prog=prog, combiner=combiner):
-                rows += _rows(blk)
-                yield blk
-            runtime = time.perf_counter() - t_begin
-            batcher.update(runtime, rows)
-            self.hit_rates.observe(rows, hi - lo + 1)
-            if stats is not None:
-                stats.batches += 1
-                stats.rows += rows
-                stats.batch_log.append((lo, hi, runtime, rows))
+        yield from run.stream()
 
     def aggregate(
         self,
@@ -268,3 +242,129 @@ class QueryProcessor:
         if scheme == "combine_scan" and kw.get("aggregate") is None:
             raise ValueError("combine_scan scheme requires aggregate=AggregateSpec(...)")
         return self.execute(t_start, t_stop, tree, **flags, **kw)
+
+
+class HostQueryRun:
+    """QueryProcessor.execute, reified: one planned host query stepped one
+    adaptive batch at a time — the host twin of dist_query.QueryRun.
+
+    The serve plane's scheduler drives host-path sessions through this
+    exactly like distributed ones (fair per-batch interleaving), which is
+    what makes the host path usable as the live oracle for concurrent
+    dist sessions. Per-run state (plan, compiled residual program,
+    combiner, batcher, stats) is all local, so any number of runs against
+    one QueryProcessor step concurrently; the shared HitRateTracker is
+    the only cross-run state and is thread-safe."""
+
+    def __init__(
+        self,
+        qp: QueryProcessor,
+        t_start: int,
+        t_stop: int,
+        tree: Optional[Node] = None,
+        use_index: bool = True,
+        batched: bool = True,
+        stats: Optional[QueryStats] = None,
+        aggregate: Optional[AggregateSpec] = None,
+        _grouping=None,
+    ):
+        self.qp = qp
+        self.t_start = t_start
+        self.t_stop = t_stop
+        self.stats = stats
+        store = qp.store
+        self.plan = plan_query(store, tree, t_start, t_stop, w=qp.w, use_index=use_index)
+        if stats is not None:
+            stats.plan = self.plan
+        # Provably empty (zero-density index condition): no scans, no
+        # batching loop — the whole time range is answered from the
+        # aggregate table alone.
+        self._empty = self.plan.mode == "empty"
+        residual_trivial = (
+            isinstance(self.plan.residual, TrueNode) or self.plan.residual is None
+        )
+        self.prog = None if residual_trivial else compile_tree(store, self.plan.residual)
+        self.combiner = None
+        if aggregate is not None:
+            grouping = _grouping or resolve_grouping(store, aggregate, t_start, t_stop)
+            self.combiner = CombinerIterator(
+                grouping, prog=self.prog, backend=qp.kernel_backend
+            )
+        self._single_done = False
+        if batched and not self._empty:
+            # Alg 2 drive loop. b0 from the per-table historical hit rate.
+            self.batcher: Optional[AdaptiveBatcher] = AdaptiveBatcher(
+                t_start=t_start, t_stop=t_stop, b0=qp.hit_rates.initial_b(DEFAULT_K0)
+            )
+        else:
+            self.batcher = None
+
+    @property
+    def done(self) -> bool:
+        if self._empty:
+            return True
+        if self.batcher is None:
+            return self._single_done
+        return self.batcher.done
+
+    def stream(self):
+        """Lazily yield the run's blocks to completion — execute()'s
+        form. The unbatched schemes run the whole range as ONE batch, so
+        they stream block-by-block as _execute_range produces them (the
+        first row must not wait for the last — the paper's Table I
+        metric is measured around this iterator); batched schemes yield
+        per completed adaptive batch, which Alg-1 keeps small. The serve
+        plane deliberately uses step() instead: one materialized batch
+        is its bounded unit of device work."""
+        while not self.done:
+            if self.batcher is None:
+                lo, hi = float(self.t_start), float(self.t_stop)
+                t_begin = time.perf_counter()
+                rows = 0
+                for blk in self.qp._execute_range(
+                    self.plan, int(lo), int(hi), prog=self.prog,
+                    combiner=self.combiner,
+                ):
+                    rows += getattr(blk, "matched", blk.n)
+                    yield blk
+                self._single_done = True
+                if self.stats is not None:
+                    self.stats.batches += 1
+                    self.stats.rows += rows
+                    self.stats.batch_log.append(
+                        (lo, hi, time.perf_counter() - t_begin, rows)
+                    )
+                return
+            hb = self.step()
+            if hb is not None:
+                yield from hb.blocks
+
+    def step(self) -> Optional[HostBatch]:
+        """Execute the next adaptive batch and return its HostBatch; None
+        once the run is done. The matched-row count drives the adaptive
+        batcher: for aggregate blocks that is the rows combined, not the
+        groups shipped."""
+        if self.done:
+            return None
+        if self.batcher is None:
+            lo, hi = float(self.t_start), float(self.t_stop)
+        else:
+            lo, hi = self.batcher.next_range()
+        t_begin = time.perf_counter()
+        blocks = list(
+            self.qp._execute_range(
+                self.plan, int(lo), int(hi), prog=self.prog, combiner=self.combiner
+            )
+        )
+        runtime = time.perf_counter() - t_begin
+        rows = sum(getattr(b, "matched", b.n) for b in blocks)
+        if self.batcher is None:
+            self._single_done = True
+        else:
+            self.batcher.update(runtime, rows)
+            self.qp.hit_rates.observe(rows, hi - lo + 1)
+        if self.stats is not None:
+            self.stats.batches += 1
+            self.stats.rows += rows
+            self.stats.batch_log.append((lo, hi, runtime, rows))
+        return HostBatch(float(lo), float(hi), blocks, runtime, rows)

@@ -1,0 +1,124 @@
+"""Background compaction, off the query path.
+
+Major compaction is the only point where LSM runs fold into the base
+(PR 4 made publish() a pure snapshot), and until now nothing scheduled it
+besides ingest-tripped thresholds — the ROADMAP follow-up this module
+closes. The `BackgroundCompactor` drives `DistIngestPlane.compact()` from
+a maintenance thread, under two hard rules:
+
+  1. NEVER while a session batch is in flight or runnable work is queued
+     — it takes the service device lock non-blocking and re-checks the
+     scheduler under it, so a query always wins the race;
+  2. only when the plane actually has unfolded state
+     (`plane.has_unfolded()` — exact from the host fill mirrors, free).
+
+Folds are attributed in `plane.telemetry()["fold_events"]["background"]`;
+the query path never appears in fold_events at all (reads cannot fold by
+construction), which is what the CI smoke and the concurrency benchmark
+assert. Queries stay exact either way — the fold only moves rows between
+levels (tests/test_serve_db.py: an in-flight session's pinned snapshot is
+untouched by a concurrent fold, because compaction programs never donate
+published buffers).
+
+A major compaction costs SECONDS of device time at scale, and it holds
+the device for its whole duration (not preemptible), so fold TIMING is
+everything. Two-mode hysteresis:
+
+  urgent   run-slot debt (`plane.fold_debt()`) reached `min_debt`: fold
+           at the next momentary idle gap, before ingest exhausts the
+           slots and trips a BLOCKING major in some writer's flush (and
+           stalls publishes behind the plane lock);
+  drain    any unfolded state at all, but only after the serve plane has
+           been continuously idle for `idle_grace_s` — a live feed
+           constantly re-dirties the memtable, and folding every tiny
+           delta would park multi-second majors in front of the very
+           next query.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Optional
+
+
+class BackgroundCompactor:
+    """Maintenance thread: fold the plane's unfolded runs whenever the
+    serve plane is idle (see module docstring for the urgent/drain
+    hysteresis). `folds` counts completed compact() calls that actually
+    folded something."""
+
+    def __init__(
+        self,
+        plane,
+        service=None,
+        interval: float = 0.02,
+        min_debt: int = 2,
+        idle_grace_s: float = 0.25,
+    ):
+        self.plane = plane
+        self.service = service  # None: free-running (no query plane to yield to)
+        self.interval = float(interval)
+        self.min_debt = int(min_debt)
+        self.idle_grace_s = float(idle_grace_s)
+        self.folds = 0
+        self.passes = 0
+        self.skipped_busy = 0
+        self._last_busy = time.perf_counter()
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    def start(self) -> "BackgroundCompactor":
+        if self._thread is None:
+            self._thread = threading.Thread(
+                target=self._loop, name="serve-db-compactor", daemon=True
+            )
+            self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    # ------------------------------------------------------------ internals
+    def _idle_fold(self) -> None:
+        """One tick: fold iff the serve plane is quiescent RIGHT NOW and
+        the urgent/drain hysteresis says the fold is worth its stall."""
+        svc = self.service
+        if svc is not None and svc.busy():
+            self._last_busy = time.perf_counter()
+        if not self.plane.has_unfolded():
+            return
+        urgent = self.plane.fold_debt() >= self.min_debt
+        idle_for = time.perf_counter() - self._last_busy
+        if not urgent and idle_for < self.idle_grace_s:
+            return
+        if svc is None:
+            passes = self.plane.compact(source="background")
+            if passes:
+                self.folds += 1
+                self.passes += passes
+            return
+        if svc.busy():
+            self.skipped_busy += 1
+            return
+        # Non-blocking: if a session batch grabbed the device between the
+        # busy() check and here, the query wins and we try next tick.
+        if not svc._device_lock.acquire(blocking=False):
+            self.skipped_busy += 1
+            return
+        try:
+            if svc.busy():  # re-check under the lock (submit raced us)
+                self.skipped_busy += 1
+                return
+            passes = self.plane.compact(source="background")
+            if passes:
+                self.folds += 1
+                self.passes += passes
+        finally:
+            svc._device_lock.release()
+
+    def _loop(self) -> None:
+        while not self._stop.wait(self.interval):
+            self._idle_fold()

@@ -1,0 +1,154 @@
+"""Fair per-batch interleaving of many sessions' queries on one device.
+
+The unit of scheduling is ONE adaptive batch (core/dist_query.QueryRun /
+core/query.HostQueryRun step): the paper's Alg-2 already decomposes a
+query into latency-bounded batches, so fairness costs nothing extra —
+the scheduler just decides WHOSE batch runs next under the device lock.
+
+Two policies compose:
+
+  pick      time-to-first-result first: a query that has not delivered
+            its first batch preempts every continuing stream (the paper's
+            responsiveness metric is time to the INITIAL result set);
+            within each class, FIFO round-robin across sessions.
+  quantum   how many consecutive batches one turn may run before the
+            device goes back to the queue — governed by the shared Alg-1
+            law (core/batching.py::alg1_next_k): turns that run hot
+            shrink toward one batch (interactive fairness), fast turns
+            grow geometrically (amortize dispatch overhead when queues
+            are short). This is the same admission policy generalized
+            from core/batching.py (range batches) and serving/batcher.py
+            (LM admission rounds).
+
+The scheduler is pure bookkeeping — it owns no threads and runs no device
+programs; the QueryService dispatcher drains it.
+"""
+from __future__ import annotations
+
+import threading
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Optional
+
+from ..core.batching import alg1_next_k
+from .session import QuerySession, StreamingQuery
+
+
+@dataclass
+class TurnQuantum:
+    """Alg-1 turn sizing: k = batches per turn, adapted so one turn's
+    wall time stays inside [t_min, t_max] seconds."""
+
+    k0: float = 1.0
+    c: float = 1.5
+    t_min: float = 0.02
+    t_max: float = 0.25
+    max_batches: int = 8
+
+    def __post_init__(self):
+        self._k = float(self.k0)
+
+    @property
+    def k(self) -> float:
+        return self._k
+
+    def budget(self) -> int:
+        return max(1, min(int(round(self._k)), self.max_batches))
+
+    def update(self, runtime: float, batches: int) -> None:
+        k_next = alg1_next_k(self._k, runtime, batches, self.c, self.t_max, self.t_min)
+        self._k = float(min(max(k_next, 1.0), self.max_batches))
+
+
+@dataclass
+class QueryEntry:
+    """One submitted query's place in the scheduler. `run` (a QueryRun or
+    HostQueryRun) is built lazily by the dispatcher under the device lock
+    — planning reads densities off the mesh, which is device work, and it
+    counts toward the session's time-to-first-result like any other
+    serving cost. ready_at: when this entry last became runnable (queue
+    wait accrues from here to batch execution)."""
+
+    session: QuerySession
+    stream: StreamingQuery
+    stats: object = None
+    run: object = None
+    ready_at: float = 0.0
+    seq: int = 0
+    kw: dict = field(default_factory=dict)
+
+
+class FairScheduler:
+    """Thread-safe runnable queue with TTFR priority (see module
+    docstring). has_pending()/ttfr_waiting() are the coordination points
+    for the background compactor and the turn preemption check."""
+
+    def __init__(self, quantum: Optional[TurnQuantum] = None):
+        self.quantum = quantum or TurnQuantum()
+        self._fresh: deque = deque()  # no first batch delivered yet
+        self._cont: deque = deque()  # continuing streams, round-robin
+        self._closed = False
+        self._cv = threading.Condition()
+
+    # ------------------------------------------------------- enqueue side
+    def submit(self, entry: QueryEntry) -> None:
+        with self._cv:
+            if self._closed:
+                raise RuntimeError("QueryService closed")
+            self._fresh.append(entry)
+            self._cv.notify()
+
+    def requeue(self, entry: QueryEntry) -> None:
+        """Put a not-yet-done query back after its turn (it has delivered
+        at least one batch by then, so it continues in the fair ring)."""
+        with self._cv:
+            if self._closed:
+                raise RuntimeError("QueryService closed")
+            self._cont.append(entry)
+            self._cv.notify()
+
+    def close(self) -> list:
+        """Reject all future submits (a client racing service shutdown
+        gets a RuntimeError instead of a stream that never terminates)
+        and hand back everything still queued so the service can error
+        the streams out."""
+        with self._cv:
+            self._closed = True
+            out = list(self._fresh) + list(self._cont)
+            self._fresh.clear()
+            self._cont.clear()
+            return out
+
+    # ------------------------------------------------------ dispatcher side
+    def pop_turn(
+        self, timeout: Optional[float] = None, on_pop=None
+    ) -> Optional[QueryEntry]:
+        """Next query to serve, or None on timeout. Fresh queries (no
+        first result yet) always preempt continuing streams. `on_pop`
+        runs under the condition variable BEFORE the entry leaves the
+        queue — the service marks itself in-flight there, so the
+        compactor can never observe a popped-but-unstarted turn as
+        idle."""
+        with self._cv:
+            if not self._fresh and not self._cont:
+                self._cv.wait(timeout=timeout)
+            entry = None
+            if self._fresh:
+                entry = self._fresh.popleft()
+            elif self._cont:
+                entry = self._cont.popleft()
+            if entry is not None and on_pop is not None:
+                on_pop()
+            return entry
+
+    def has_pending(self) -> bool:
+        with self._cv:
+            return bool(self._fresh or self._cont)
+
+    def ttfr_waiting(self) -> bool:
+        """True when some query is still waiting for its FIRST batch —
+        the dispatcher cuts the current turn short then (preemption at
+        batch granularity keeps worst-case TTFR ~ one batch per waiting
+        session, which is what bounds the no-starvation criterion)."""
+        with self._cv:
+            return bool(self._fresh)

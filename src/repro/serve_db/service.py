@@ -1,0 +1,303 @@
+"""QueryService — N concurrent client sessions over ONE shared mesh plane.
+
+The paper's query experiments put plural clients against tablet servers
+that are simultaneously ingesting; the D4M follow-up (arXiv:1406.4923)
+scales by multiplying client *processes* against shared servers. This
+module is that serving layer for the repro: one `QueryService` owns one
+`DistIngestPlane` + `DistQueryProcessor` (and a host `QueryProcessor`
+twin for oracle sessions) and serves any number of `QuerySession`s, each
+streaming result batches as they complete.
+
+Architecture (one box per thread):
+
+    client threads        dispatcher thread          compactor thread
+    ──────────────        ─────────────────          ────────────────
+    session.submit ─────▶ FairScheduler.pop_turn
+    stream.results ◀───── step one adaptive batch    idle? plane.compact
+      (queue.get)         under _device_lock ◀─────── (non-blocking try)
+                          deliver ResultBatch
+
+Device work is serialized by `_device_lock` (one host process drives the
+mesh; concurrency is about FAIRNESS of interleaving, not parallel
+dispatch — same regime as the paper's single-cluster experiments). The
+scheduler picks whose batch runs next (TTFR priority + round-robin,
+scheduler.py); the Alg-1 turn quantum bounds how long any session can
+hold the device. Background compaction (compactor.py) runs ONLY when no
+batch is in flight and none is queued — the query path never folds,
+which `plane.telemetry()["fold_events"]` proves.
+
+Every query run is pinned to the publish() snapshot it started on
+(core/dist_query.QueryRun), so a fold or a concurrent publish can never
+change an in-flight session's results — sessions see a consistent LSM
+state per query, and fresh ingest becomes visible at the next query.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+import time
+from typing import Dict, Optional
+
+from ..core.dist_query import DistQueryProcessor, QueryRun
+from ..core.query import HostBatch, HostQueryRun, QueryProcessor
+from .compactor import BackgroundCompactor
+from .scheduler import FairScheduler, QueryEntry, TurnQuantum
+from .session import QuerySession, ResultBatch, StreamingQuery
+
+SCHEME_FLAGS = {
+    "scan": dict(use_index=False, batched=False),
+    "batched_scan": dict(use_index=False, batched=True),
+    "index": dict(use_index=True, batched=False),
+    "batched_index": dict(use_index=True, batched=True),
+}
+
+
+class _OneShotRun:
+    """Adapter: a single-dispatch query (aggregate / density) as a
+    one-step run, so the scheduler treats it like any other turn."""
+
+    def __init__(self, fn):
+        self._fn = fn
+        self._done = False
+
+    @property
+    def done(self) -> bool:
+        return self._done
+
+    def step(self):
+        out = self._fn()
+        self._done = True
+        return out
+
+
+class QueryService:
+    """See module docstring. `start=True` (default) launches the
+    dispatcher and the background compactor immediately; use as a context
+    manager to guarantee shutdown in tests/benchmarks."""
+
+    def __init__(
+        self,
+        store,
+        plane,
+        top_k: int = 128,
+        w: float = 10.0,
+        quantum: Optional[TurnQuantum] = None,
+        compaction_interval: float = 0.02,
+        compactor: bool = True,
+        start: bool = True,
+    ):
+        self.store = store
+        self.plane = plane
+        self.proc = DistQueryProcessor(store, plane=plane, top_k=top_k, w=w)
+        self.host_proc = QueryProcessor(store, w=w)
+        self.scheduler = FairScheduler(quantum)
+        self._device_lock = threading.Lock()
+        self._stop = threading.Event()
+        self._in_flight = 0
+        self._sessions: Dict[int, QuerySession] = {}
+        self._next_sid = itertools.count()
+        self._dispatcher: Optional[threading.Thread] = None
+        self.compactor = (
+            BackgroundCompactor(plane, self, interval=compaction_interval)
+            if compactor
+            else None
+        )
+        if start:
+            self.start()
+
+    # ------------------------------------------------------------ lifecycle
+    def start(self) -> "QueryService":
+        if self.scheduler._closed:
+            raise RuntimeError("QueryService cannot be restarted after close()")
+        if self._dispatcher is None:
+            self._stop.clear()
+            self._dispatcher = threading.Thread(
+                target=self._dispatch_loop, name="serve-db-dispatcher", daemon=True
+            )
+            self._dispatcher.start()
+            if self.compactor is not None:
+                self.compactor.start()
+        return self
+
+    def close(self) -> None:
+        """Drain nothing, stop everything: pending queries error out on
+        their streams; sessions' final telemetry lands in the plane."""
+        self._stop.set()
+        if self._dispatcher is not None:
+            self._dispatcher.join()
+            self._dispatcher = None
+        if self.compactor is not None:
+            self.compactor.stop()
+        # Closing the scheduler rejects any submit that raced past
+        # _enqueue's liveness check, and hands back everything queued —
+        # no stream is ever left hanging without a terminal item.
+        for entry in self.scheduler.close():
+            entry.stream._finish(error=RuntimeError("QueryService closed"))
+        for s in list(self._sessions.values()):
+            s.close()
+
+    def __enter__(self) -> "QueryService":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # ------------------------------------------------------------- sessions
+    def session(self, name: str = "", backend: str = "dist") -> QuerySession:
+        sid = next(self._next_sid)
+        s = QuerySession(self, sid, name=name, backend=backend)
+        self._sessions[sid] = s
+        return s
+
+    def busy(self) -> bool:
+        """True while any session batch is in flight or runnable — the
+        compactor's keep-out signal. The pop-side increments _in_flight
+        under the scheduler's condition variable, so there is no instant
+        where a popped-but-unstarted turn reads as idle."""
+        return self._in_flight > 0 or self.scheduler.has_pending()
+
+    def wait_idle(self, timeout: float = 60.0) -> bool:
+        """Spin until no work is queued or in flight (benchmark epilogue:
+        lets the background compactor take the device)."""
+        deadline = time.perf_counter() + timeout
+        while self.busy():
+            if time.perf_counter() > deadline:
+                return False
+            time.sleep(0.001)
+        return True
+
+    # ------------------------------------------------------------- internals
+    def _enqueue(self, session: QuerySession, sq: StreamingQuery, stats=None) -> None:
+        if self._dispatcher is None:
+            raise RuntimeError("QueryService is not running (start() it first)")
+        self.scheduler.submit(
+            QueryEntry(
+                session=session, stream=sq, stats=stats,
+                ready_at=time.perf_counter(),
+            )
+        )
+
+    def _report_session(self, session: QuerySession) -> None:
+        self.plane.record_session(session.session_id, session.telemetry())
+
+    def _forget_session(self, session: QuerySession) -> None:
+        """Called by QuerySession.close(): the service drops its handle so
+        long-lived deployments (one session per client connection) don't
+        accumulate dead sessions."""
+        self._sessions.pop(session.session_id, None)
+
+    def _build_run(self, entry: QueryEntry):
+        sq = entry.stream
+        backend = entry.session.backend
+        if sq.scheme == "aggregate":
+            spec, tree = sq.tree  # (AggregateSpec, tree) packed by submit
+
+            def agg():
+                if backend == "host":
+                    return self.host_proc.aggregate(
+                        spec, sq.t_start, sq.t_stop, tree, stats=entry.stats
+                    )
+                return self.proc.aggregate_range(
+                    spec, tree, sq.t_start, sq.t_stop, stats=entry.stats
+                )
+
+            def fn():
+                res = agg()
+                return ResultBatch(
+                    seq=0, lo=sq.t_start, hi=sq.t_stop,
+                    count=int(res.counts.sum()), blocks=[res],
+                )
+
+            return _OneShotRun(fn)
+        if sq.scheme == "density":
+            field_, value = sq.tree  # (field, value) packed by submit
+            src = self.store if backend == "host" else self.proc
+
+            def fn():
+                d = src.agg_count(field_, value, sq.t_start, sq.t_stop)
+                return ResultBatch(
+                    seq=0, lo=sq.t_start, hi=sq.t_stop, count=int(d)
+                )
+
+            return _OneShotRun(fn)
+        flags = SCHEME_FLAGS[sq.scheme]
+        if backend == "host":
+            return HostQueryRun(
+                self.host_proc, sq.t_start, sq.t_stop, sq.tree,
+                stats=entry.stats, **flags,
+            )
+        return QueryRun(
+            self.proc, sq.tree, sq.t_start, sq.t_stop,
+            stats=entry.stats, **flags,
+        )
+
+    @staticmethod
+    def _as_result(entry: QueryEntry, blk, wait_s: float, device_s: float) -> ResultBatch:
+        if isinstance(blk, ResultBatch):  # one-shot runs build their own
+            blk.wait_s, blk.device_s = wait_s, device_s
+            return blk
+        if isinstance(blk, HostBatch):
+            return ResultBatch(
+                seq=entry.seq, lo=blk.lo, hi=blk.hi, count=blk.rows,
+                blocks=blk.blocks, device_s=device_s, wait_s=wait_s,
+            )
+        return ResultBatch(  # DistBatch
+            seq=entry.seq, lo=blk.lo, hi=blk.hi, count=blk.count,
+            ts=blk.ts, cols=blk.cols, device_s=device_s, wait_s=wait_s,
+        )
+
+    def _run_turn(self, entry: QueryEntry) -> None:
+        t0 = time.perf_counter()
+        # Queue wait = runnable -> device acquired. Run construction and
+        # batch execution below are SERVING cost (they count toward TTFR
+        # but not toward wait_s — the contention signal must not absorb
+        # planning or compile time).
+        wait_s = t0 - entry.ready_at
+        if entry.run is None:
+            # Built here, on the dispatcher, under the device lock:
+            # planning reads densities off the mesh (device work), and it
+            # counts toward this query's time-to-first-result like every
+            # other serving cost.
+            entry.run = self._build_run(entry)
+            if entry.run.done:  # provably-empty plan: zero batches
+                entry.stream._finish()
+                self._report_session(entry.session)
+                return
+        quantum = self.scheduler.quantum
+        budget = quantum.budget()
+        served = 0
+        while served < budget and not entry.run.done:
+            start = time.perf_counter()
+            blk = entry.run.step()
+            end = time.perf_counter()
+            if blk is None:
+                break
+            entry.stream._deliver(self._as_result(entry, blk, wait_s, end - start))
+            wait_s = 0.0  # later batches of this turn never waited
+            entry.seq += 1
+            served += 1
+            if self.scheduler.ttfr_waiting():
+                break  # someone's FIRST result is pending: yield the device
+        quantum.update(time.perf_counter() - t0, served)
+        if entry.run.done:
+            entry.stream._finish()
+            self._report_session(entry.session)
+        else:
+            entry.ready_at = time.perf_counter()  # runnable again from now
+            self.scheduler.requeue(entry)
+
+    def _dispatch_loop(self) -> None:
+        def mark():
+            self._in_flight += 1
+
+        while not self._stop.is_set():
+            entry = self.scheduler.pop_turn(timeout=0.02, on_pop=mark)
+            if entry is None:
+                continue
+            try:
+                with self._device_lock:
+                    self._run_turn(entry)
+            except BaseException as e:  # deliver, don't kill the dispatcher
+                entry.stream._finish(error=e)
+            finally:
+                self._in_flight -= 1

@@ -3,17 +3,20 @@ scheduling — the beyond-paper application promised in DESIGN.md.
 
 Mapping: a query's time range -> the serving request queue; batch result
 count k_i -> requests admitted per scheduling round; batch runtime T_i ->
-the round's wall time (prefill + decode iterations). The update law is
-IDENTICAL to core/batching.py (k'=ck, clamp via rate so the estimated
+the round's wall time (prefill + decode iterations). The update law IS
+core/batching.py's `alg1_next_k` (k'=ck, clamp via rate so the estimated
 round time stays within [T_min, T_max]) — keeping admission latency-aware:
 when rounds run hot (slow model / long prompts) admission shrinks toward
 interactive latencies; when rounds are fast it grows geometrically to
-throughput-optimal batches.
+throughput-optimal batches. The database serve plane's scheduler
+(repro.serve_db.scheduler) shares the same law for its turn quantum.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 from typing import List
+
+from ..core.batching import alg1_next_k
 
 
 @dataclass
@@ -36,16 +39,7 @@ class AdaptiveRequestBatcher:
         """Alg 1 UPDATE with (T_i, r_i) = (round wall time, requests
         served this round)."""
         self.history.append((runtime, served))
-        t = max(runtime, 1e-9)
-        if served > 0:
-            k_next = self.c * self._k
-            t_hat = k_next * (t / served)
-            if t_hat > self.t_max:
-                k_next = self.t_max * (served / t)
-            elif t_hat < self.t_min:
-                k_next = self.t_min * (served / t)
-        else:
-            k_next = self._k
+        k_next = alg1_next_k(self._k, runtime, served, self.c, self.t_max, self.t_min)
         self._k = float(min(max(k_next, 1.0), self.max_batch))
 
     @property
