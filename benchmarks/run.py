@@ -16,6 +16,8 @@ the paper's qualitative claims. Tables map to the paper as:
 from __future__ import annotations
 
 import argparse
+import json
+import pathlib
 import sys
 
 
@@ -60,6 +62,15 @@ def main() -> None:
     r5 = bench_query_concurrency.run(quick=args.quick)
     lines += bench_query_concurrency.emit_csv(r5)
     failures += [f"concurrency: {f}" for f in bench_query_concurrency.validate(r5)]
+    # Canonical checked-in artifact: rest + live-ingest TTFR p50/p99 per
+    # session count, regenerated on every harness run so re-anchors can
+    # track the perf trajectory (docs/benchmarks.md).
+    artifact = pathlib.Path(__file__).resolve().parent / "BENCH_query_concurrency.json"
+    artifact.write_text(
+        json.dumps(bench_query_concurrency.emit_json(r5), indent=2, sort_keys=True)
+        + "\n"
+    )
+    print(f"# wrote {artifact}", file=sys.stderr, flush=True)
 
     print("# kernels ...", file=sys.stderr, flush=True)
     r4 = bench_kernels.run()

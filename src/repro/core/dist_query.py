@@ -140,6 +140,13 @@ class DistStore:
     ag_mem_c: Optional[jax.Array] = None
     ag_mem_n: Optional[jax.Array] = None
     agg_bucket_s: Optional[int] = None
+    # Level-generation tags at publish time ({"mem","runs","base"}):
+    # which LSM levels this snapshot's buffers came from. Two snapshots
+    # sharing a generation for a level ALIAS that level's arrays (the
+    # plane's publish reuses untouched buffers across compact_step
+    # increments instead of re-copying) — tests assert the identity.
+    # None for hand-built / base-only stores.
+    gens: Optional[Dict[str, int]] = None
     # Per-snapshot memo for planner density reads (_agg_count_on): a
     # published snapshot is immutable, so a density within it never goes
     # stale; the memo dies with the snapshot at the next publish flip.

@@ -1,3 +1,9 @@
-from .ops import MAX_VMEM_KEYS, merge_sorted_device, merge_sorted_runs  # noqa: F401
+from .ops import (  # noqa: F401
+    MAX_VMEM_KEYS,
+    merge_pair_device,
+    merge_sorted_device,
+    merge_sorted_runs,
+    merge_window_keys,
+)
 from .ref import merge_ranks_keys, merge_ranks_ref  # noqa: F401
 from .merge_runs import merge_ranks_pallas  # noqa: F401

@@ -104,6 +104,51 @@ def merge_sorted_runs(
     return out_keys[:n_total], out_cols[:n_total]
 
 
+def merge_pair_device(a_keys, a_cols, b_keys, b_cols, backend: str = "auto"):
+    """Resumable 2-way merge: fold ONE sorted run into a base, traceable
+    (jit / shard_map safe) — the entry point of incremental major
+    compaction (DistIngestPlane.compact_step folds one run slot per call,
+    so the preemption unit is one of these merges instead of the whole
+    k-way fold).
+
+    a_keys (Ca,), b_keys (Cb,): each sorted ascending with the dtype-max
+    sentinel past the live fill (callers mask stale slots first); a_cols
+    (Ca, W) / b_cols (Cb, W) travel with their keys. Returns the merged
+    (Ca+Cb,) keys and (Ca+Cb, W) cols — all real keys first (stable:
+    a-side wins ties), sentinels as a contiguous tail. Backend policy is
+    merge_sorted_device's (jnp reference on CPU, Pallas ranks on TPU)."""
+    ca, cb = a_keys.shape[0], b_keys.shape[0]
+    w = a_cols.shape[-1]
+    l2 = _pow2(max(ca, cb))
+    sentinel = jnp.asarray(jnp.iinfo(a_keys.dtype).max, a_keys.dtype)
+    pk = jnp.full((2, l2), sentinel, a_keys.dtype)
+    pk = pk.at[0, :ca].set(a_keys).at[1, :cb].set(b_keys)
+    pc = jnp.zeros((2, l2, w), a_cols.dtype)
+    pc = pc.at[0, :ca].set(a_cols).at[1, :cb].set(b_cols)
+    mk, mc = merge_sorted_device(pk, pc, backend=backend)
+    return mk[: ca + cb], mc[: ca + cb]
+
+
+def merge_window_keys(keys, start: int, length: int):
+    """Windowed (rank-resumable) form of the k-way merge: output ranks
+    [start, start+length) only. keys (K, R) sorted ascending per row,
+    sentinel-padded. Concatenating consecutive windows reproduces the
+    full merged key sequence exactly (asserted in tests) — the
+    finer-than-one-run preemption granularity available if a single
+    base+run fold ever outgrows its stall budget. Ranks come from the
+    same computation both backends share, so the window content never
+    depends on backend."""
+    from .ref import merge_ranks_keys
+
+    ranks = merge_ranks_keys(keys).reshape(-1)
+    sentinel = jnp.asarray(jnp.iinfo(keys.dtype).max, keys.dtype)
+    in_win = (ranks >= start) & (ranks < start + length)
+    dest = jnp.where(in_win, ranks - start, jnp.int32(length))
+    return jnp.full((length,), sentinel, keys.dtype).at[dest].set(
+        keys.reshape(-1), mode="drop"
+    )
+
+
 def _device_lanes(run_keys):
     """Split device-tablet keys into the (hi, lo) int32 lane pair the Pallas
     rank kernel consumes. int32 keys (event tablets: non-negative rev_ts,

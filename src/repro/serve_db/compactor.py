@@ -20,9 +20,8 @@ levels (tests/test_serve_db.py: an in-flight session's pinned snapshot is
 untouched by a concurrent fold, because compaction programs never donate
 published buffers).
 
-A major compaction costs SECONDS of device time at scale, and it holds
-the device for its whole duration (not preemptible), so fold TIMING is
-everything. Two-mode hysteresis:
+A major compaction costs SECONDS of device time at scale, so fold TIMING
+is everything. Two-mode hysteresis decides WHEN folding starts:
 
   urgent   run-slot debt (`plane.fold_debt()`) reached `min_debt`: fold
            at the next momentary idle gap, before ingest exhausts the
@@ -33,6 +32,18 @@ everything. Two-mode hysteresis:
            constantly re-dirties the memtable, and folding every tiny
            delta would park multi-second majors in front of the very
            next query.
+
+Incremental mode (`incremental=True`, the default) decides how folding
+PROCEEDS once started: instead of one non-preemptible `compact()` that
+holds the device for the whole k-way fold, the compactor interleaves
+`plane.compact_step()` increments — one bounded 2-way merge (top run
+slot -> base, all families in lockstep) per device-lock hold — and
+re-checks the scheduler after EVERY increment. A query submitted mid-
+major preempts at the next increment boundary and reads the (fully
+consistent) partially-folded LSM, so the worst stall any session's first
+result can park behind is ONE increment, not one major. `increments` /
+`max_increment_s` instrument exactly that bound; the starvation-guard
+test and the CI smoke assert against them.
 """
 from __future__ import annotations
 
@@ -44,8 +55,11 @@ from typing import Optional
 class BackgroundCompactor:
     """Maintenance thread: fold the plane's unfolded runs whenever the
     serve plane is idle (see module docstring for the urgent/drain
-    hysteresis). `folds` counts completed compact() calls that actually
-    folded something."""
+    hysteresis and the incremental/preemptible fold mode). `folds`
+    counts completed drains that actually folded something; in
+    incremental mode `increments` counts the bounded compact_step calls
+    they decomposed into and `max_increment_s` the longest single
+    device-lock hold (the stall bound)."""
 
     def __init__(
         self,
@@ -54,15 +68,21 @@ class BackgroundCompactor:
         interval: float = 0.02,
         min_debt: int = 2,
         idle_grace_s: float = 0.25,
+        incremental: bool = True,
     ):
         self.plane = plane
         self.service = service  # None: free-running (no query plane to yield to)
         self.interval = float(interval)
         self.min_debt = int(min_debt)
         self.idle_grace_s = float(idle_grace_s)
+        self.incremental = bool(incremental)
         self.folds = 0
         self.passes = 0
+        self.increments = 0
+        self.max_increment_s = 0.0
+        self.preempted = 0  # increment loops cut short by a fresh query
         self.skipped_busy = 0
+        self._draining = False  # an incremental drain is mid-flight
         self._last_busy = time.perf_counter()
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
@@ -100,6 +120,9 @@ class BackgroundCompactor:
                 self.folds += 1
                 self.passes += passes
             return
+        if self.incremental:
+            self._incremental_drain(svc)
+            return
         if svc.busy():
             self.skipped_busy += 1
             return
@@ -118,6 +141,48 @@ class BackgroundCompactor:
                 self.passes += passes
         finally:
             svc._device_lock.release()
+
+    def _incremental_drain(self, svc) -> None:
+        """Interleave bounded compact_step increments with session turns:
+        the device lock is held for ONE increment at a time, and the
+        scheduler is re-checked before every increment, so a query
+        submitted mid-major preempts at the next increment boundary. The
+        drain resumes on later ticks — any prefix of increments leaves a
+        consistent LSM, an interrupted major is just lower fold debt."""
+        progressed = False
+        while not self._stop.is_set():
+            if svc.busy():
+                if progressed:
+                    self.preempted += 1  # a query cut this drain short
+                else:
+                    self.skipped_busy += 1
+                return
+            # Non-blocking: if a session batch grabbed the device between
+            # the busy() check and here, the query wins.
+            if not svc._device_lock.acquire(blocking=False):
+                self.skipped_busy += 1
+                return
+            try:
+                if svc.busy():  # re-check under the lock (submit raced us)
+                    self.skipped_busy += 1
+                    return
+                t0 = time.perf_counter()
+                ran = self.plane.compact_step(source="background")
+                dt = time.perf_counter() - t0
+            finally:
+                svc._device_lock.release()
+            if not ran:
+                break  # drained (or raced another folder): complete below
+            progressed = True
+            self._draining = True
+            self.increments += 1
+            self.passes += 1
+            self.max_increment_s = max(self.max_increment_s, dt)
+            if not self.plane.has_unfolded():
+                break  # this increment finished the drain
+        if self._draining and not self.plane.has_unfolded():
+            self._draining = False
+            self.folds += 1  # one completed (possibly multi-tick) drain
 
     def _loop(self) -> None:
         while not self._stop.wait(self.interval):

@@ -26,6 +26,7 @@ programs; the QueryService dispatcher drains it.
 from __future__ import annotations
 
 import threading
+import time
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Optional
@@ -89,6 +90,13 @@ class FairScheduler:
         self._cont: deque = deque()  # continuing streams, round-robin
         self._closed = False
         self._cv = threading.Condition()
+        # Per-turn instrumentation ring (starvation guard): the service
+        # logs every served turn here — `first` marks a session's
+        # first-result turn, whose `wait_s` is the stall the incremental
+        # compactor must bound (no first result may park behind more
+        # than ~one compaction increment). Bounded so a long-lived
+        # service never grows it without limit.
+        self.turn_log: deque = deque(maxlen=4096)
 
     # ------------------------------------------------------- enqueue side
     def submit(self, entry: QueryEntry) -> None:
@@ -140,6 +148,33 @@ class FairScheduler:
             if entry is not None and on_pop is not None:
                 on_pop()
             return entry
+
+    def log_turn(
+        self, session_id: int, seq: int, wait_s: float, batches: int, turn_s: float
+    ) -> None:
+        """Record one served turn (called by the service after every
+        turn, including zero-batch empty-plan turns). seq is the entry's
+        sequence number WHEN THE TURN STARTED: 0 marks a first-result
+        turn, the one the starvation guard bounds."""
+        with self._cv:
+            self.turn_log.append(
+                {
+                    "session": int(session_id),
+                    "first": seq == 0,
+                    "wait_s": float(wait_s),
+                    "batches": int(batches),
+                    "turn_s": float(turn_s),
+                    "t": time.perf_counter(),
+                }
+            )
+
+    def max_first_turn_wait(self) -> float:
+        """Worst queue wait of any first-result turn in the log — the
+        starvation-guard statistic (tests + the concurrency bench assert
+        it stays under the compaction increment bound)."""
+        with self._cv:
+            waits = [t["wait_s"] for t in self.turn_log if t["first"]]
+            return max(waits) if waits else 0.0
 
     def has_pending(self) -> bool:
         with self._cv:

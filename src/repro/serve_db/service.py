@@ -84,6 +84,7 @@ class QueryService:
         quantum: Optional[TurnQuantum] = None,
         compaction_interval: float = 0.02,
         compactor: bool = True,
+        incremental_compaction: bool = True,
         start: bool = True,
     ):
         self.store = store
@@ -98,7 +99,10 @@ class QueryService:
         self._next_sid = itertools.count()
         self._dispatcher: Optional[threading.Thread] = None
         self.compactor = (
-            BackgroundCompactor(plane, self, interval=compaction_interval)
+            BackgroundCompactor(
+                plane, self, interval=compaction_interval,
+                incremental=incremental_compaction,
+            )
             if compactor
             else None
         )
@@ -253,6 +257,10 @@ class QueryService:
         # but not toward wait_s — the contention signal must not absorb
         # planning or compile time).
         wait_s = t0 - entry.ready_at
+        # Captured before serving mutates them: the scheduler's turn log
+        # keys the starvation guard on first-result turns (seq0 == 0)
+        # and their queue wait — the stall incremental compaction bounds.
+        seq0, wait0 = entry.seq, wait_s
         if entry.run is None:
             # Built here, on the dispatcher, under the device lock:
             # planning reads densities off the mesh (device work), and it
@@ -262,6 +270,10 @@ class QueryService:
             if entry.run.done:  # provably-empty plan: zero batches
                 entry.stream._finish()
                 self._report_session(entry.session)
+                self.scheduler.log_turn(
+                    entry.session.session_id, seq0, wait0, 0,
+                    time.perf_counter() - t0,
+                )
                 return
         quantum = self.scheduler.quantum
         budget = quantum.budget()
@@ -279,6 +291,10 @@ class QueryService:
             if self.scheduler.ttfr_waiting():
                 break  # someone's FIRST result is pending: yield the device
         quantum.update(time.perf_counter() - t0, served)
+        self.scheduler.log_turn(
+            entry.session.session_id, seq0, wait0, served,
+            time.perf_counter() - t0,
+        )
         if entry.run.done:
             entry.stream._finish()
             self._report_session(entry.session)

