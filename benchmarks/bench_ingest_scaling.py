@@ -164,6 +164,7 @@ def device_sweep(
             plane.publish()
             base_tel = plane.telemetry()
             plane.blocked_seconds = 0.0
+            plane._lock.reset()  # occupancy columns cover the timed window only
             chunk = 1024
             t0 = time.perf_counter()
             for off in range(0, rows_per_worker, chunk):
@@ -178,6 +179,7 @@ def device_sweep(
             dt = time.perf_counter() - t0
             tel = plane.telemetry()
             total = n_w * rows_per_worker
+            occ = plane._lock.snapshot()
             out.append(
                 {
                     "workers": n_w,
@@ -189,6 +191,13 @@ def device_sweep(
                     "major_compactions": int((tel["major"] - base_tel["major"]).sum()),
                     "overflow": int(tel["overflow"].sum()),
                     "device_rows": int((tel["rows"] - base_tel["rows"]).sum()),
+                    # Plane-lock occupancy over the timed window: how the
+                    # serialization point's held time splits between raw
+                    # appends and the fold work backpressure forced.
+                    "lock_held_s": float(occ["total_held_s"]),
+                    "lock_owner_s": {
+                        k: round(float(v), 6) for k, v in occ["by_owner_s"].items()
+                    },
                 }
             )
     return out
@@ -322,7 +331,7 @@ def seal_latency_probe(mem_rows: int = 65536, reps: int = 5) -> Dict:
     def timed_publishes() -> float:
         out = []
         for _ in range(reps):
-            with plane._lock:
+            with plane._lock.hold("bookkeeping"):
                 plane._dirty = True  # force a re-seal of the same state
             t0 = time.perf_counter()
             ds = plane.publish()
@@ -515,6 +524,61 @@ def emit_csv(res: Dict) -> List[str]:
             f"var_ratio={s.variance_ratio:.3f};blocked={s.blocked_frac:.3f};workers={s.workers}"
         )
     return lines
+
+
+def emit_json(res: Dict) -> Dict:
+    """Canonical machine-readable artifact (BENCH_ingest_scaling.json,
+    written via benchmarks/common.write_artifact and checked in): the
+    measured device-sweep cells with their plane-lock occupancy
+    breakdown, publish/seal latencies, and the calibrated-simulation
+    summary rows — the ingest-path perf trajectory re-anchors track."""
+
+    def sim_row(s) -> Dict:
+        return {
+            "workers": s.workers,
+            "servers": s.servers,
+            "throughput_rows_s": round(s.throughput, 1),
+            "offered_rows_s": round(s.offered, 1),
+            "variance_ratio": round(s.variance_ratio, 4),
+            "blocked_frac": round(s.blocked_frac, 4),
+        }
+
+    def dev_row(r: Dict) -> Dict:
+        return {
+            "workers": r["workers"],
+            "tablets": r["tablets"],
+            "rows": r["rows"],
+            "rows_per_s": round(r["rows_per_s"], 1),
+            "blocked_ms": round(r["blocked_s"] * 1e3, 2),
+            "minor_compactions": r["minor_compactions"],
+            "major_compactions": r["major_compactions"],
+            "lock_held_ms": round(r["lock_held_s"] * 1e3, 2),
+            "lock_owner_ms": {
+                k: round(v * 1e3, 2) for k, v in r["lock_owner_s"].items()
+            },
+        }
+
+    return {
+        "benchmark": "ingest_scaling",
+        "client_rows_per_s": round(res["client"]["rows_per_s"], 1),
+        "tablet_rows_per_s": round(res["tablet"]["rows_per_s"], 1),
+        "device_sweep": [dev_row(r) for r in res["device_sweep"]],
+        "publish_sweep": [
+            {
+                "base_rows": r["base_rows"],
+                "publish_us": round(r["publish_us"], 1),
+                "query_us": round(r["query_us"], 1),
+                "publish_majors": r["publish_majors"],
+                "publish_minors": r["publish_minors"],
+            }
+            for r in res["publish_sweep"]
+        ],
+        "seal_probe": {
+            k: (round(v, 2) if isinstance(v, float) else v)
+            for k, v in res["seal_probe"].items()
+        },
+        "fig4_regimes": [sim_row(s) for s in res["fig4"]],
+    }
 
 
 def validate(res: Dict) -> List[str]:

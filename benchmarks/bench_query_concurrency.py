@@ -279,6 +279,10 @@ def run(quick: bool = False, n_rows: int = None) -> Dict:
         res["compactor_max_increment_s"] = svc.compactor.max_increment_s
         res["compactor_preempted"] = svc.compactor.preempted
         res["max_first_turn_wait_s"] = svc.scheduler.max_first_turn_wait()
+        # Device-lock occupancy over the whole sweep: which owner class
+        # (session_turn / density_read / fold_increment) held the TTFR-
+        # governing serialization point, and for how long (repro.obs).
+        res["device_lock_occupancy"] = svc._device_lock.snapshot()
     tel = plane.telemetry()
     res["fold_events"] = tel["fold_events"]
     res["sessions_telemetry"] = tel["sessions"]
@@ -345,6 +349,13 @@ def emit_json(res: Dict) -> Dict:
             "skipped_busy": res["compactor_skipped_busy"],
         },
         "max_first_turn_wait_ms": round(res["max_first_turn_wait_s"] * 1e3, 2),
+        "device_lock_occupancy": {
+            "held_ms": round(res["device_lock_occupancy"]["total_held_s"] * 1e3, 2),
+            "by_owner_ms": {
+                k: round(v * 1e3, 2)
+                for k, v in sorted(res["device_lock_occupancy"]["by_owner_s"].items())
+            },
+        },
     }
 
 

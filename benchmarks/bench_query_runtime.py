@@ -19,9 +19,13 @@ from typing import Dict, List
 
 from repro.core import AggregateSpec, Eq, QueryProcessor
 
-from .common import BenchStore, paper_queries, timed
+from .common import BenchStore, paper_queries, time_stats, timed
 
 SCHEMES = ["scan", "batched_scan", "index", "batched_index"]
+# Pass 0 warms jit caches (first-trace XLA compiles); only later passes
+# enter the reported stats, so percentile columns measure steady state.
+WARMUP_PASSES = 1
+MEASURED_PASSES = 2
 DIST_SCHEMES = ["scan", "batched_scan", "index", "batched_index"]
 
 # The aggregation the combine-scan scheme answers for each query: "count
@@ -36,8 +40,8 @@ def run(bs: BenchStore) -> List[Dict]:
     for qname, domain in queries.items():
         tree = Eq("domain", domain)
         for scheme in SCHEMES:
-            best = None
-            for _ in range(2):  # first pass warms jit caches
+            times, last = [], None
+            for _ in range(WARMUP_PASSES + MEASURED_PASSES):
                 qp = QueryProcessor(bs.store)
 
                 def drain():
@@ -49,16 +53,19 @@ def run(bs: BenchStore) -> List[Dict]:
                     return rows, nbytes
 
                 dt, (rows, nbytes) = timed(drain)
-                best = (dt, rows, nbytes)
+                times.append(dt)
+                last = (rows, nbytes)
+            stats = time_stats(times, warmup=WARMUP_PASSES)
             out.append(
                 {"query": qname, "domain": domain, "scheme": scheme,
-                 "total_s": best[0], "rows": best[1], "client_bytes": best[2]}
+                 "total_s": stats["median_s"], "time_stats": stats,
+                 "rows": last[0], "client_bytes": last[1]}
             )
         # Fused combine-scan: same filter, but the server returns per-group
         # aggregates. 'rows' = events combined (comparable to row-fetch
         # rows); client_bytes = aggregate partial bytes actually shipped.
-        best = None
-        for _ in range(2):
+        times, last = [], None
+        for _ in range(WARMUP_PASSES + MEASURED_PASSES):
             qp = QueryProcessor(bs.store)
 
             def drain_agg():
@@ -72,10 +79,13 @@ def run(bs: BenchStore) -> List[Dict]:
                 return matched, nbytes
 
             dt, (rows, nbytes) = timed(drain_agg)
-            best = (dt, rows, nbytes)
+            times.append(dt)
+            last = (rows, nbytes)
+        stats = time_stats(times, warmup=WARMUP_PASSES)
         out.append(
             {"query": qname, "domain": domain, "scheme": "combine_scan",
-             "total_s": best[0], "rows": best[1], "client_bytes": best[2]}
+             "total_s": stats["median_s"], "time_stats": stats,
+             "rows": last[0], "client_bytes": last[1]}
         )
     out += run_dist(bs)
     return out
@@ -99,8 +109,8 @@ def run_dist(bs: BenchStore, tablets_per_device: int = 2) -> List[Dict]:
     for qname, domain in queries.items():
         tree = Eq("domain", domain)
         for scheme in DIST_SCHEMES:
-            best = None
-            for _ in range(2):  # first pass warms jit caches
+            times, best = [], None
+            for _ in range(WARMUP_PASSES + MEASURED_PASSES):
                 t0 = time.perf_counter()
                 first = float("nan")
                 rows = 0
@@ -110,11 +120,14 @@ def run_dist(bs: BenchStore, tablets_per_device: int = 2) -> List[Dict]:
                         first = time.perf_counter() - t0
                     rows += b.n
                     nbytes += b.nbytes
-                best = (time.perf_counter() - t0, first, rows, nbytes)
+                times.append(time.perf_counter() - t0)
+                best = (first, rows, nbytes)
+            stats = time_stats(times, warmup=WARMUP_PASSES)
             out.append(
                 {"query": qname, "domain": domain, "scheme": f"dist_{scheme}",
-                 "total_s": best[0], "first_s": best[1], "rows": best[2],
-                 "client_bytes": best[3], "rows_per_tablet": dist.capacity,
+                 "total_s": stats["median_s"], "time_stats": stats,
+                 "first_s": best[0], "rows": best[1],
+                 "client_bytes": best[2], "rows_per_tablet": dist.capacity,
                  "index_rows": dq.index_rows}
             )
     return out
@@ -128,6 +141,35 @@ def emit_csv(results: List[Dict]) -> List[str]:
             derived += f";first_us={r['first_s'] * 1e6:.0f}"
         lines.append(f"table2_runtime_{r['query']}_{r['scheme']},{r['total_s'] * 1e6:.0f},{derived}")
     return lines
+
+
+def emit_json(results: List[Dict]) -> Dict:
+    """Canonical machine-readable artifact (BENCH_query_runtime.json,
+    written via benchmarks/common.write_artifact and checked in): Table
+    II total runtimes per (query, scheme) with post-warmup median/p95 —
+    compile passes are excluded by run()'s WARMUP_PASSES, so the
+    percentile columns measure steady state."""
+
+    def row(r: Dict) -> Dict:
+        st = r.get("time_stats", {})
+        d = {
+            "query": r["query"],
+            "scheme": r["scheme"],
+            "total_us": round(r["total_s"] * 1e6, 1),
+            "p95_us": round(st.get("p95_s", r["total_s"]) * 1e6, 1),
+            "passes_measured": st.get("n", 1),
+            "rows": r["rows"],
+            "client_bytes": r["client_bytes"],
+        }
+        if "first_s" in r:
+            d["first_us"] = round(r["first_s"] * 1e6, 1)
+        return d
+
+    return {
+        "benchmark": "query_runtime",
+        "warmup_passes": WARMUP_PASSES,
+        "rows": [row(r) for r in results],
+    }
 
 
 def validate(results: List[Dict]) -> List[str]:

@@ -1,10 +1,13 @@
 """Shared benchmark fixtures: a populated store + the paper's Query A/B/C
-selectivity tiers."""
+selectivity tiers, plus the canonical-artifact emitter every bench uses
+to write its checked-in BENCH_*.json."""
 from __future__ import annotations
 
+import json
+import os
 import time
 from dataclasses import dataclass
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -13,6 +16,52 @@ from repro.core.ingest import BatchWriter, IngestMetrics
 from repro.pipeline.sources import SyntheticWebProxySource, parse_web_proxy_lines
 
 FOUR_HOURS = 4 * 3600
+
+ARTIFACT_SCHEMA_VERSION = 1
+
+
+def artifact_path(name: str) -> str:
+    return os.path.join(os.path.dirname(__file__), f"BENCH_{name}.json")
+
+
+def write_artifact(name: str, payload: dict) -> str:
+    """Write benchmarks/BENCH_<name>.json — the canonical checked-in perf
+    artifact shape (schema_version + kind + the bench's own payload).
+    Stable formatting (sorted keys, trailing newline) so regenerating an
+    unchanged result produces a zero diff."""
+    doc = {"schema_version": ARTIFACT_SCHEMA_VERSION, "kind": f"bench_{name}"}
+    doc.update(payload)
+    path = artifact_path(name)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+def measured(times: Sequence[float], warmup: int = 1) -> List[float]:
+    """Drop the first `warmup` iterations (first-trace XLA compiles) from
+    a timing series so percentile columns aren't polluted by compile
+    time. Keeps at least one sample."""
+    times = list(times)
+    if len(times) > warmup:
+        return times[warmup:]
+    return times[-1:] if times else []
+
+
+def time_stats(times: Sequence[float], warmup: int = 1) -> Dict[str, float]:
+    """median/p95/min/max/mean over the post-warmup samples."""
+    kept = measured(times, warmup=warmup)
+    if not kept:
+        return {"n": 0}
+    arr = np.asarray(kept, dtype=np.float64)
+    return {
+        "n": int(arr.size),
+        "mean_s": float(arr.mean()),
+        "median_s": float(np.median(arr)),
+        "p95_s": float(np.percentile(arr, 95)),
+        "min_s": float(arr.min()),
+        "max_s": float(arr.max()),
+    }
 
 
 @dataclass

@@ -16,8 +16,6 @@ the paper's qualitative claims. Tables map to the paper as:
 from __future__ import annotations
 
 import argparse
-import json
-import pathlib
 import sys
 
 
@@ -34,7 +32,7 @@ def main() -> None:
         bench_query_responsiveness,
         bench_query_runtime,
     )
-    from .common import build_bench_store
+    from .common import build_bench_store, write_artifact
 
     lines = []
     failures = []
@@ -52,25 +50,25 @@ def main() -> None:
     r2 = bench_query_runtime.run(bs)
     lines += bench_query_runtime.emit_csv(r2)
     failures += [f"runtime: {f}" for f in bench_query_runtime.validate(r2)]
+    # Canonical checked-in artifacts (benchmarks/BENCH_*.json, one shared
+    # emitter in common.py): regenerated on every harness run so
+    # re-anchors can track the perf trajectory (docs/benchmarks.md).
+    print("# wrote", write_artifact("query_runtime", bench_query_runtime.emit_json(r2)),
+          file=sys.stderr, flush=True)
 
     print("# fig 3/4: ingest scaling + backpressure ...", file=sys.stderr, flush=True)
     r3 = bench_ingest_scaling.run(quick=args.quick)
     lines += bench_ingest_scaling.emit_csv(r3)
     failures += [f"ingest: {f}" for f in bench_ingest_scaling.validate(r3)]
+    print("# wrote", write_artifact("ingest_scaling", bench_ingest_scaling.emit_json(r3)),
+          file=sys.stderr, flush=True)
 
     print("# serve plane: latency vs concurrent sessions ...", file=sys.stderr, flush=True)
     r5 = bench_query_concurrency.run(quick=args.quick)
     lines += bench_query_concurrency.emit_csv(r5)
     failures += [f"concurrency: {f}" for f in bench_query_concurrency.validate(r5)]
-    # Canonical checked-in artifact: rest + live-ingest TTFR p50/p99 per
-    # session count, regenerated on every harness run so re-anchors can
-    # track the perf trajectory (docs/benchmarks.md).
-    artifact = pathlib.Path(__file__).resolve().parent / "BENCH_query_concurrency.json"
-    artifact.write_text(
-        json.dumps(bench_query_concurrency.emit_json(r5), indent=2, sort_keys=True)
-        + "\n"
-    )
-    print(f"# wrote {artifact}", file=sys.stderr, flush=True)
+    print("# wrote", write_artifact("query_concurrency", bench_query_concurrency.emit_json(r5)),
+          file=sys.stderr, flush=True)
 
     print("# kernels ...", file=sys.stderr, flush=True)
     r4 = bench_kernels.run()

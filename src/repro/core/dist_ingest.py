@@ -65,7 +65,6 @@ n_indexed x the event slabs, so one mirror covers all three families
 from __future__ import annotations
 
 import itertools
-import threading
 import time
 from dataclasses import dataclass
 from typing import Dict, Optional, Sequence, Tuple
@@ -82,9 +81,12 @@ from .dist_query import DistStore
 from .ingest import BatchWriter, IngestMetrics, check_shard_guidance
 from .store import DEFAULT_AGG_BUCKET_SECONDS
 from ..kernels.merge_runs.ops import _pow2
+from ..obs import MetricsRegistry, OwnedLock, span
 
 REV_PAD = np.iinfo(np.int32).max  # +inf rev_ts sentinel (matches DistStore)
 KEY_PAD64 = np.iinfo(np.int64).max  # +inf packed-key sentinel (ix/ag)
+
+_plane_seq = itertools.count()  # names each plane's private metrics registry
 
 
 def _n_devices(mesh: Mesh) -> int:
@@ -198,10 +200,10 @@ class DistIngestPlane:
         self._gen: Dict[str, int] = {"mem": 0, "runs": 0, "base": 0}
         # (mem generation, sealed arrays, seal_rows) of the last seal run.
         self._sealed_cache: Optional[Tuple[int, Dict[str, jax.Array], int]] = None
-        self.seal_events = 0  # publishes that ran the seal program
-        self.seal_reuses = 0  # publishes that aliased the cached seal
-        self.blocked_seconds = 0.0  # sum over writers; per-writer below
-        self.blocked_by_writer: Dict[int, float] = {}
+        # All plane counters live on a PRIVATE metrics registry (plane
+        # instances in one process never share cells); the legacy names
+        # (seal_events, blocked_seconds, fold_events, ...) remain as
+        # properties over these metrics — see the block after __init__.
         # Fold accounting: every run->base fold is attributed to whoever
         # drove it — "ingest" counts BLOCKING majors tripped by a
         # writer's flush (one per major), and each `source` passed to
@@ -212,17 +214,68 @@ class DistIngestPlane:
         # for the serve plane: the query path NEVER appears here — reads
         # cannot fold by construction — and telemetry()["fold_events"]
         # proves it.
-        self.fold_events: Dict[str, int] = {}
+        self.metrics = MetricsRegistry(f"plane{next(_plane_seq)}")
+        self._m_seal = self.metrics.counter(
+            "plane_seal_total", "publishes that ran (event=seal) vs aliased (event=reuse)"
+        )
+        self._m_blocked = self.metrics.counter(
+            "plane_blocked_seconds_total", "writer seconds blocked on tripped majors"
+        )
+        self._m_folds = self.metrics.counter(
+            "plane_fold_events_total", "run->base folds by driving source"
+        )
+        self._m_last_seal_rows = self.metrics.gauge(
+            "plane_last_seal_rows", "event-family slots the last publish sorted"
+        )
         # Serve-plane sessions report through the same telemetry structure
         # as ingest writers (record_session); key = session id.
         self.session_stats: Dict[int, Dict[str, float]] = {}
-        self.last_seal_rows = 0  # event-family slots the last publish sorted
         # Concurrent DistBatchWriters (paper: many parallel ingest clients)
         # share one plane: the lock serializes state/counter updates, like
         # the host Tablet's lock. Writers blocked here while another's
         # flush compacts is exactly the paper's backpressure coupling.
-        self._lock = threading.Lock()
+        # OwnedLock attributes every hold to an owner class
+        # (ingest_append / publish_seal / fold_increment / ...) for the
+        # occupancy report (repro.obs.occupancy_snapshot).
+        self._lock = OwnedLock("plane_lock")
         self.state = self._init_state()
+
+    # ------------------------------------------------- legacy metric views
+    # Thin views over the plane registry, kept so six PRs of tests and
+    # benches read the same names they always did. blocked_seconds also
+    # accepts `= 0.0` (benches zero it between rounds) — anything else
+    # would silently desync the per-writer cells, so it raises.
+    @property
+    def seal_events(self) -> int:
+        return int(self._m_seal.value(event="seal"))
+
+    @property
+    def seal_reuses(self) -> int:
+        return int(self._m_seal.value(event="reuse"))
+
+    @property
+    def blocked_seconds(self) -> float:
+        return self._m_blocked.total()
+
+    @blocked_seconds.setter
+    def blocked_seconds(self, v: float) -> None:
+        if v != 0:
+            raise ValueError("blocked_seconds can only be reset to 0")
+        self._m_blocked.reset()
+
+    @property
+    def blocked_by_writer(self) -> Dict[int, float]:
+        return {
+            int(dict(key)["writer"]): v for key, v in self._m_blocked.cells().items()
+        }
+
+    @property
+    def fold_events(self) -> Dict[str, int]:
+        return {dict(key)["source"]: int(v) for key, v in self._m_folds.cells().items()}
+
+    @property
+    def last_seal_rows(self) -> int:
+        return int(self._m_last_seal_rows.value())
 
     @classmethod
     def for_store(cls, store, mesh: Mesh, capacity: int, **kw) -> "DistIngestPlane":
@@ -766,12 +819,11 @@ class DistIngestPlane:
         cols = np.asarray(cols, np.int32)
         tab = np.asarray(tab, np.int32)
         append = self._append_step()
-        with self._lock:
-            blocked = self._ingest_locked(append, rts, cols, tab, n)
-            self.blocked_by_writer[writer_id] = (
-                self.blocked_by_writer.get(writer_id, 0.0) + blocked
-            )
-            self.blocked_seconds += blocked
+        with self._lock.hold("ingest_append"):
+            with span("ingest.append", cat="ingest", rows=n, writer=writer_id) as sp:
+                blocked = self._ingest_locked(append, rts, cols, tab, n)
+                sp.set(blocked_s=blocked)
+            self._m_blocked.inc(blocked, writer=writer_id)
             return blocked
 
     def _ingest_locked(self, append, rts, cols, tab, n: int) -> float:
@@ -790,12 +842,17 @@ class DistIngestPlane:
                     # No free run slot for a tablet that must flush: major
                     # compaction first — it BLOCKS the writer that tripped
                     # it, Accumulo's backpressure reproduced on the mesh.
+                    # For the occupancy books this stretch of the ingest
+                    # hold is fold work, not append work.
                     t0 = time.perf_counter()
-                    self._run_major()
-                    jax.block_until_ready(self.state["ev_base_n"])
+                    with self._lock.reowner("fold_increment"):
+                        with span("ingest.major", cat="ingest"):
+                            self._run_major()
+                            jax.block_until_ready(self.state["ev_base_n"])
                     blocked += time.perf_counter() - t0
-                    self.fold_events["ingest"] = self.fold_events.get("ingest", 0) + 1
-                self._run_minor()
+                    self._m_folds.inc(source="ingest")
+                with span("ingest.minor", cat="ingest"):
+                    self._run_minor()
             pad_rts = np.zeros((b,), np.int32)
             pad_cols = np.zeros((b, self.n_fields), np.int32)
             pad_tab = np.full((b,), -1, np.int32)  # -1: no tablet claims it
@@ -830,7 +887,7 @@ class DistIngestPlane:
         appended, or memtables sealed mid-compaction): every ingest call
         mutates state under the same lock. Cheap no-op when nothing was
         ingested since the last publish."""
-        with self._lock:
+        with span("ingest.publish", cat="ingest"), self._lock.hold("publish_seal"):
             if not self._dirty and self._published is not None:
                 return self._published
             # Fill-bounded seal: the host fill mirror is exact, so the
@@ -847,14 +904,15 @@ class DistIngestPlane:
             gen_mem = self._gen["mem"]
             if self._sealed_cache is not None and self._sealed_cache[0] == gen_mem:
                 _, sealed, seal_rows = self._sealed_cache
-                self.last_seal_rows = seal_rows
-                self.seal_reuses += 1
+                self._m_last_seal_rows.set_value(seal_rows)
+                self._m_seal.inc(event="reuse")
             else:
                 seal_rows = self._seal_bucket(int(self._fill.max()))
-                self.last_seal_rows = seal_rows
-                sealed = self._seal_step(seal_rows)(self._sub(self._seal_names()))
+                self._m_last_seal_rows.set_value(seal_rows)
+                with span("ingest.seal", cat="ingest", seal_rows=seal_rows):
+                    sealed = self._seal_step(seal_rows)(self._sub(self._seal_names()))
                 self._sealed_cache = (gen_mem, sealed, seal_rows)
-                self.seal_events += 1
+                self._m_seal.inc(event="seal")
             s = self.state
             has_ix = len(self.families) > 1
             self._published = DistStore(
@@ -895,7 +953,7 @@ class DistIngestPlane:
         Serving deployments call this once at startup so no publish ever
         pays an XLA compile mid-query (a cold bucket otherwise lands its
         compile time in some session's time-to-first-result)."""
-        with self._lock:
+        with self._lock.hold("warmup"):
             seal_rows = 8
             while True:
                 self._seal_step(seal_rows)(self._sub(self._seal_names()))
@@ -912,21 +970,21 @@ class DistIngestPlane:
         state: anything staged gets drained exactly like compact(), and
         is attributed the same way; on a drained plane all three are
         device no-ops."""
-        with self._lock:
+        with self._lock.hold("warmup"):
             staged = bool(int(self._fill.max()) or int(self._runs_host.max()))
             self._run_minor()
             self._run_fold_one()
             self._run_major()
             if staged:
                 self._dirty = True
-                self.fold_events["explicit"] = self.fold_events.get("explicit", 0) + 1
+                self._m_folds.inc(source="explicit")
 
     def has_unfolded(self) -> bool:
         """True when memtables or run slots hold rows — i.e. compact()
         would actually fold something. Exact from the host-side fill/run
         mirrors: zero device syncs, so the serve plane's background
         compactor can poll it from its idle loop for free."""
-        with self._lock:
+        with self._lock.hold("bookkeeping"):
             return bool(int(self._fill.max()) or int(self._runs_host.max()))
 
     def fold_debt(self) -> int:
@@ -936,7 +994,7 @@ class DistIngestPlane:
         otherwise waits for a sustained idle window — a major costs
         seconds of device time at scale, so WHEN it runs is the whole
         game."""
-        with self._lock:
+        with self._lock.hold("bookkeeping"):
             return int(self._runs_host.max())
 
     def compact(self, source: str = "explicit") -> int:
@@ -953,19 +1011,21 @@ class DistIngestPlane:
         (see __init__); returns the number of minor+major passes run
         (0 for the no-op), so callers like the compactor can count real
         folds without a telemetry round trip."""
-        with self._lock:
+        with self._lock.hold("fold_increment"):
             if int(self._fill.max()) == 0 and int(self._runs_host.max()) == 0:
                 return 0  # exact mirrors: nothing in memtables or run slots
             passes = 0
-            for _ in range(3):
-                self._run_minor()
-                self._run_major()
-                passes += 1
-                if int(self._fill.max()) == 0:  # exact mirror: no device sync
-                    break
-            else:  # pragma: no cover — the invariant bounds this to 2 passes
-                raise RuntimeError("compact did not drain the memtables")
-            self.fold_events[source] = self.fold_events.get(source, 0) + passes
+            with span("ingest.compact", cat="ingest", source=source) as sp:
+                for _ in range(3):
+                    self._run_minor()
+                    self._run_major()
+                    passes += 1
+                    if int(self._fill.max()) == 0:  # exact mirror: no device sync
+                        break
+                else:  # pragma: no cover — the invariant bounds this to 2 passes
+                    raise RuntimeError("compact did not drain the memtables")
+                sp.set(passes=passes)
+            self._m_folds.inc(passes, source=source)
             self._dirty = True  # published view now points at stale levels
             return passes
 
@@ -991,14 +1051,16 @@ class DistIngestPlane:
         numpy oracle in tests). Returns 1 when an increment ran, else 0;
         increments are attributed to fold_events[source] like compact()
         passes."""
-        with self._lock:
+        with self._lock.hold("fold_increment"):
             if int(self._runs_host.max()) > 0:
-                self._run_fold_one()
+                with span("ingest.fold_increment", cat="ingest", source=source, kind="fold"):
+                    self._run_fold_one()
             elif int(self._fill.max()) > 0:
-                self._run_minor()
+                with span("ingest.fold_increment", cat="ingest", source=source, kind="minor"):
+                    self._run_minor()
             else:
                 return 0  # exact mirrors: nothing staged anywhere
-            self.fold_events[source] = self.fold_events.get(source, 0) + 1
+            self._m_folds.inc(source=source)
             self._dirty = True  # published view now points at stale levels
             return 1
 
@@ -1011,7 +1073,7 @@ class DistIngestPlane:
         1024 sessions are retained (insertion order), so per-connection
         sessions on a long-lived service don't grow the plane without
         limit."""
-        with self._lock:
+        with self._lock.hold("bookkeeping"):
             self.session_stats.pop(int(session_id), None)  # refresh position
             self.session_stats[int(session_id)] = dict(stats)
             while len(self.session_stats) > 1024:
@@ -1019,8 +1081,13 @@ class DistIngestPlane:
 
     def telemetry(self) -> Dict[str, np.ndarray]:
         """Per-tablet device counters (the paper's backpressure signals),
-        plus per-writer blocked-seconds (the §IV-A per-client curve)."""
-        with self._lock:
+        plus per-writer blocked-seconds (the §IV-A per-client curve).
+
+        Since the observability PR the scalar counters here are views of
+        the plane's metrics registry (`self.metrics`); this dict remains
+        the stable legacy surface, and repro.obs.metrics_snapshot() sees
+        the same cells without a device sync."""
+        with self._lock.hold("bookkeeping"):
             alias = {
                 "rows": "rows", "minor": "minor", "major": "major",
                 "n_runs": "n_runs", "overflow": "ev_overflow",

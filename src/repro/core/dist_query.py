@@ -57,6 +57,7 @@ from .filter import FilterProgram, compile_tree
 from .iterators import AggregateResult, AggregateSpec, ResolvedGrouping, resolve_grouping
 from .planner import QueryPlan, plan_query
 from .store import EventStore
+from ..obs import span
 
 INVALID_TS = jnp.int32(-1)
 _I32_MAX = np.iinfo(np.int32).max
@@ -1058,10 +1059,12 @@ class QueryRun:
         self.stats = stats
         self.dist = proc._sync()  # pinned for the whole run
         source = _PinnedSource(proc, self.dist) if self.dist.has_index else proc.store
-        self.plan = plan_query(
-            source, tree, t_start, t_stop, w=proc.w,
-            use_index=use_index and self.dist.has_index,
-        )
+        with span("query.plan", cat="query") as sp:
+            self.plan = plan_query(
+                source, tree, t_start, t_stop, w=proc.w,
+                use_index=use_index and self.dist.has_index,
+            )
+            sp.set(mode=self.plan.mode)
         if stats is not None:
             stats.plan = self.plan
         self._empty = self.plan.mode == "empty"
@@ -1093,9 +1096,11 @@ class QueryRun:
         else:
             lo, hi = self.batcher.next_range()
         t0 = time.perf_counter()
-        blk = self.proc._exec_range(
-            self.plan, self.tree, int(lo), int(hi), self.stats, dist=self.dist
-        )
+        with span("query.step", cat="query", mode=self.plan.mode) as sp:
+            blk = self.proc._exec_range(
+                self.plan, self.tree, int(lo), int(hi), self.stats, dist=self.dist
+            )
+            sp.set(rows=int(blk.count))
         runtime = time.perf_counter() - t0
         if self.batcher is None:
             self._single_done = True
@@ -1239,7 +1244,8 @@ class DistQueryProcessor:
         args = (d.ag_keys, d.ag_vals)
         if d.has_runs:
             args += self._ag_levels(d)
-        out = int(step(*args, jnp.int64(lo), jnp.int64(hi)))
+        with span("query.density", cat="query", field=field, value=value) as sp:
+            out = int(sp.fence(step(*args, jnp.int64(lo), jnp.int64(hi))))
         cache[ckey] = out
         return out
 
@@ -1269,11 +1275,13 @@ class DistQueryProcessor:
         args = (d.rev_ts, d.cols, d.counts)
         if d.has_runs:
             args += self._ev_levels(d)
-        total, top_ts, top_cols = step(
-            *args,
-            jnp.asarray(opc), jnp.asarray(a0), jnp.asarray(a1), jnp.asarray(cs),
-            rts_lo, rts_hi,
-        )
+        with span("query.scan_range", cat="query") as sp:
+            total, top_ts, top_cols = step(
+                *args,
+                jnp.asarray(opc), jnp.asarray(a0), jnp.asarray(a1), jnp.asarray(cs),
+                rts_lo, rts_hi,
+            )
+            sp.fence(total)
         ts = np.asarray(top_ts)
         valid = ts != int(INVALID_TS)
         return int(total), keypack.unrev_ts(ts[valid]), np.asarray(top_cols)[valid]

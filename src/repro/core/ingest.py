@@ -13,28 +13,66 @@ client processes used for ingest" — `check_shard_guidance`.
 """
 from __future__ import annotations
 
-import threading
+import itertools
 import time
-from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from ..obs import get_registry, span
 from .store import EventStore
 
+_writer_seq = itertools.count()
 
-@dataclass
+
 class IngestMetrics:
     """Per-writer telemetry; the benchmark harness aggregates across
-    writers into the Fig 3/4 curves."""
+    writers into the Fig 3/4 curves.
 
-    rows: int = 0
-    bytes: int = 0
-    flushes: int = 0
-    blocked_seconds: float = 0.0
-    flush_seconds: float = 0.0
-    # (wall_time, rows_flushed) samples — the instantaneous-rate series.
-    samples: List = field(default_factory=list)
+    Since the observability PR this is a *view* over counters on the
+    default metrics registry (``ingest_rows_total`` etc., labelled by a
+    per-instance writer id), so ``repro.obs.metrics_snapshot()`` sees
+    every writer without the benches changing how they read
+    ``m.rows``/``m.blocked_seconds``. Field mutation (``m.rows += n``)
+    still works via property setters."""
+
+    _FIELDS = {
+        "rows": "ingest_rows_total",
+        "bytes": "ingest_bytes_total",
+        "flushes": "ingest_flushes_total",
+        "blocked_seconds": "ingest_blocked_seconds_total",
+        "flush_seconds": "ingest_flush_seconds_total",
+    }
+
+    def __init__(self) -> None:
+        self._label = f"w{next(_writer_seq)}"
+        reg = get_registry()
+        self._counters = {f: reg.counter(n) for f, n in self._FIELDS.items()}
+        # (wall_time, rows_flushed) samples — the instantaneous-rate series.
+        self.samples: List = []
+
+    def _get(self, f: str) -> float:
+        return self._counters[f].value(writer=self._label)
+
+    def _set(self, f: str, v: float) -> None:
+        self._counters[f].set_value(v, writer=self._label)
+
+    rows = property(lambda s: int(s._get("rows")), lambda s, v: s._set("rows", v))
+    bytes = property(lambda s: int(s._get("bytes")), lambda s, v: s._set("bytes", v))
+    flushes = property(lambda s: int(s._get("flushes")), lambda s, v: s._set("flushes", v))
+    blocked_seconds = property(
+        lambda s: s._get("blocked_seconds"), lambda s, v: s._set("blocked_seconds", v)
+    )
+    flush_seconds = property(
+        lambda s: s._get("flush_seconds"), lambda s, v: s._set("flush_seconds", v)
+    )
+
+    def __repr__(self) -> str:
+        return (
+            f"IngestMetrics(rows={self.rows}, bytes={self.bytes}, "
+            f"flushes={self.flushes}, blocked_seconds={self.blocked_seconds:.4f}, "
+            f"flush_seconds={self.flush_seconds:.4f}, samples={len(self.samples)})"
+        )
 
 
 def check_shard_guidance(n_shards: int, n_clients: int) -> bool:
@@ -84,7 +122,9 @@ class BatchWriter:
         n = len(ts)
         self._ts, self._vals, self._rows = [], [], 0
         t0 = time.perf_counter()
-        blocked = self._write(ts, merged)
+        with span("ingest.flush", cat="ingest", rows=n) as sp:
+            blocked = self._write(ts, merged)
+            sp.set(blocked_s=blocked)
         dt = time.perf_counter() - t0
         m = self.metrics
         m.rows += n
@@ -103,10 +143,16 @@ def rate_series(metrics_list: Sequence[IngestMetrics], bucket_s: float = 0.25):
     samples = sorted(s for m in metrics_list for s in m.samples)
     if not samples:
         return np.zeros(0), np.zeros(0)
-    t0 = samples[0][0]
-    t_end = samples[-1][0]
+    t = np.asarray([s[0] for s in samples], dtype=np.float64)
+    rows = np.asarray([s[1] for s in samples], dtype=np.float64)
+    t0, t_end = t[0], t[-1]
     n_b = max(int((t_end - t0) / bucket_s) + 1, 1)
-    rate = np.zeros(n_b)
-    for t, rows in samples:
-        rate[min(int((t - t0) / bucket_s), n_b - 1)] += rows
+    # Half-open buckets [edge_i, edge_{i+1}): an event exactly on a
+    # boundary belongs to the bucket it opens, never to both. Explicit
+    # edges + searchsorted make that deterministic, where per-event
+    # float division (t - t0) / bucket_s rounded inconsistently at the
+    # boundaries.
+    edges = t0 + bucket_s * np.arange(n_b + 1)
+    idx = np.clip(np.searchsorted(edges, t, side="right") - 1, 0, n_b - 1)
+    rate = np.bincount(idx, weights=rows, minlength=n_b)
     return np.arange(n_b) * bucket_s, rate / bucket_s

@@ -48,6 +48,7 @@ from .scan import RowBlock, fetch_rows_by_keys, index_scan, scan_events
 from .store import EventStore
 from ..kernels.filter_scan import filter_scan
 from ..kernels.merge_intersect import intersect_sorted, union_sorted
+from ..obs import span
 
 
 @dataclass
@@ -273,7 +274,11 @@ class HostQueryRun:
         self.t_stop = t_stop
         self.stats = stats
         store = qp.store
-        self.plan = plan_query(store, tree, t_start, t_stop, w=qp.w, use_index=use_index)
+        with span("query.plan", cat="query", host=True) as sp:
+            self.plan = plan_query(
+                store, tree, t_start, t_stop, w=qp.w, use_index=use_index
+            )
+            sp.set(mode=self.plan.mode)
         if stats is not None:
             stats.plan = self.plan
         # Provably empty (zero-density index condition): no scans, no
@@ -351,11 +356,13 @@ class HostQueryRun:
         else:
             lo, hi = self.batcher.next_range()
         t_begin = time.perf_counter()
-        blocks = list(
-            self.qp._execute_range(
-                self.plan, int(lo), int(hi), prog=self.prog, combiner=self.combiner
+        with span("query.step", cat="query", mode=self.plan.mode, host=True) as sp:
+            blocks = list(
+                self.qp._execute_range(
+                    self.plan, int(lo), int(hi), prog=self.prog, combiner=self.combiner
+                )
             )
-        )
+            sp.set(rows=sum(getattr(b, "matched", b.n) for b in blocks))
         runtime = time.perf_counter() - t_begin
         rows = sum(getattr(b, "matched", b.n) for b in blocks)
         if self.batcher is None:

@@ -1,0 +1,64 @@
+"""repro.obs — unified observability plane.
+
+Three layers (see docs/observability.md):
+
+- registry: typed counters/gauges/histograms with label sets
+- trace: spans with parent linkage and block_until_ready device fencing
+- occupancy: per-owner held-time attribution on the device locks
+
+plus exporters (JSON snapshot, Chrome/Perfetto trace, terminal table).
+"""
+
+from .occupancy import OwnedLock, all_locks, occupancy_snapshot
+from .registry import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    all_registries,
+    get_registry,
+)
+from .trace import (
+    Tracer,
+    clear,
+    disable,
+    enable,
+    enabled,
+    get_tracer,
+    span,
+    traced,
+)
+from .export import (
+    chrome_trace,
+    metrics_snapshot,
+    summary,
+    validate_chrome_trace,
+    write_chrome_trace,
+    write_metrics_json,
+)
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "OwnedLock",
+    "Tracer",
+    "all_locks",
+    "all_registries",
+    "chrome_trace",
+    "clear",
+    "disable",
+    "enable",
+    "enabled",
+    "get_registry",
+    "get_tracer",
+    "metrics_snapshot",
+    "occupancy_snapshot",
+    "span",
+    "summary",
+    "traced",
+    "validate_chrome_trace",
+    "write_chrome_trace",
+    "write_metrics_json",
+]

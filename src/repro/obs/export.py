@@ -1,0 +1,187 @@
+"""Exporters: JSON metrics snapshot, Chrome trace-event file, terminal
+summary table.
+
+- :func:`metrics_snapshot` / :func:`write_metrics_json` — one JSON doc
+  merging every registry plus lock occupancy, with the same
+  ``schema_version`` discipline as benchmarks/BENCH_query_concurrency.json.
+- :func:`chrome_trace` / :func:`write_chrome_trace` — Chrome trace-event
+  format (``{"traceEvents": [...]}`` with "X" complete events, µs
+  timestamps), loadable at https://ui.perfetto.dev.
+- :func:`summary` — a plain-text table for terminal use.
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Any, Dict, List, Optional
+
+from .occupancy import occupancy_snapshot
+from .registry import all_registries
+from .trace import get_tracer
+
+__all__ = [
+    "chrome_trace",
+    "metrics_snapshot",
+    "summary",
+    "validate_chrome_trace",
+    "write_chrome_trace",
+    "write_metrics_json",
+]
+
+SNAPSHOT_SCHEMA_VERSION = 1
+
+
+def metrics_snapshot() -> Dict[str, Any]:
+    registries = {}
+    for reg in all_registries():
+        snap = reg.snapshot()
+        if not snap:
+            continue
+        if reg.name in registries:
+            # Two registries with the same name (e.g. two planes named
+            # identically): suffix to keep both visible.
+            i = 2
+            while f"{reg.name}#{i}" in registries:
+                i += 1
+            registries[f"{reg.name}#{i}"] = snap
+        else:
+            registries[reg.name] = snap
+    return {
+        "schema_version": SNAPSHOT_SCHEMA_VERSION,
+        "kind": "obs_metrics_snapshot",
+        "registries": registries,
+        "lock_occupancy": occupancy_snapshot(),
+    }
+
+
+def write_metrics_json(path: str) -> Dict[str, Any]:
+    snap = metrics_snapshot()
+    with open(path, "w") as f:
+        json.dump(snap, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return snap
+
+
+def chrome_trace() -> Dict[str, Any]:
+    tr = get_tracer()
+    events: List[Dict[str, Any]] = []
+    for tid, name in sorted(tr.thread_names().items()):
+        events.append(
+            {
+                "ph": "M",
+                "name": "thread_name",
+                "pid": 1,
+                "tid": tid,
+                "args": {"name": name},
+            }
+        )
+    for rec in list(tr.records):
+        args = dict(rec["args"])
+        args["sid"] = rec["sid"]
+        if rec["parent"]:
+            args["parent"] = rec["parent"]
+        if "fence_s" in rec:
+            args["device_fence_us"] = round(rec["fence_s"] * 1e6, 3)
+        events.append(
+            {
+                "ph": "X",
+                "name": rec["name"],
+                "cat": rec["cat"] or "span",
+                "pid": 1,
+                "tid": rec["tid"],
+                "ts": round(rec["t0"] * 1e6, 3),
+                "dur": round(rec["dur"] * 1e6, 3),
+                "args": args,
+            }
+        )
+    return {"traceEvents": events, "displayTimeUnit": "ms"}
+
+
+def write_chrome_trace(path: str) -> Dict[str, Any]:
+    doc = chrome_trace()
+    with open(path, "w") as f:
+        json.dump(doc, f)
+        f.write("\n")
+    return doc
+
+
+def validate_chrome_trace(doc: Dict[str, Any]) -> List[str]:
+    """Return a list of schema problems (empty == valid). Used by both
+    tests/test_obs.py and the CI observability smoke."""
+    problems: List[str] = []
+    if not isinstance(doc, dict) or "traceEvents" not in doc:
+        return ["missing traceEvents key"]
+    events = doc["traceEvents"]
+    if not isinstance(events, list):
+        return ["traceEvents is not a list"]
+    sids = set()
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            problems.append(f"event {i}: not an object")
+            continue
+        ph = ev.get("ph")
+        if ph not in ("X", "M"):
+            problems.append(f"event {i}: unsupported ph {ph!r}")
+            continue
+        if "name" not in ev or "pid" not in ev or "tid" not in ev:
+            problems.append(f"event {i}: missing name/pid/tid")
+        if ph == "X":
+            ts, dur = ev.get("ts"), ev.get("dur")
+            if not isinstance(ts, (int, float)) or not isinstance(dur, (int, float)):
+                problems.append(f"event {i}: ts/dur not numeric")
+            elif dur < 0:
+                problems.append(f"event {i}: negative dur")
+            sid = ev.get("args", {}).get("sid")
+            if sid is not None:
+                sids.add(sid)
+    for i, ev in enumerate(events):
+        if ev.get("ph") != "X":
+            continue
+        parent = ev.get("args", {}).get("parent")
+        if parent is not None and parent not in sids:
+            problems.append(f"event {i}: parent sid {parent} not present")
+    return problems
+
+
+def _fmt_labels(key: str) -> str:
+    return "" if key == "__all__" else f"{{{key}}}"
+
+
+def summary(width: int = 78) -> str:
+    """Terminal summary: lock occupancy first (the headline), then every
+    non-empty metric."""
+    lines: List[str] = []
+    occ = occupancy_snapshot()
+    if occ:
+        lines.append("== lock occupancy ==")
+        for name, snap in sorted(occ.items()):
+            total = float(snap["total_held_s"])
+            lines.append(
+                f"{name}: held {total * 1e3:.1f} ms over {snap['acquisitions']} acquisitions"
+            )
+            by = snap["by_owner_s"]
+            for owner, secs in sorted(by.items(), key=lambda kv: -kv[1]):
+                frac = (secs / total * 100.0) if total > 0 else 0.0
+                n = snap["acq_by_owner"].get(owner, 0)
+                lines.append(f"  {owner:<16} {secs * 1e3:>10.1f} ms  {frac:>5.1f}%  (n={n})")
+    for reg in all_registries():
+        snap = reg.snapshot()
+        if not snap:
+            continue
+        lines.append(f"== registry: {reg.name} ==")
+        for mname in sorted(snap):
+            m = snap[mname]
+            if m["kind"] == "histogram":
+                for key, cell in sorted(m["cells"].items()):
+                    mean = cell["sum"] / cell["count"] if cell["count"] else 0.0
+                    lines.append(
+                        f"{mname}{_fmt_labels(key)}: n={cell['count']} "
+                        f"mean={mean * 1e3:.2f}ms min={cell['min'] * 1e3:.2f}ms "
+                        f"max={cell['max'] * 1e3:.2f}ms"
+                    )
+            else:
+                for key, val in sorted(m["cells"].items()):
+                    if isinstance(val, float) and val == int(val):
+                        val = int(val)
+                    lines.append(f"{mname}{_fmt_labels(key)}: {val}")
+    return "\n".join(lines)

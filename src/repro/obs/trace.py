@@ -1,0 +1,247 @@
+"""Span tracing with parent linkage and device-time fencing.
+
+Spans are cheap context managers::
+
+    with span("query.step", cat="query", session=sid) as sp:
+        out = step_fn(...)
+        sp.fence(out)          # block_until_ready; accrues device time
+        sp.set(rows=int(n))    # attach results post-hoc
+
+Tracing is OFF by default. When disabled, :func:`span` returns a shared
+singleton whose ``__enter__``/``__exit__``/``fence``/``set`` are no-ops —
+the total disabled cost is one global load, one attribute check, and a
+function call, which the overhead gate in tests/test_obs.py bounds at
+< 2% of a scan microbench step.
+
+Parent linkage is thread-local: the innermost open span on the current
+thread is the parent of the next one opened. Records accumulate in a
+bounded deque and export to Chrome trace-event JSON via
+repro.obs.export.chrome_trace (loadable in Perfetto).
+"""
+
+from __future__ import annotations
+
+import functools
+import threading
+import time
+from collections import deque
+from typing import Any, Callable, Deque, Dict, List, Optional
+
+__all__ = [
+    "Tracer",
+    "clear",
+    "disable",
+    "enable",
+    "enabled",
+    "get_tracer",
+    "span",
+    "traced",
+]
+
+
+class _NullSpan:
+    """Singleton returned while tracing is disabled; every verb no-ops."""
+
+    __slots__ = ()
+
+    def __enter__(self) -> "_NullSpan":
+        return self
+
+    def __exit__(self, *exc: object) -> None:
+        return None
+
+    def fence(self, x: object) -> object:
+        return x
+
+    def set(self, **kw: object) -> None:
+        return None
+
+
+_NULL = _NullSpan()
+
+
+class _Span:
+    __slots__ = ("tracer", "name", "cat", "args", "sid", "parent", "tid", "t0", "fence_s")
+
+    def __init__(self, tracer: "Tracer", name: str, cat: str, args: Dict[str, Any]) -> None:
+        self.tracer = tracer
+        self.name = name
+        self.cat = cat
+        self.args = args
+        self.sid = 0
+        self.parent = 0
+        self.tid = 0
+        self.t0 = 0.0
+        self.fence_s = 0.0
+
+    def __enter__(self) -> "_Span":
+        tr = self.tracer
+        self.sid = tr._next_sid()
+        stack = tr._stack()
+        self.parent = stack[-1].sid if stack else 0
+        self.tid = threading.get_ident()
+        tr._note_thread(self.tid)
+        stack.append(self)
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc: object) -> None:
+        t1 = time.perf_counter()
+        stack = self.tracer._stack()
+        if stack and stack[-1] is self:
+            stack.pop()
+        self.tracer._record(self, t1 - self.t0)
+
+    def fence(self, x: object) -> object:
+        """Block until a jax value is ready; the wait is charged to this
+        span as device time. Works on pytrees; passes through non-jax
+        values untouched."""
+        t0 = time.perf_counter()
+        try:
+            import jax
+
+            jax.block_until_ready(x)
+        except Exception:
+            pass
+        self.fence_s += time.perf_counter() - t0
+        return x
+
+    def set(self, **kw: object) -> None:
+        self.args.update(kw)
+
+
+class Tracer:
+    def __init__(self, maxlen: int = 65536) -> None:
+        self.enabled = False
+        self.records: Deque[Dict[str, Any]] = deque(maxlen=maxlen)
+        self.epoch = time.perf_counter()
+        self._sid = 0
+        self._sid_lock = threading.Lock()
+        self._tls = threading.local()
+        self._threads: Dict[int, str] = {}
+        self._threads_lock = threading.Lock()
+
+    # -- internals -------------------------------------------------------
+    def _next_sid(self) -> int:
+        with self._sid_lock:
+            self._sid += 1
+            return self._sid
+
+    def _stack(self) -> List[_Span]:
+        st = getattr(self._tls, "stack", None)
+        if st is None:
+            st = []
+            self._tls.stack = st
+        return st
+
+    def _note_thread(self, tid: int) -> None:
+        if tid not in self._threads:
+            with self._threads_lock:
+                self._threads[tid] = threading.current_thread().name
+
+    def _record(self, sp: _Span, dur: float) -> None:
+        rec = {
+            "name": sp.name,
+            "cat": sp.cat,
+            "sid": sp.sid,
+            "parent": sp.parent,
+            "tid": sp.tid,
+            "t0": sp.t0 - self.epoch,
+            "dur": dur,
+            "args": sp.args,
+        }
+        if sp.fence_s:
+            rec["fence_s"] = sp.fence_s
+        self.records.append(rec)
+
+    # -- public ----------------------------------------------------------
+    def span(self, name: str, cat: str = "", **args: object):
+        if not self.enabled:
+            return _NULL
+        return _Span(self, name, cat, dict(args))
+
+    def add_complete(
+        self,
+        name: str,
+        t0: float,
+        dur: float,
+        cat: str = "",
+        tid: Optional[int] = None,
+        **args: object,
+    ) -> None:
+        """Record a span retroactively from (start, duration) timestamps
+        measured elsewhere — used for lock-hold segments, which are timed
+        by OwnedLock whether or not tracing was on when they began."""
+        if not self.enabled:
+            return
+        if tid is None:
+            tid = threading.get_ident()
+        self._note_thread(tid)
+        self.records.append(
+            {
+                "name": name,
+                "cat": cat,
+                "sid": self._next_sid(),
+                "parent": 0,
+                "tid": tid,
+                "t0": t0 - self.epoch,
+                "dur": dur,
+                "args": dict(args),
+            }
+        )
+
+    def clear(self) -> None:
+        self.records.clear()
+        self.epoch = time.perf_counter()
+
+    def thread_names(self) -> Dict[int, str]:
+        with self._threads_lock:
+            return dict(self._threads)
+
+
+_tracer = Tracer()
+
+
+def get_tracer() -> Tracer:
+    return _tracer
+
+
+def span(name: str, cat: str = "", **args: object):
+    """Open a span on the global tracer (no-op singleton when disabled)."""
+    if not _tracer.enabled:
+        return _NULL
+    return _Span(_tracer, name, cat, dict(args))
+
+
+def traced(name: Optional[str] = None, cat: str = "") -> Callable:
+    """Decorator form of :func:`span`."""
+
+    def deco(fn: Callable) -> Callable:
+        label = name or fn.__qualname__
+
+        @functools.wraps(fn)
+        def wrapper(*a: object, **kw: object):
+            if not _tracer.enabled:
+                return fn(*a, **kw)
+            with _Span(_tracer, label, cat, {}):
+                return fn(*a, **kw)
+
+        return wrapper
+
+    return deco
+
+
+def enable() -> None:
+    _tracer.enabled = True
+
+
+def disable() -> None:
+    _tracer.enabled = False
+
+
+def enabled() -> bool:
+    return _tracer.enabled
+
+
+def clear() -> None:
+    _tracer.clear()

@@ -47,9 +47,14 @@ test and the CI smoke assert against them.
 """
 from __future__ import annotations
 
+import itertools
 import threading
 import time
 from typing import Optional
+
+from ..obs import get_registry
+
+_compactor_seq = itertools.count()
 
 
 class BackgroundCompactor:
@@ -76,16 +81,51 @@ class BackgroundCompactor:
         self.min_debt = int(min_debt)
         self.idle_grace_s = float(idle_grace_s)
         self.incremental = bool(incremental)
-        self.folds = 0
-        self.passes = 0
-        self.increments = 0
-        self.max_increment_s = 0.0
-        self.preempted = 0  # increment loops cut short by a fresh query
-        self.skipped_busy = 0
+        # Counters live on the default metrics registry (labelled per
+        # compactor instance); the legacy attribute names below remain as
+        # property views so tests/benches read — and benches reset — the
+        # same names as before.
+        self._label = f"c{next(_compactor_seq)}"
+        reg = get_registry()
+        self._m_counts = reg.counter(
+            "compactor_events_total",
+            "background-compactor events by kind "
+            "(folds/passes/increments/preempted/skipped_busy)",
+        )
+        self._m_max_inc = reg.gauge(
+            "compactor_max_increment_seconds", "longest single compact_step device hold"
+        )
         self._draining = False  # an incremental drain is mid-flight
         self._last_busy = time.perf_counter()
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
+
+    # --------------------------------------------------- legacy metric views
+    def _count(self, kind: str) -> int:
+        return int(self._m_counts.value(kind=kind, compactor=self._label))
+
+    def _set_count(self, kind: str, v: int) -> None:
+        self._m_counts.set_value(v, kind=kind, compactor=self._label)
+
+    folds = property(lambda s: s._count("folds"), lambda s, v: s._set_count("folds", v))
+    passes = property(lambda s: s._count("passes"), lambda s, v: s._set_count("passes", v))
+    increments = property(
+        lambda s: s._count("increments"), lambda s, v: s._set_count("increments", v)
+    )
+    preempted = property(
+        lambda s: s._count("preempted"), lambda s, v: s._set_count("preempted", v)
+    )
+    skipped_busy = property(
+        lambda s: s._count("skipped_busy"), lambda s, v: s._set_count("skipped_busy", v)
+    )
+
+    @property
+    def max_increment_s(self) -> float:
+        return self._m_max_inc.value(compactor=self._label)
+
+    @max_increment_s.setter
+    def max_increment_s(self, v: float) -> None:
+        self._m_max_inc.set_value(v, compactor=self._label)
 
     def start(self) -> "BackgroundCompactor":
         if self._thread is None:
@@ -128,7 +168,7 @@ class BackgroundCompactor:
             return
         # Non-blocking: if a session batch grabbed the device between the
         # busy() check and here, the query wins and we try next tick.
-        if not svc._device_lock.acquire(blocking=False):
+        if not svc._device_lock.acquire(blocking=False, owner="fold_increment"):
             self.skipped_busy += 1
             return
         try:
@@ -159,7 +199,7 @@ class BackgroundCompactor:
                 return
             # Non-blocking: if a session batch grabbed the device between
             # the busy() check and here, the query wins.
-            if not svc._device_lock.acquire(blocking=False):
+            if not svc._device_lock.acquire(blocking=False, owner="fold_increment"):
                 self.skipped_busy += 1
                 return
             try:

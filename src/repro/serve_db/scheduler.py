@@ -32,6 +32,7 @@ from dataclasses import dataclass, field
 from typing import Optional
 
 from ..core.batching import alg1_next_k
+from ..obs import get_registry
 from .session import QuerySession, StreamingQuery
 
 
@@ -97,6 +98,17 @@ class FairScheduler:
         # than ~one compaction increment). Bounded so a long-lived
         # service never grows it without limit.
         self.turn_log: deque = deque(maxlen=4096)
+        # Registry mirror of the turn log: the ring keeps its exact
+        # per-turn records (the starvation guard reads waits from it, and
+        # clear() between bench rounds must keep working), while the
+        # histograms feed repro.obs.metrics_snapshot() with the turn/wait
+        # distributions across the whole process lifetime.
+        reg = get_registry()
+        self._m_turns = reg.counter("serve_turns_total", "served turns, by first/continuing")
+        self._m_turn_s = reg.histogram("serve_turn_seconds", "wall time of one served turn")
+        self._m_wait_s = reg.histogram(
+            "serve_first_wait_seconds", "queue wait of first-result turns"
+        )
 
     # ------------------------------------------------------- enqueue side
     def submit(self, entry: QueryEntry) -> None:
@@ -167,6 +179,10 @@ class FairScheduler:
                     "t": time.perf_counter(),
                 }
             )
+        self._m_turns.inc(first=seq == 0)
+        self._m_turn_s.observe(turn_s)
+        if seq == 0:
+            self._m_wait_s.observe(wait_s)
 
     def max_first_turn_wait(self) -> float:
         """Worst queue wait of any first-result turn in the log — the

@@ -40,6 +40,7 @@ from typing import Dict, Optional
 
 from ..core.dist_query import DistQueryProcessor, QueryRun
 from ..core.query import HostBatch, HostQueryRun, QueryProcessor
+from ..obs import OwnedLock, span
 from .compactor import BackgroundCompactor
 from .scheduler import FairScheduler, QueryEntry, TurnQuantum
 from .session import QuerySession, ResultBatch, StreamingQuery
@@ -92,7 +93,11 @@ class QueryService:
         self.proc = DistQueryProcessor(store, plane=plane, top_k=top_k, w=w)
         self.host_proc = QueryProcessor(store, w=w)
         self.scheduler = FairScheduler(quantum)
-        self._device_lock = threading.Lock()
+        # OwnedLock: every hold is attributed to an owner class
+        # (session_turn / density_read / fold_increment) so the occupancy
+        # report (repro.obs.occupancy_snapshot) breaks down exactly where
+        # the TTFR-governing serialization point's time goes.
+        self._device_lock = OwnedLock("device_lock")
         self._stop = threading.Event()
         self._in_flight = 0
         self._sessions: Dict[int, QuerySession] = {}
@@ -265,8 +270,14 @@ class QueryService:
             # Built here, on the dispatcher, under the device lock:
             # planning reads densities off the mesh (device work), and it
             # counts toward this query's time-to-first-result like every
-            # other serving cost.
-            entry.run = self._build_run(entry)
+            # other serving cost. For the occupancy books this stretch of
+            # the hold is density/planning work, not batch stepping.
+            with self._device_lock.reowner("density_read"):
+                with span(
+                    "serve.plan", cat="serve",
+                    session=entry.session.session_id, scheme=entry.stream.scheme,
+                ):
+                    entry.run = self._build_run(entry)
             if entry.run.done:  # provably-empty plan: zero batches
                 entry.stream._finish()
                 self._report_session(entry.session)
@@ -284,7 +295,8 @@ class QueryService:
             end = time.perf_counter()
             if blk is None:
                 break
-            entry.stream._deliver(self._as_result(entry, blk, wait_s, end - start))
+            with span("serve.deliver", cat="serve", session=entry.session.session_id):
+                entry.stream._deliver(self._as_result(entry, blk, wait_s, end - start))
             wait_s = 0.0  # later batches of this turn never waited
             entry.seq += 1
             served += 1
@@ -311,8 +323,12 @@ class QueryService:
             if entry is None:
                 continue
             try:
-                with self._device_lock:
-                    self._run_turn(entry)
+                with self._device_lock.hold("session_turn"):
+                    with span(
+                        "serve.turn", cat="serve",
+                        session=entry.session.session_id,
+                    ):
+                        self._run_turn(entry)
             except BaseException as e:  # deliver, don't kill the dispatcher
                 entry.stream._finish(error=e)
             finally:
