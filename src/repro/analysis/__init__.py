@@ -1,0 +1,41 @@
+"""reprolint — repo-native static analysis for the repro codebase.
+
+An AST-based pass that machine-checks the concurrency and hot-path
+invariants the distributed planes rely on (see docs/static_analysis.md
+for the rule catalog):
+
+  guarded-by            lock discipline on annotated shared fields
+  no-sync-in-hot-path   hidden device syncs in latency-critical paths
+  jit-purity            no host side effects inside traced functions
+  no-donate-in-plane    publish() aliasing forbids buffer donation
+  kernel-contract       every Pallas kernel ships a matching reference
+
+Run as ``python -m repro.analysis [paths...]``; CI gates on it. Findings
+are suppressed inline with ``# reprolint: disable=<rule>`` or
+grandfathered (with a justification) in ``analysis/baseline.json``.
+"""
+from .engine import (  # noqa: F401
+    AnalysisResult,
+    Baseline,
+    FileContext,
+    Finding,
+    all_rules,
+    collect_files,
+    load_baseline,
+    render_json,
+    render_text,
+    run_analysis,
+)
+
+__all__ = [
+    "AnalysisResult",
+    "Baseline",
+    "FileContext",
+    "Finding",
+    "all_rules",
+    "collect_files",
+    "load_baseline",
+    "render_json",
+    "render_text",
+    "run_analysis",
+]

@@ -1,0 +1,23 @@
+"""Rule registry. Order here is report order for equal file:line."""
+from .guarded_by import GuardedByRule
+from .hot_path import HotPathSyncRule
+from .jit_purity import JitPurityRule
+from .kernel_contract import KernelContractRule
+from .no_donate import NoDonateInPlaneRule
+
+REGISTRY = [
+    GuardedByRule,
+    HotPathSyncRule,
+    JitPurityRule,
+    NoDonateInPlaneRule,
+    KernelContractRule,
+]
+
+__all__ = [
+    "REGISTRY",
+    "GuardedByRule",
+    "HotPathSyncRule",
+    "JitPurityRule",
+    "NoDonateInPlaneRule",
+    "KernelContractRule",
+]

@@ -1,0 +1,109 @@
+"""no-sync-in-hot-path: hidden device syncs in latency-critical code.
+
+Tag a function hot with ``# reprolint: hot-path`` on (or directly above)
+its ``def`` line — the dist_query step paths and the serve_db turn path
+carry the tag. Inside a hot function (nested defs inherit), the rule
+flags the host-device sync points that silently serialize the pipeline:
+
+  * ``x.item()``                        — always a blocking device->host copy
+  * ``jax.block_until_ready(x)``        — an explicit wait that bypasses span
+                                          accounting; use ``sp.fence(x)`` on an
+                                          open span so the wait is charged as
+                                          device time
+  * ``np.asarray(x)`` / ``jax.device_get(x)`` — device->host materialization,
+                                          allowed only on an already-fenced
+                                          value (``np.asarray(sp.fence(x))``)
+  * ``float(f(...))`` / ``int(f(...))`` / ``bool(f(...))`` — coercing a call
+                                          result forces the sync inline;
+                                          fence it first (``int(sp.fence(...))``)
+
+The scalar-coercion check only fires when the operand is itself a call
+(the common ``int(step(...))`` shape); coercing an already-materialized
+name (``int(total)`` after ``total = sp.fence(...)``) is clean.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from ..engine import FileContext, Finding, Rule
+from .common import dotted_name, is_fence_call
+
+RULE = "no-sync-in-hot-path"
+
+_MATERIALIZERS = {"np.asarray", "numpy.asarray", "jax.device_get"}
+_BLOCKERS = {"jax.block_until_ready", "block_until_ready"}
+_COERCIONS = {"float", "int", "bool"}
+
+
+class HotPathSyncRule(Rule):
+    name = RULE
+    description = (
+        "no .item()/block_until_ready/np.asarray/scalar-coercion syncs inside "
+        "'# reprolint: hot-path' functions unless wrapped in sp.fence(...)"
+    )
+
+    def check_file(self, ctx: FileContext) -> List[Finding]:
+        if not ctx.hot_lines:
+            return []
+        findings: List[Finding] = []
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                if ctx.is_hot_def(node):
+                    self._check_hot(ctx, node, findings)
+        return findings
+
+    def _check_hot(self, ctx: FileContext, fn: ast.AST, findings: List[Finding]) -> None:
+        # ast.walk descends into nested defs too — they run on the same
+        # hot path unless they are separately (not) tagged; inherit.
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            func = node.func
+            name = dotted_name(func)
+            if isinstance(func, ast.Attribute) and func.attr == "item":
+                findings.append(
+                    ctx.finding(
+                        RULE,
+                        node,
+                        ".item() blocks on the device inside a hot path — "
+                        "materialize via np.asarray(sp.fence(x)) once, outside "
+                        "the per-step loop if possible",
+                    )
+                )
+            elif name in _BLOCKERS:
+                findings.append(
+                    ctx.finding(
+                        RULE,
+                        node,
+                        "bare block_until_ready in a hot path bypasses span "
+                        "accounting — use sp.fence(x) on the enclosing span so "
+                        "the wait is charged as device time",
+                    )
+                )
+            elif name in _MATERIALIZERS:
+                if not (node.args and is_fence_call(node.args[0])):
+                    findings.append(
+                        ctx.finding(
+                            RULE,
+                            node,
+                            f"{name}(...) on a device value syncs inline in a hot "
+                            "path — fence it first: "
+                            f"{name}(sp.fence(...))",
+                        )
+                    )
+            elif (
+                isinstance(func, ast.Name)
+                and func.id in _COERCIONS
+                and len(node.args) == 1
+                and isinstance(node.args[0], ast.Call)
+                and not is_fence_call(node.args[0])
+            ):
+                findings.append(
+                    ctx.finding(
+                        RULE,
+                        node,
+                        f"{func.id}(...) on a call result forces a device sync in "
+                        f"a hot path — fence it: {func.id}(sp.fence(...))",
+                    )
+                )

@@ -1,0 +1,207 @@
+"""jit-purity: functions handed to the JAX tracers must be pure.
+
+Any function passed (positionally, via ``functools.partial``, or as a
+decorator) to ``jax.jit`` / ``shard_map`` / ``jax.pmap`` /
+``pl.pallas_call`` is traced: its Python body runs ONCE at trace time,
+so host side effects either vanish on the cached path or — worse —
+leak trace-time garbage into live state. The rule resolves the callee
+through the lexical scopes of the file and flags, inside its body (and
+nested helpers):
+
+  * assignments to ``self.<attr>``        — trace-time object mutation
+  * calls into ``time.*`` / ``random.*`` / ``np.random.*`` — host
+    nondeterminism baked into the trace (``jax.random`` is fine: keys
+    are explicit)
+  * mutation of closed-over host containers — ``xs.append(...)``,
+    ``d[k] = v``, ``s.add(...)`` etc. where the receiver is a free
+    variable of the traced function (locals and parameters are fine)
+
+Only callees defined in the same file are checked (a Name that resolves
+to an import or a runtime-built closure is skipped — dynamic tests cover
+those); that keeps the rule zero-false-positive on idiomatic code.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set
+
+from ..engine import FileContext, Finding, Rule
+from .common import base_name, dotted_name, imported_names, local_names
+
+RULE = "jit-purity"
+
+_TRACER_LASTS = {"jit", "shard_map", "pmap", "pallas_call"}
+_IMPURE_PREFIXES = ("time.", "random.", "np.random.", "numpy.random.")
+_MUTATORS = {
+    "append",
+    "extend",
+    "insert",
+    "add",
+    "update",
+    "setdefault",
+    "pop",
+    "popitem",
+    "remove",
+    "discard",
+    "clear",
+    "appendleft",
+    "extendleft",
+}
+
+
+def _is_tracer(name: Optional[str]) -> bool:
+    return bool(name) and name.split(".")[-1] in _TRACER_LASTS
+
+
+def _traced_arg(call: ast.Call) -> Optional[ast.AST]:
+    """The function argument of a tracer call, unwrapping partial(...)."""
+    if not call.args:
+        return None
+    arg = call.args[0]
+    if isinstance(arg, ast.Call):
+        inner = dotted_name(arg.func)
+        if inner and inner.split(".")[-1] == "partial" and arg.args:
+            return arg.args[0]
+        return None
+    return arg
+
+
+class JitPurityRule(Rule):
+    name = RULE
+    description = (
+        "functions traced by jax.jit/shard_map/pmap/pallas_call must not "
+        "assign self.*, call time./random., or mutate closed-over containers"
+    )
+
+    def check_file(self, ctx: FileContext) -> List[Finding]:
+        findings: List[Finding] = []
+        checked: Set[int] = set()  # id() of FunctionDefs already checked
+
+        def walk_scope(body, scopes: List[Dict[str, ast.AST]]) -> None:
+            scope: Dict[str, ast.AST] = {}
+            for node in body:
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    scope[node.name] = node
+            frames = scopes + [scope]
+
+            def resolve(name: str) -> Optional[ast.AST]:
+                for frame in reversed(frames):
+                    if name in frame:
+                        return frame[name]
+                return None
+
+            def scan(node: ast.AST) -> None:
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    for dec in node.decorator_list:
+                        if _is_tracer(dotted_name(dec)) or (
+                            isinstance(dec, ast.Call) and _is_tracer(dotted_name(dec.func))
+                        ):
+                            self._check_pure(ctx, node, findings, checked)
+                    walk_scope(node.body, frames)
+                    return
+                if isinstance(node, ast.ClassDef):
+                    walk_scope(node.body, frames)
+                    return
+                if isinstance(node, ast.Call) and _is_tracer(dotted_name(node.func)):
+                    target = _traced_arg(node)
+                    if isinstance(target, ast.Name):
+                        fn = resolve(target.id)
+                        if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                            self._check_pure(ctx, fn, findings, checked)
+                    elif isinstance(target, ast.Lambda):
+                        self._check_pure(ctx, target, findings, checked)
+                for child in ast.iter_child_nodes(node):
+                    scan(child)
+
+            for node in body:
+                scan(node)
+
+        walk_scope(ctx.tree.body, [])
+        return findings
+
+    # ------------------------------------------------------------------
+    def _check_pure(
+        self,
+        ctx: FileContext,
+        fn: ast.AST,
+        findings: List[Finding],
+        checked: Set[int],
+    ) -> None:
+        if id(fn) in checked:
+            return
+        checked.add(id(fn))
+        name = getattr(fn, "name", "<lambda>")
+        body = fn.body if isinstance(fn.body, list) else [fn.body]
+        # Module aliases (np, jnp, functools...) are never "closed-over
+        # containers" — treat them as bound.
+        bound = local_names(fn) | imported_names(ctx.tree)
+        self._scan_body(ctx, name, body, bound, findings)
+
+    def _scan_body(
+        self,
+        ctx: FileContext,
+        name: str,
+        body: List[ast.AST],
+        bound: Set[str],
+        findings: List[Finding],
+    ) -> None:
+        def flag(node: ast.AST, what: str) -> None:
+            findings.append(
+                ctx.finding(RULE, node, f"traced function '{name}' {what}")
+            )
+
+        def scan(node: ast.AST) -> None:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                # nested helper: traced too; its locals shadow, outer
+                # locals become part of its (allowed) closure only if
+                # they are OUR locals — keep them in `bound`.
+                from .common import local_names as _ln
+
+                self._scan_body(ctx, name, node.body, bound | _ln(node), findings)
+                return
+            if isinstance(node, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+                targets = node.targets if isinstance(node, ast.Assign) else [node.target]
+                for tgt in targets:
+                    for leaf in ast.walk(tgt):
+                        if (
+                            isinstance(leaf, ast.Attribute)
+                            and isinstance(leaf.value, ast.Name)
+                            and leaf.value.id == "self"
+                            and isinstance(leaf.ctx, ast.Store)
+                        ):
+                            flag(leaf, f"assigns 'self.{leaf.attr}' at trace time")
+                        elif isinstance(leaf, ast.Subscript) and isinstance(
+                            leaf.ctx, ast.Store
+                        ):
+                            root = base_name(leaf.value)
+                            if root and root not in bound and root != "self":
+                                flag(
+                                    leaf,
+                                    f"mutates closed-over container '{root}' via "
+                                    "subscript store",
+                                )
+            if isinstance(node, ast.Call):
+                dn = dotted_name(node.func)
+                if dn and dn.startswith(_IMPURE_PREFIXES):
+                    flag(node, f"calls host-impure '{dn}' (runs once at trace time)")
+                elif (
+                    isinstance(node.func, ast.Attribute)
+                    and node.func.attr in _MUTATORS
+                ):
+                    root = base_name(node.func.value)
+                    if (
+                        root
+                        and root not in bound
+                        and root != "self"
+                        and isinstance(node.func.value, ast.Name)
+                    ):
+                        flag(
+                            node,
+                            f"mutates closed-over container '{root}."
+                            f"{node.func.attr}(...)'",
+                        )
+            for child in ast.iter_child_nodes(node):
+                scan(child)
+
+        for stmt in body:
+            scan(stmt)

@@ -1,0 +1,217 @@
+"""kernel-contract: every Pallas kernel package ships a checked reference.
+
+The kernel inventory's value is the exact-agreement story: each
+``kernels/<name>/`` package pairs its Pallas entry point with a
+jnp/numpy reference the tests oracle against. The rule enforces the
+package shape so a new kernel cannot silently skip it:
+
+  * ``ops.py`` and ``ref.py`` must both exist;
+  * the package ``__init__`` must re-export from BOTH ``.ops`` and
+    ``.ref`` (callers and tests import the pair from one place);
+  * every public ``<stem>_pallas`` function must have a ``<stem>_ref``
+    whose positional parameter names match exactly (keyword-only knobs
+    like ``interpret=``/block sizes are implementation detail and are
+    ignored);
+  * shared helpers (top-level defs of ``kernels/common.py`` and
+    ``kernels/program_eval.py``, e.g. ``pow2``, ``split_key_lanes``,
+    ``program_eval_rows``) must be imported, not re-implemented — names
+    compare with leading underscores stripped, so a private ``_pow2``
+    clone is still caught.
+
+This is a project rule: it needs the package view, and anchors package-
+level findings on the package ``__init__.py``.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from ..engine import FileContext, Finding, ProjectRule
+
+RULE = "kernel-contract"
+
+_SHARED_MODULES = ("common.py", "program_eval.py")
+
+
+def _positional_params(fn: ast.AST) -> Tuple[str, ...]:
+    a = fn.args
+    return tuple(p.arg for p in (*a.posonlyargs, *a.args))
+
+
+def _top_level_defs(tree: ast.Module):
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+def _parse(path: str) -> Optional[ast.Module]:
+    try:
+        with open(path, "r", encoding="utf-8") as fh:
+            return ast.parse(fh.read(), filename=path)
+    except (OSError, SyntaxError, ValueError):
+        return None
+
+
+class KernelContractRule(ProjectRule):
+    name = RULE
+    description = (
+        "kernels/<name>/ must ship ops.py + ref.py with matching "
+        "<stem>_pallas/<stem>_ref signatures, export both, and import "
+        "shared helpers instead of re-implementing them"
+    )
+
+    def check_file(self, ctx: FileContext) -> List[Finding]:
+        return []
+
+    def check_project(self, ctxs: Sequence[FileContext]) -> List[Finding]:
+        # A kernel package = a directory whose PARENT is named 'kernels'
+        # and which contains an __init__.py, discovered from the scanned
+        # file set (so the rule follows whatever tree it is pointed at).
+        packages: Dict[str, FileContext] = {}
+        ctx_by_abs: Dict[str, FileContext] = {}
+        for ctx in ctxs:
+            ap = os.path.abspath(ctx.path)
+            ctx_by_abs[ap] = ctx
+            d = os.path.dirname(ap)
+            if os.path.basename(os.path.dirname(d)) == "kernels":
+                pkg_init = os.path.join(d, "__init__.py")
+                if os.path.exists(pkg_init):
+                    packages.setdefault(d, None)
+        findings: List[Finding] = []
+        for pkg_dir in sorted(packages):
+            findings.extend(self._check_package(pkg_dir, ctx_by_abs))
+        return findings
+
+    # ------------------------------------------------------------------
+    def _ctx_or_parse(
+        self, path: str, ctx_by_abs: Dict[str, FileContext]
+    ) -> Tuple[Optional[FileContext], Optional[ast.Module]]:
+        ctx = ctx_by_abs.get(os.path.abspath(path))
+        if ctx is not None:
+            return ctx, ctx.tree
+        return None, _parse(path)
+
+    def _check_package(
+        self, pkg_dir: str, ctx_by_abs: Dict[str, FileContext]
+    ) -> List[Finding]:
+        findings: List[Finding] = []
+        pkg = os.path.basename(pkg_dir)
+        init_path = os.path.join(pkg_dir, "__init__.py")
+        init_ctx, init_tree = self._ctx_or_parse(init_path, ctx_by_abs)
+
+        def pkg_finding(message: str, ctx=None, node_or_line=1) -> Finding:
+            if ctx is not None:
+                return ctx.finding(RULE, node_or_line, message)
+            # Anchor on the __init__ when the offending file is not in
+            # the scanned set (or does not exist).
+            anchor = init_ctx
+            if anchor is not None:
+                return anchor.finding(RULE, 1, message)
+            return Finding(RULE, init_path, 1, message, snippet=f"kernels/{pkg}")
+
+        # (a) ops.py + ref.py exist
+        ops_path = os.path.join(pkg_dir, "ops.py")
+        ref_path = os.path.join(pkg_dir, "ref.py")
+        for req in (ops_path, ref_path):
+            if not os.path.exists(req):
+                findings.append(
+                    pkg_finding(
+                        f"kernel package '{pkg}' is missing {os.path.basename(req)} "
+                        "— every kernel ships a Pallas entry point (ops.py) AND a "
+                        "jnp/numpy reference (ref.py) the tests oracle against"
+                    )
+                )
+        if not (os.path.exists(ops_path) and os.path.exists(ref_path)):
+            return findings
+
+        # (b) __init__ exports from both .ops and .ref
+        if init_tree is not None:
+            modules = {
+                node.module
+                for node in ast.walk(init_tree)
+                if isinstance(node, ast.ImportFrom) and node.level >= 1
+            }
+            for missing in {"ops", "ref"} - modules:
+                findings.append(
+                    pkg_finding(
+                        f"kernel package '{pkg}' __init__ does not re-export from "
+                        f".{missing} — callers and tests import the pallas/ref "
+                        "pair from the package root",
+                        ctx=init_ctx,
+                        node_or_line=1,
+                    )
+                )
+
+        # (c) signature parity: <stem>_pallas in any package module needs a
+        # <stem>_ref in ref.py with identical positional parameter names.
+        ref_ctx, ref_tree = self._ctx_or_parse(ref_path, ctx_by_abs)
+        refs: Dict[str, Tuple[str, ...]] = {}
+        if ref_tree is not None:
+            for fn in _top_level_defs(ref_tree):
+                refs[fn.name] = _positional_params(fn)
+        module_files = sorted(
+            f
+            for f in os.listdir(pkg_dir)
+            if f.endswith(".py") and f not in {"__init__.py", "ref.py"}
+        )
+        for fname in module_files:
+            fpath = os.path.join(pkg_dir, fname)
+            mctx, mtree = self._ctx_or_parse(fpath, ctx_by_abs)
+            if mtree is None:
+                continue
+            for fn in _top_level_defs(mtree):
+                if not fn.name.endswith("_pallas") or fn.name.startswith("_"):
+                    continue
+                stem = fn.name[: -len("_pallas")]
+                ref_name = f"{stem}_ref"
+                if ref_name not in refs:
+                    findings.append(
+                        pkg_finding(
+                            f"'{fn.name}' has no '{ref_name}' in ref.py — every "
+                            "Pallas entry point pairs with a reference "
+                            "implementation of the same public signature",
+                            ctx=mctx,
+                            node_or_line=fn,
+                        )
+                    )
+                elif refs[ref_name] != _positional_params(fn):
+                    findings.append(
+                        pkg_finding(
+                            f"'{fn.name}' positional params "
+                            f"{_positional_params(fn)} != '{ref_name}' params "
+                            f"{refs[ref_name]} — the pallas/ref pair must agree "
+                            "so oracle tests can call either interchangeably",
+                            ctx=mctx,
+                            node_or_line=fn,
+                        )
+                    )
+
+        # (d) no re-implementation of shared kernel helpers
+        kernels_dir = os.path.dirname(pkg_dir)
+        shared: Set[str] = set()
+        for mod in _SHARED_MODULES:
+            tree = _parse(os.path.join(kernels_dir, mod))
+            if tree is not None:
+                shared.update(fn.name.lstrip("_") for fn in _top_level_defs(tree))
+        if shared:
+            for fname in sorted(
+                f for f in os.listdir(pkg_dir) if f.endswith(".py")
+            ):
+                fpath = os.path.join(pkg_dir, fname)
+                mctx, mtree = self._ctx_or_parse(fpath, ctx_by_abs)
+                if mtree is None:
+                    continue
+                for fn in _top_level_defs(mtree):
+                    if fn.name.lstrip("_") in shared:
+                        findings.append(
+                            pkg_finding(
+                                f"'{fn.name}' re-implements shared kernel helper "
+                                f"'{fn.name.lstrip('_')}' — import it from "
+                                "kernels/common.py / kernels/program_eval.py "
+                                "instead of cloning it per package",
+                                ctx=mctx,
+                                node_or_line=fn,
+                            )
+                        )
+        return findings

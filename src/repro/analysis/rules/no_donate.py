@@ -1,0 +1,52 @@
+"""no-donate-in-plane: the plane programs must never donate buffers.
+
+``DistIngestPlane.publish()`` (PR 4) hands out ZERO-COPY snapshots: the
+published DistStore aliases the plane's sealed device buffers, and every
+in-flight QueryRun pins such a snapshot for its whole lifetime. A jitted
+step compiled with ``donate_argnums``/``donate_argnames`` lets XLA
+reuse an input buffer for its output — which would scribble over arrays
+a published snapshot still reads. The single allowed donation (the
+append step's memtable slab, which publish() never aliases — it seals a
+sorted COPY) carries an inline suppression with its justification; any
+new donation in ``core/dist_ingest.py`` / ``core/dist_query.py`` is a
+correctness bug until proven otherwise.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from ..engine import FileContext, Finding, Rule, norm_path
+
+RULE = "no-donate-in-plane"
+
+_PLANE_FILES = {"repro/core/dist_ingest.py", "repro/core/dist_query.py"}
+_DONATE_KEYWORDS = {"donate_argnums", "donate_argnames"}
+
+
+class NoDonateInPlaneRule(Rule):
+    name = RULE
+    description = (
+        "donate_argnums/donate_argnames are forbidden in the plane modules — "
+        "publish() zero-copy snapshots alias plane buffers"
+    )
+
+    def check_file(self, ctx: FileContext) -> List[Finding]:
+        if norm_path(ctx.path) not in _PLANE_FILES:
+            return []
+        findings: List[Finding] = []
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            for kw in node.keywords:
+                if kw.arg in _DONATE_KEYWORDS:
+                    findings.append(
+                        ctx.finding(
+                            RULE,
+                            kw.value,
+                            f"'{kw.arg}' in a plane program: published snapshots "
+                            "alias plane buffers zero-copy, so donation lets XLA "
+                            "overwrite arrays an in-flight query still reads",
+                        )
+                    )
+        return findings

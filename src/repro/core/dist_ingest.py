@@ -179,16 +179,16 @@ class DistIngestPlane:
         self.agg_bucket_s = int(agg_bucket_s)
         self.kernel_backend = kernel_backend
         self.families: Tuple[_Family, ...] = self._make_families()
-        self._steps: Dict[str, object] = {}
+        self._steps: Dict[str, object] = {}  # guarded-by: _lock
         # Exact host-side mirrors of the device memtable fills and run-slot
         # counts (see module docstring) — updated in lockstep with the
         # device programs' own guards, never read back from the device.
         # One mirror serves all families: ix/ag fills are exactly
         # n_indexed x the event fill per tablet.
-        self._fill = np.zeros(self.n_tablets, np.int64)
-        self._runs_host = np.zeros(self.n_tablets, np.int32)
-        self._dirty = True
-        self._published: Optional[DistStore] = None
+        self._fill = np.zeros(self.n_tablets, np.int64)  # guarded-by: _lock
+        self._runs_host = np.zeros(self.n_tablets, np.int32)  # guarded-by: _lock
+        self._dirty = True  # guarded-by: _lock
+        self._published: Optional[DistStore] = None  # guarded-by: _lock
         # Generation tag per LSM level (shared by all families — they move
         # in lockstep): appends bump "mem"; a minor flush bumps "mem" +
         # "runs"; any fold into the base (full major or one compact_step
@@ -197,9 +197,9 @@ class DistIngestPlane:
         # fold-only increment ALIASES the previous sealed arrays instead
         # of re-running the seal sort — snapshots never pay per-increment
         # device work for levels the increment didn't touch.
-        self._gen: Dict[str, int] = {"mem": 0, "runs": 0, "base": 0}
+        self._gen: Dict[str, int] = {"mem": 0, "runs": 0, "base": 0}  # guarded-by: _lock
         # (mem generation, sealed arrays, seal_rows) of the last seal run.
-        self._sealed_cache: Optional[Tuple[int, Dict[str, jax.Array], int]] = None
+        self._sealed_cache: Optional[Tuple[int, Dict[str, jax.Array], int]] = None  # guarded-by: _lock
         # All plane counters live on a PRIVATE metrics registry (plane
         # instances in one process never share cells); the legacy names
         # (seal_events, blocked_seconds, fold_events, ...) remain as
@@ -229,7 +229,7 @@ class DistIngestPlane:
         )
         # Serve-plane sessions report through the same telemetry structure
         # as ingest writers (record_session); key = session id.
-        self.session_stats: Dict[int, Dict[str, float]] = {}
+        self.session_stats: Dict[int, Dict[str, float]] = {}  # guarded-by: _lock
         # Concurrent DistBatchWriters (paper: many parallel ingest clients)
         # share one plane: the lock serializes state/counter updates, like
         # the host Tablet's lock. Writers blocked here while another's
@@ -238,7 +238,7 @@ class DistIngestPlane:
         # (ingest_append / publish_seal / fold_increment / ...) for the
         # occupancy report (repro.obs.occupancy_snapshot).
         self._lock = OwnedLock("plane_lock")
-        self.state = self._init_state()
+        self.state = self._init_state()  # guarded-by: _lock
 
     # ------------------------------------------------- legacy metric views
     # Thin views over the plane registry, kept so six PRs of tests and
@@ -357,7 +357,7 @@ class DistIngestPlane:
             for name, arr in host.items()
         }
 
-    def _sub(self, names) -> Dict[str, jax.Array]:
+    def _sub(self, names) -> Dict[str, jax.Array]:  # holds: _lock
         return {n: self.state[n] for n in names}
 
     # ------------------------------------------------------ step builders
@@ -368,7 +368,7 @@ class DistIngestPlane:
             names += [f"{p}_mem_k", f"{p}_mem_c", f"{p}_mem_n", f"{p}_overflow"]
         return names
 
-    def _append_step(self):
+    def _append_step(self):  # holds: _lock
         if "append" in self._steps:
             return self._steps["append"]
         mesh, tl = self.mesh, self.tablets_per_device
@@ -450,7 +450,11 @@ class DistIngestPlane:
             out_specs=self._specs(names),
             check_rep=False,
         )
-        self._steps["append"] = jax.jit(smapped, donate_argnums=(0,))
+        # The ONE allowed donation in the planes: the append step donates
+        # only the live memtable slabs, which publish() never aliases — a
+        # snapshot seals a sorted COPY of the memtable (_sort_level), so
+        # no published DistStore can see the donated buffers.
+        self._steps["append"] = jax.jit(smapped, donate_argnums=(0,))  # reprolint: disable=no-donate-in-plane
         return self._steps["append"]
 
     def _minor_names(self):
@@ -463,7 +467,7 @@ class DistIngestPlane:
             ]
         return names
 
-    def _minor_step(self):
+    def _minor_step(self):  # holds: _lock
         if "minor" in self._steps:
             return self._steps["minor"]
         mesh, k = self.mesh, self.max_runs
@@ -517,7 +521,7 @@ class DistIngestPlane:
             base += [f"{p}_base_k", f"{p}_base_c", f"{p}_base_n"]
         return run, base
 
-    def _major_step(self):
+    def _major_step(self):  # holds: _lock
         if "major" in self._steps:
             return self._steps["major"]
         from ..kernels.merge_runs import merge_sorted_device
@@ -602,7 +606,7 @@ class DistIngestPlane:
         self._steps["major"] = jax.jit(smapped)
         return self._steps["major"]
 
-    def _fold_one_step(self):
+    def _fold_one_step(self):  # holds: _lock
         """One INCREMENT of major compaction: every tablet folds its TOP
         run slot (n_runs - 1) into its base — one bounded 2-way merge of
         O(capacity + mem_rows) rows per family via the resumable
@@ -698,7 +702,7 @@ class DistIngestPlane:
         log2-bounded, clamped to the slab capacity."""
         return int(min(max(_pow2(max(fill_max, 1)), 8), self.mem_rows))
 
-    def _seal_step(self, seal_rows: int):
+    def _seal_step(self, seal_rows: int):  # holds: _lock
         """FILL-BOUNDED sorted snapshot of the memtables — the only
         per-publish device work. Only the first `seal_rows` slots of each
         event memtable (scaled per family: ix/ag slabs are n_indexed x
@@ -764,7 +768,7 @@ class DistIngestPlane:
         return self._steps[key]
 
     # ------------------------------------------------------------- ingest
-    def _run_minor(self) -> None:
+    def _run_minor(self) -> None:  # holds: _lock
         step = self._minor_step()
         self.state.update(step(self._sub(self._minor_names())))
         # Mirror the device guard exactly: a tablet flushes iff it holds
@@ -776,7 +780,7 @@ class DistIngestPlane:
             self._gen["mem"] += 1  # memtables drained
             self._gen["runs"] += 1  # run slabs gained a slot
 
-    def _run_major(self) -> None:
+    def _run_major(self) -> None:  # holds: _lock
         step = self._major_step()
         run_names, base_names = self._major_names()
         out_r, out_b = step(self._sub(run_names), self._sub(base_names))
@@ -787,7 +791,7 @@ class DistIngestPlane:
             self._gen["base"] += 1
         self._runs_host[:] = 0
 
-    def _run_fold_one(self) -> None:
+    def _run_fold_one(self) -> None:  # holds: _lock
         """One increment: every tablet with runs folds its top run slot
         into its base (see _fold_one_step). Host run mirror drops by one
         where it was positive — exactly the device guard."""
@@ -818,15 +822,19 @@ class DistIngestPlane:
         rts = np.asarray(rts, np.int32)
         cols = np.asarray(cols, np.int32)
         tab = np.asarray(tab, np.int32)
-        append = self._append_step()
         with self._lock.hold("ingest_append"):
+            # Build/fetch the jitted step UNDER the lock: _append_step
+            # caches into the shared self._steps dict, and two writers'
+            # first flushes racing here would otherwise trace twice (or
+            # corrupt the dict) — found by reprolint's guarded-by rule.
+            append = self._append_step()
             with span("ingest.append", cat="ingest", rows=n, writer=writer_id) as sp:
                 blocked = self._ingest_locked(append, rts, cols, tab, n)
                 sp.set(blocked_s=blocked)
             self._m_blocked.inc(blocked, writer=writer_id)
             return blocked
 
-    def _ingest_locked(self, append, rts, cols, tab, n: int) -> float:
+    def _ingest_locked(self, append, rts, cols, tab, n: int) -> float:  # holds: _lock
         s = self.state
         blocked = 0.0
         b = self.append_rows

@@ -40,7 +40,6 @@ single-pod and multi-pod meshes as the extra `llcysa-store` cells.
 """
 from __future__ import annotations
 
-import threading
 import time
 from dataclasses import dataclass, field
 from typing import Dict, Optional, Tuple
@@ -57,7 +56,7 @@ from .filter import FilterProgram, compile_tree
 from .iterators import AggregateResult, AggregateSpec, ResolvedGrouping, resolve_grouping
 from .planner import QueryPlan, plan_query
 from .store import EventStore
-from ..obs import span
+from ..obs import OwnedLock, span
 
 INVALID_TS = jnp.int32(-1)
 _I32_MAX = np.iinfo(np.int32).max
@@ -1085,6 +1084,7 @@ class QueryRun:
             return self._single_done
         return self.batcher.done
 
+    # reprolint: hot-path — one serve-plane turn == N of these steps
     def step(self) -> Optional[DistBatch]:
         """Execute the next adaptive batch and return it (lo/hi carry the
         batch's time sub-range); None once the run is done — provably
@@ -1154,12 +1154,14 @@ class DistQueryProcessor:
         self.w = w
         self.index_postings = index_postings
         self.index_rows = index_rows
-        self._step_cache: Dict[Tuple, object] = {}
+        self._step_cache: Dict[Tuple, object] = {}  # guarded-by: _cache_lock
         # Re-entrancy: many serve-plane sessions step queries through ONE
         # processor concurrently. The cache lock guards the jit-step dict;
         # per-query state (plan, batcher, stats, the pinned snapshot)
-        # lives in each QueryRun, never on self.
-        self._cache_lock = threading.Lock()
+        # lives in each QueryRun, never on self. OwnedLock (not a bare
+        # threading.Lock) so first-trace stalls show up attributed in the
+        # occupancy report next to the plane and device locks.
+        self._cache_lock = OwnedLock("step_cache_lock")
 
     def _sync(self) -> DistStore:
         """Refresh to the plane's latest published snapshot and return it.
@@ -1186,7 +1188,7 @@ class DistQueryProcessor:
                 d.ag_mem_k, d.ag_mem_c, d.ag_mem_n)
 
     def _cached_step(self, key: Tuple, build):
-        with self._cache_lock:
+        with self._cache_lock.hold("step_cache"):
             if key not in self._step_cache:
                 self._step_cache[key] = build()
             return self._step_cache[key]
@@ -1203,6 +1205,7 @@ class DistQueryProcessor:
     def dictionaries(self):
         return self.store.dictionaries
 
+    # reprolint: hot-path
     def agg_count(self, field: str, value: str, t_start: int, t_stop: int) -> int:
         """Occurrences of field=value in the bucketed time range, from the
         DISTRIBUTED aggregate tablets (psum of per-tablet, per-level
@@ -1210,6 +1213,7 @@ class DistQueryProcessor:
         host store, fresh through unfolded runs."""
         return self._agg_count_on(self._sync(), field, value, t_start, t_stop)
 
+    # reprolint: hot-path — planning reads densities per condition per query
     def _agg_count_on(self, d: DistStore, field: str, value: str,
                       t_start: int, t_stop: int) -> int:
         """agg_count against ONE pinned snapshot (no re-publish): planning
@@ -1235,8 +1239,9 @@ class DistQueryProcessor:
         bs = d.agg_bucket_s
         b0 = int(t_start) // bs
         b1 = int(t_stop) // bs
-        lo = int(keypack.pack_agg_key(fid, code, b0))
-        hi = int(keypack.pack_agg_key(fid, code, b1)) + 1
+        # keypack packs host-side numpy scalars — no device value, no sync.
+        lo = int(keypack.pack_agg_key(fid, code, b0))  # reprolint: disable=no-sync-in-hot-path
+        hi = int(keypack.pack_agg_key(fid, code, b1)) + 1  # reprolint: disable=no-sync-in-hot-path
         step = self._cached_step(
             ("density", d.has_runs),
             lambda: build_density_step(d.mesh, runs=d.has_runs),
@@ -1262,6 +1267,7 @@ class DistQueryProcessor:
         )
         return step, (opc, a0, a1, cs)
 
+    # reprolint: hot-path — the per-batch device program of every scan scheme
     def scan_range(self, tree, t0: int, t1: int, dist: Optional[DistStore] = None):
         """One range scan across all tablets and all LSM levels. Returns
         (global_count, top-k rows per tablet as (ts, cols) numpy arrays).
@@ -1275,16 +1281,22 @@ class DistQueryProcessor:
         args = (d.rev_ts, d.cols, d.counts)
         if d.has_runs:
             args += self._ev_levels(d)
+        # Materialize INSIDE the span, each wait fenced: the span record
+        # is emitted at __exit__, so a sync after the block would charge
+        # this batch's device wait to nothing (and np.asarray on a device
+        # array is exactly such a sync) — found by reprolint's
+        # no-sync-in-hot-path rule.
         with span("query.scan_range", cat="query") as sp:
             total, top_ts, top_cols = step(
                 *args,
                 jnp.asarray(opc), jnp.asarray(a0), jnp.asarray(a1), jnp.asarray(cs),
                 rts_lo, rts_hi,
             )
-            sp.fence(total)
-        ts = np.asarray(top_ts)
+            count = int(sp.fence(total))
+            ts = np.asarray(sp.fence(top_ts))
+            cols = np.asarray(sp.fence(top_cols))
         valid = ts != int(INVALID_TS)
-        return int(total), keypack.unrev_ts(ts[valid]), np.asarray(top_cols)[valid]
+        return count, keypack.unrev_ts(ts[valid]), cols[valid]
 
     # -------------------------------------------------------- index path
     def _index_step(self, prog: FilterProgram, n_conds: int, combine: str,
@@ -1325,6 +1337,7 @@ class DistQueryProcessor:
             args += self._ev_levels(d) + self._ix_levels(d)
         return args
 
+    # reprolint: hot-path — the per-batch device program of the index schemes
     def scan_index_range(self, plan: QueryPlan, tree, t0: int, t1: int,
                          dist: Optional[DistStore] = None):
         """One index-mode range across all tablets (paper Fig 2 on-mesh):
@@ -1340,19 +1353,25 @@ class DistQueryProcessor:
             prog, len(plan.index_conds), plan.combine, d
         )
         lo, hi = self._cond_ranges(plan, t0, t1)
-        total, top_ts, top_cols, truncated, cands = step(
-            *self._index_args(d),
-            jnp.asarray(opc), jnp.asarray(a0), jnp.asarray(a1), jnp.asarray(cs),
-            jnp.asarray(lo), jnp.asarray(hi),
-        )
-        ts = np.asarray(top_ts)
+        # Span + fenced materialization (this path had NEITHER: its
+        # device wait was invisible to tracing and charged to the caller
+        # as host time — found by reprolint's no-sync-in-hot-path rule).
+        with span("query.scan_index_range", cat="query") as sp:
+            total, top_ts, top_cols, truncated, cands = step(
+                *self._index_args(d),
+                jnp.asarray(opc), jnp.asarray(a0), jnp.asarray(a1), jnp.asarray(cs),
+                jnp.asarray(lo), jnp.asarray(hi),
+            )
+            count = int(sp.fence(total))
+            ts = np.asarray(sp.fence(top_ts))
+            cols = np.asarray(sp.fence(top_cols))
+            n_trunc = int(sp.fence(truncated))
+            n_cands = int(sp.fence(cands))
         valid = ts != int(INVALID_TS)
-        return (
-            int(total), keypack.unrev_ts(ts[valid]), np.asarray(top_cols)[valid],
-            int(truncated), int(cands),
-        )
+        return (count, keypack.unrev_ts(ts[valid]), cols[valid], n_trunc, n_cands)
 
     # ---------------------------------------------------- planned execution
+    # reprolint: hot-path
     def _exec_range(self, plan: QueryPlan, tree, t0: int, t1: int, stats=None,
                     dist: Optional[DistStore] = None) -> DistBatch:
         d = dist if dist is not None else self.dist
@@ -1462,6 +1481,7 @@ class DistQueryProcessor:
         gids = np.flatnonzero(live).astype(np.int64)
         return AggregateResult(grouping, gids, aggs[live], cnts[live])
 
+    # reprolint: hot-path — one-shot aggregate turns run through here
     def aggregate_range(
         self, spec: AggregateSpec, tree, t0: int, t1: int,
         use_index: bool = True, stats=None, dist: Optional[DistStore] = None,

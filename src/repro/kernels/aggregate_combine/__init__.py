@@ -1,1 +1,3 @@
 from .ops import combine_sorted_counts  # noqa: F401
+from .ref import combine_blocks_ref, combine_sorted_ref  # noqa: F401
+from .aggregate_combine import BLOCK, combine_blocks_pallas  # noqa: F401

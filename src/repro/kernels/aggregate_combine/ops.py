@@ -11,9 +11,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..common import split_key_lanes as _split
+from ..common import pow2 as _pow2, split_key_lanes as _split
 from .aggregate_combine import BLOCK, combine_blocks_pallas
-from .ref import combine_sorted_ref
+from .ref import combine_blocks_ref
 
 
 def combine_sorted_counts(
@@ -33,15 +33,13 @@ def combine_sorted_counts(
         # Pow2-bucket to avoid per-shape retraces. Pad keys with INT64_MAX
         # pairs and zero counts: they form trailing segments summing to 0
         # that the [:n] slice drops.
-        n_pad = 1
-        while n_pad < n:
-            n_pad *= 2
+        n_pad = _pow2(n)
         if n_pad != n:
             mx = np.iinfo(np.int32).max
             hi = np.concatenate([hi, np.full(n_pad - n, mx, np.int32)])
             lo = np.concatenate([lo, np.full(n_pad - n, mx, np.int32)])
             counts = np.concatenate([counts, np.zeros(n_pad - n, np.int32)])
-        heads, sums = combine_sorted_ref(jnp.asarray(hi), jnp.asarray(lo), jnp.asarray(counts))
+        heads, sums = combine_blocks_ref(jnp.asarray(hi), jnp.asarray(lo), jnp.asarray(counts))
         heads = np.asarray(heads)[:n]
         sums = np.asarray(sums)[:n]
         return keys[heads], sums[heads]

@@ -7,8 +7,12 @@ import jax.numpy as jnp
 
 
 @jax.jit
-def combine_sorted_ref(hi, lo, cnt):
-    """Returns (heads bool (n,), per-segment total at head positions)."""
+def combine_blocks_ref(hi, lo, cnt):
+    """Returns (heads bool (n,), per-segment total at head positions).
+
+    Signature-paired with combine_blocks_pallas (kernel-contract); the
+    reference computes exact per-segment totals in one pass where the
+    kernel produces tile-local sums that ops.py stitches."""
     n = hi.shape[0]
     prev_hi = jnp.concatenate([jnp.full((1,), -1, hi.dtype), hi[:-1]])
     prev_lo = jnp.concatenate([jnp.full((1,), -1, lo.dtype), lo[:-1]])
@@ -18,3 +22,6 @@ def combine_sorted_ref(hi, lo, cnt):
     sums = jax.ops.segment_sum(cnt.astype(jnp.int32), seg, num_segments=n)
     at_head = jnp.where(heads, jnp.take(sums, seg, axis=0), 0)
     return heads, at_head
+
+
+combine_sorted_ref = combine_blocks_ref  # legacy name

@@ -8,6 +8,16 @@ from typing import Tuple
 import numpy as np
 
 
+def pow2(n: int) -> int:
+    """Smallest power of two >= n. Every kernel pads shapes to pow2
+    buckets to bound the retrace count; one definition, not one clone
+    per package (enforced by reprolint's kernel-contract rule)."""
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
 def split_key_lanes(keys: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
     """int64 packed keys -> (hi, lo) int32 lanes. TPU-native carry format:
     kernels only ever see 32-bit lanes; the lo lane's bit pattern is

@@ -1,1 +1,3 @@
-from .ops import filter_scan  # noqa: F401
+from .ops import filter_scan, pad_program  # noqa: F401
+from .ref import filter_scan_ref  # noqa: F401
+from .filter_scan import BLOCK_ROWS, LANE, filter_scan_pallas  # noqa: F401

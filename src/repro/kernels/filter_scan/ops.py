@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..common import pow2 as _pow2
 from ..program_eval import OP_NOP
 
 if TYPE_CHECKING:  # runtime import would cycle: core/__init__ needs kernels
@@ -24,13 +25,6 @@ from .ref import filter_scan_ref
 
 def _bucket(n: int, b: int) -> int:
     return max(((n + b - 1) // b) * b, b)
-
-
-def _pow2(n: int) -> int:
-    p = 1
-    while p < n:
-        p *= 2
-    return p
 
 
 def pad_program(prog: FilterProgram) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:

@@ -14,18 +14,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..common import split_key_lanes as _split
+from ..common import pow2 as _pow2, split_key_lanes as _split
 from .merge_intersect import BLOCK, intersect_mask_pallas
 from .ref import intersect_mask_ref
 
 MAX_VMEM_KEYS = 1 << 20  # 2 lanes * 4 B * 1M = 8 MiB resident in VMEM
-
-
-def _pow2(n: int) -> int:
-    p = 1
-    while p < n:
-        p *= 2
-    return p
 
 
 def intersect_sorted(a: np.ndarray, b: np.ndarray, backend: str = "auto") -> np.ndarray:

@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..common import split_key_lanes
+from ..common import pow2 as _pow2, split_key_lanes
 from .merge_runs import merge_ranks_pallas
 from .ref import merge_ranks_keys, merge_ranks_ref
 
@@ -27,13 +27,6 @@ from .ref import merge_ranks_keys, merge_ranks_ref
 MAX_VMEM_KEYS = 1 << 20
 
 _SENTINEL64 = np.iinfo(np.int64).max
-
-
-def _pow2(n: int) -> int:
-    p = 1
-    while p < n:
-        p *= 2
-    return p
 
 
 def merge_sorted_runs(

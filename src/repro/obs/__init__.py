@@ -32,6 +32,7 @@ from .export import (
     chrome_trace,
     metrics_snapshot,
     summary,
+    to_prometheus_text,
     validate_chrome_trace,
     write_chrome_trace,
     write_metrics_json,
@@ -57,6 +58,7 @@ __all__ = [
     "occupancy_snapshot",
     "span",
     "summary",
+    "to_prometheus_text",
     "traced",
     "validate_chrome_trace",
     "write_chrome_trace",

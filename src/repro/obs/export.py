@@ -7,12 +7,17 @@ summary table.
 - :func:`chrome_trace` / :func:`write_chrome_trace` — Chrome trace-event
   format (``{"traceEvents": [...]}`` with "X" complete events, µs
   timestamps), loadable at https://ui.perfetto.dev.
+- :func:`to_prometheus_text` — Prometheus text exposition format
+  (version 0.0.4): HELP/TYPE headers, one sample line per label cell,
+  histograms as cumulative ``_bucket{le=...}`` series plus ``_sum`` /
+  ``_count``. Serve it from any HTTP handler to scrape the plane.
 - :func:`summary` — a plain-text table for terminal use.
 """
 
 from __future__ import annotations
 
 import json
+import re
 from typing import Any, Dict, List, Optional
 
 from .occupancy import occupancy_snapshot
@@ -23,6 +28,7 @@ __all__ = [
     "chrome_trace",
     "metrics_snapshot",
     "summary",
+    "to_prometheus_text",
     "validate_chrome_trace",
     "write_chrome_trace",
     "write_metrics_json",
@@ -141,6 +147,90 @@ def validate_chrome_trace(doc: Dict[str, Any]) -> List[str]:
         if parent is not None and parent not in sids:
             problems.append(f"event {i}: parent sid {parent} not present")
     return problems
+
+
+_PROM_NAME_BAD = re.compile(r"[^a-zA-Z0-9_:]")
+
+
+def _prom_name(name: str) -> str:
+    name = _PROM_NAME_BAD.sub("_", name)
+    if name and name[0].isdigit():
+        name = "_" + name
+    return name
+
+
+def _prom_escape(v: str) -> str:
+    return v.replace("\\", "\\\\").replace('"', '\\"').replace("\n", "\\n")
+
+
+def _prom_labels(key, extra: Optional[str] = None) -> str:
+    """Render a registry LabelKey (sorted (k, v) tuple) as {k="v",...};
+    `extra` is a pre-rendered pair appended last (the histogram `le`)."""
+    parts = [f'{_prom_name(k)}="{_prom_escape(v)}"' for k, v in key]
+    if extra is not None:
+        parts.append(extra)
+    return "{" + ",".join(parts) + "}" if parts else ""
+
+
+def _prom_val(v: float) -> str:
+    f = float(v)
+    if f != f:  # NaN
+        return "NaN"
+    if f in (float("inf"), float("-inf")):
+        return "+Inf" if f > 0 else "-Inf"
+    if f == int(f) and abs(f) < 1e15:
+        return str(int(f))
+    return repr(f)
+
+
+def to_prometheus_text(registry=None) -> str:
+    """Render metrics in the Prometheus text exposition format (0.0.4).
+
+    With `registry` given, exports that one registry; with None, exports
+    every live registry (metric names deduped first-wins, matching the
+    Prometheus rule that a name appears in one HELP/TYPE group only —
+    duplicate names across planes keep only the first registry's cells,
+    same precedence as :func:`metrics_snapshot`'s name suffixing).
+
+    Counters export as-is (names are already `_total`-style by repo
+    convention), gauges as gauges, histograms as cumulative
+    `_bucket{le="..."}` series plus `_sum` and `_count` — the registry's
+    per-bucket counts are partial sums, so the cumulative series here is
+    exact, including the `+Inf` overflow bucket.
+    """
+    from .registry import Histogram
+
+    regs = [registry] if registry is not None else all_registries()
+    lines: List[str] = []
+    seen: set = set()
+    for reg in regs:
+        for m in reg.metrics():
+            name = _prom_name(m.name)
+            if name in seen:
+                continue
+            seen.add(name)
+            cells = m.cells()
+            if not cells:
+                continue
+            if m.help:
+                lines.append(f"# HELP {name} {_prom_escape(m.help)}")
+            lines.append(f"# TYPE {name} {'histogram' if m.kind == 'histogram' else m.kind}")
+            if isinstance(m, Histogram):
+                for key in sorted(cells):
+                    cell = cells[key]
+                    cum = 0
+                    for edge, n in zip(m.edges, cell["buckets"]):
+                        cum += n
+                        le = f'le="{_prom_val(edge)}"'
+                        lines.append(f"{name}_bucket{_prom_labels(key, le)} {cum}")
+                    inf_le = 'le="+Inf"'
+                    lines.append(f"{name}_bucket{_prom_labels(key, inf_le)} {cell['count']}")
+                    lines.append(f"{name}_sum{_prom_labels(key)} {_prom_val(cell['sum'])}")
+                    lines.append(f"{name}_count{_prom_labels(key)} {cell['count']}")
+            else:
+                for key in sorted(cells):
+                    lines.append(f"{name}{_prom_labels(key)} {_prom_val(cells[key])}")
+    return "\n".join(lines) + "\n" if lines else ""
 
 
 def _fmt_labels(key: str) -> str:

@@ -17,6 +17,14 @@ Parent linkage is thread-local: the innermost open span on the current
 thread is the parent of the next one opened. Records accumulate in a
 bounded deque and export to Chrome trace-event JSON via
 repro.obs.export.chrome_trace (loadable in Perfetto).
+
+SAMPLING: ``enable(sample=1/N)`` keeps every Nth ROOT span (per-process
+deterministic counter) and drops the rest; children always follow their
+root's fate, so sampled traces contain only complete trees — never a
+child whose parent is missing. Sampled-out spans cost one thread-local
+read and return a no-op singleton whose ``fence`` passes values through
+WITHOUT blocking (same contract as disabled tracing), keeping always-on
+tracing affordable under sustained serve-plane load.
 """
 
 from __future__ import annotations
@@ -58,6 +66,32 @@ class _NullSpan:
 
 
 _NULL = _NullSpan()
+
+
+class _DropSpan:
+    """Returned for sampled-out spans. Tracks a thread-local drop depth so
+    every span opened UNDER a dropped root is dropped too (a sampled
+    trace never contains an orphaned child). fence() passes through
+    without blocking, like the disabled-tracing singleton."""
+
+    __slots__ = ("tracer",)
+
+    def __init__(self, tracer: "Tracer") -> None:
+        self.tracer = tracer
+
+    def __enter__(self) -> "_DropSpan":
+        tls = self.tracer._tls
+        tls.drop_depth = getattr(tls, "drop_depth", 0) + 1
+        return self
+
+    def __exit__(self, *exc: object) -> None:
+        self.tracer._tls.drop_depth -= 1
+
+    def fence(self, x: object) -> object:
+        return x
+
+    def set(self, **kw: object) -> None:
+        return None
 
 
 class _Span:
@@ -113,19 +147,41 @@ class _Span:
 class Tracer:
     def __init__(self, maxlen: int = 65536) -> None:
         self.enabled = False
+        self.sample_n = 1  # keep every Nth root span (1 = keep all)
         self.records: Deque[Dict[str, Any]] = deque(maxlen=maxlen)
         self.epoch = time.perf_counter()
         self._sid = 0
+        self._root_count = 0
         self._sid_lock = threading.Lock()
         self._tls = threading.local()
         self._threads: Dict[int, str] = {}
         self._threads_lock = threading.Lock()
+        self._drop = _DropSpan(self)
 
     # -- internals -------------------------------------------------------
     def _next_sid(self) -> int:
         with self._sid_lock:
             self._sid += 1
             return self._sid
+
+    def set_sample(self, sample: Optional[float]) -> None:
+        """sample = fraction of root spans to keep (1/N); None or >= 1
+        keeps everything. Resets the root counter, so every enable()
+        starts a fresh deterministic period (the first root is always
+        kept) and tests can assert exactly which roots survive."""
+        with self._sid_lock:
+            self._root_count = 0
+        if sample is None or sample >= 1:
+            self.sample_n = 1
+        elif sample <= 0:
+            raise ValueError(f"sample must be in (0, 1]: {sample}")
+        else:
+            self.sample_n = max(1, int(round(1.0 / sample)))
+
+    def _sample_root(self) -> bool:
+        with self._sid_lock:
+            self._root_count += 1
+            return self._root_count % self.sample_n == 1
 
     def _stack(self) -> List[_Span]:
         st = getattr(self._tls, "stack", None)
@@ -158,6 +214,11 @@ class Tracer:
     def span(self, name: str, cat: str = "", **args: object):
         if not self.enabled:
             return _NULL
+        if self.sample_n > 1:
+            if getattr(self._tls, "drop_depth", 0) > 0:
+                return self._drop  # child of a dropped root
+            if not self._stack() and not self._sample_root():
+                return self._drop  # root not sampled this period
         return _Span(self, name, cat, dict(args))
 
     def add_complete(
@@ -207,10 +268,11 @@ def get_tracer() -> Tracer:
 
 
 def span(name: str, cat: str = "", **args: object):
-    """Open a span on the global tracer (no-op singleton when disabled)."""
+    """Open a span on the global tracer (no-op singleton when disabled;
+    drop singleton when sampled out — see module docstring)."""
     if not _tracer.enabled:
         return _NULL
-    return _Span(_tracer, name, cat, dict(args))
+    return _tracer.span(name, cat, **args)
 
 
 def traced(name: Optional[str] = None, cat: str = "") -> Callable:
@@ -223,7 +285,7 @@ def traced(name: Optional[str] = None, cat: str = "") -> Callable:
         def wrapper(*a: object, **kw: object):
             if not _tracer.enabled:
                 return fn(*a, **kw)
-            with _Span(_tracer, label, cat, {}):
+            with _tracer.span(label, cat):
                 return fn(*a, **kw)
 
         return wrapper
@@ -231,12 +293,16 @@ def traced(name: Optional[str] = None, cat: str = "") -> Callable:
     return deco
 
 
-def enable() -> None:
+def enable(sample: Optional[float] = None) -> None:
+    """Turn tracing on. ``sample=1/N`` keeps every Nth root span (children
+    follow their root); omitted or >= 1 keeps everything."""
+    _tracer.set_sample(sample)
     _tracer.enabled = True
 
 
 def disable() -> None:
     _tracer.enabled = False
+    _tracer.set_sample(None)
 
 
 def enabled() -> bool:

@@ -87,9 +87,9 @@ class FairScheduler:
 
     def __init__(self, quantum: Optional[TurnQuantum] = None):
         self.quantum = quantum or TurnQuantum()
-        self._fresh: deque = deque()  # no first batch delivered yet
-        self._cont: deque = deque()  # continuing streams, round-robin
-        self._closed = False
+        self._fresh: deque = deque()  # guarded-by: _cv — no first batch yet
+        self._cont: deque = deque()  # guarded-by: _cv — continuing, round-robin
+        self._closed = False  # guarded-by: _cv
         self._cv = threading.Condition()
         # Per-turn instrumentation ring (starvation guard): the service
         # logs every served turn here — `first` marks a session's
@@ -97,7 +97,7 @@ class FairScheduler:
         # compactor must bound (no first result may park behind more
         # than ~one compaction increment). Bounded so a long-lived
         # service never grows it without limit.
-        self.turn_log: deque = deque(maxlen=4096)
+        self.turn_log: deque = deque(maxlen=4096)  # guarded-by: _cv
         # Registry mirror of the turn log: the ring keeps its exact
         # per-turn records (the starvation guard reads waits from it, and
         # clear() between bench rounds must keep working), while the

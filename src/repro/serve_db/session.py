@@ -143,7 +143,7 @@ class QuerySession:
         self.session_id = session_id
         self.name = name or f"session-{session_id}"
         self.backend = backend
-        self.queries: List[StreamingQuery] = []
+        self.queries: List[StreamingQuery] = []  # guarded-by: _lock
         self.closed = False
         self._lock = threading.Lock()
 

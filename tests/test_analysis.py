@@ -1,0 +1,414 @@
+"""reprolint (repro.analysis): per-rule good/bad snippet corpus, inline
+suppression + baseline ratchet semantics, CLI exit codes, the self-clean
+gate (the checked-in tree must lint clean against the checked-in
+baseline), and a mutation test proving guarded-by catches a removed lock
+wrapper in a scratch copy of the real ingest plane."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import (
+    load_baseline,
+    render_json,
+    render_text,
+    run_analysis,
+)
+from repro.analysis.engine import Baseline, BaselineEntry, default_baseline_path
+from repro.analysis.rules import REGISTRY
+from repro.analysis.rules.guarded_by import GuardedByRule
+from repro.analysis.rules.hot_path import HotPathSyncRule
+from repro.analysis.rules.jit_purity import JitPurityRule
+from repro.analysis.rules.kernel_contract import KernelContractRule
+from repro.analysis.rules.no_donate import NoDonateInPlaneRule
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def lint(tmp_path, source, name="mod.py", rules=None):
+    """Write one snippet and run the given rules over it (no baseline)."""
+    p = tmp_path / name
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(textwrap.dedent(source))
+    return run_analysis([str(p)], rules=rules)
+
+
+# ----------------------------------------------------------------- guarded-by
+GUARDED_SRC = """
+    import threading
+
+    class Plane:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self._fill = 0  # guarded-by: _lock
+
+        def bad(self):
+            return self._fill + 1
+
+        def good_with(self):
+            with self._lock:
+                return self._fill
+
+        def good_hold(self):
+            with self._lock.hold("x"):
+                self._fill += 1
+
+        def good_holds(self):  # holds: _lock
+            return self._fill
+
+        def good_suppressed(self):
+            return self._fill  # reprolint: disable=guarded-by
+"""
+
+
+def test_guarded_by_flags_only_unlocked_access(tmp_path):
+    res = lint(tmp_path, GUARDED_SRC, rules=[GuardedByRule()])
+    assert [f.rule for f in res.fresh] == ["guarded-by"]
+    assert "self._fill + 1" in res.fresh[0].snippet
+    assert "_lock" in res.fresh[0].message
+
+
+def test_guarded_by_decorator_annotation_and_dotted_lock(tmp_path):
+    src = """
+        import threading
+
+        def deco(f):
+            return f
+
+        class P:
+            def __init__(self, sched):
+                self.sched = sched
+                self._q = []  # guarded-by: sched._cv
+
+            # holds: sched._cv
+            @deco
+            def annotated_above(self):
+                return len(self._q)
+
+            def locked(self):
+                with self.sched._cv:
+                    return list(self._q)
+
+            def bad(self):
+                return self._q
+    """
+    res = lint(tmp_path, src, rules=[GuardedByRule()])
+    assert [f.snippet for f in res.fresh] == ["return self._q"]
+
+
+# ------------------------------------------------------- no-sync-in-hot-path
+HOT_SRC = """
+    import numpy as np
+    import jax
+
+    # reprolint: hot-path
+    def hot(step, sp, x):
+        a = x.item()
+        jax.block_until_ready(x)
+        b = np.asarray(x)
+        c = float(step(x))
+        d = np.asarray(sp.fence(x))
+        e = int(sp.fence(step(x)))
+        f = int(a)
+        return a, b, c, d, e, f
+
+    def cold(step, x):
+        return float(step(x.item()))
+"""
+
+
+def test_hot_path_sync_corpus(tmp_path):
+    res = lint(tmp_path, HOT_SRC, rules=[HotPathSyncRule()])
+    assert all(f.rule == "no-sync-in-hot-path" for f in res.fresh)
+    snippets = [f.snippet for f in res.fresh]
+    # Exactly the four syncs in hot(); the fenced forms, the Name
+    # coercion, and everything in the untagged cold() stay clean.
+    assert snippets == [
+        "a = x.item()",
+        "jax.block_until_ready(x)",
+        "b = np.asarray(x)",
+        "c = float(step(x))",
+    ]
+
+
+def test_hot_path_nested_def_inherits_tag(tmp_path):
+    src = """
+        # reprolint: hot-path
+        def outer(x):
+            def inner():
+                return x.item()
+            return inner()
+    """
+    res = lint(tmp_path, src, rules=[HotPathSyncRule()])
+    assert len(res.fresh) == 1 and ".item()" in res.fresh[0].message
+
+
+# ----------------------------------------------------------------- jit-purity
+JIT_BAD_SRC = """
+    import time
+    import jax
+    import jax.numpy as jnp
+
+    events = []
+    cache = {}
+
+    class Thing:
+        def build(self):
+            def step(x):
+                self.seen = x          # self-mutation at trace time
+                events.append(1)       # closed-over container
+                cache["k"] = x         # closed-over subscript store
+                t = time.time()        # host nondeterminism
+                y = jnp.sum(x)         # fine: imported module
+                zs = []
+                zs.append(y)           # fine: local
+                return y + t
+            return jax.jit(step)
+"""
+
+
+def test_jit_purity_flags_impure_traced_fn(tmp_path):
+    res = lint(tmp_path, JIT_BAD_SRC, rules=[JitPurityRule()])
+    msgs = " | ".join(f.message for f in res.fresh)
+    assert len(res.fresh) == 4
+    assert "self.seen" in msgs
+    assert "'events." in msgs
+    assert "'cache'" in msgs
+    assert "time.time" in msgs
+
+
+def test_jit_purity_decorator_and_clean_fn(tmp_path):
+    src = """
+        import jax
+        import jax.numpy as jnp
+        from functools import partial
+
+        @jax.jit
+        def pure(x):
+            acc = {}
+            acc["k"] = jnp.sum(x)
+            return acc["k"]
+
+        def helper(x):
+            out = []
+            out.append(x)
+            return out[0]
+
+        stepped = jax.jit(partial(helper))
+    """
+    res = lint(tmp_path, src, rules=[JitPurityRule()])
+    assert res.fresh == []
+
+
+def test_jit_purity_only_checks_traced_functions(tmp_path):
+    src = """
+        import time
+
+        def untraced():
+            return time.time()  # ordinary host code: not the rule's business
+    """
+    res = lint(tmp_path, src, rules=[JitPurityRule()])
+    assert res.fresh == []
+
+
+# ---------------------------------------------------------- no-donate-in-plane
+DONATE_SRC = """
+    import jax
+
+    def build(fn):
+        return jax.jit(fn, donate_argnums=(0,))
+"""
+
+
+def test_no_donate_fires_only_in_plane_files(tmp_path):
+    bad = lint(
+        tmp_path, DONATE_SRC, name="src/repro/core/dist_ingest.py",
+        rules=[NoDonateInPlaneRule()],
+    )
+    assert [f.rule for f in bad.fresh] == ["no-donate-in-plane"]
+    ok = lint(
+        tmp_path, DONATE_SRC, name="src/repro/core/elsewhere.py",
+        rules=[NoDonateInPlaneRule()],
+    )
+    assert ok.fresh == []
+
+
+def test_no_donate_inline_suppression(tmp_path):
+    src = DONATE_SRC.replace(
+        "donate_argnums=(0,))",
+        "donate_argnums=(0,))  # reprolint: disable=no-donate-in-plane",
+    )
+    res = lint(
+        tmp_path, src, name="src/repro/core/dist_query.py",
+        rules=[NoDonateInPlaneRule()],
+    )
+    assert res.fresh == []
+
+
+# ------------------------------------------------------------- kernel-contract
+def _write(root: Path, rel: str, body: str) -> None:
+    p = root / rel
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(textwrap.dedent(body))
+
+
+def test_kernel_contract_good_package(tmp_path):
+    _write(tmp_path, "kernels/common.py", "def pow2(n):\n    return 1 << (n - 1).bit_length()\n")
+    _write(tmp_path, "kernels/goodpkg/__init__.py",
+           "from .ops import scan\nfrom .ref import scan_ref\nfrom .goodpkg import scan_pallas\n")
+    _write(tmp_path, "kernels/goodpkg/ops.py", "def scan(x, n):\n    return x\n")
+    _write(tmp_path, "kernels/goodpkg/ref.py", "def scan_ref(x, n):\n    return x\n")
+    _write(tmp_path, "kernels/goodpkg/goodpkg.py", "def scan_pallas(x, n):\n    return x\n")
+    res = run_analysis([str(tmp_path / "kernels")], rules=[KernelContractRule()])
+    assert res.fresh == []
+
+
+def test_kernel_contract_bad_package(tmp_path):
+    _write(tmp_path, "kernels/common.py", "def pow2(n):\n    return 1 << (n - 1).bit_length()\n")
+    _write(tmp_path, "kernels/badpkg/__init__.py", "from .ops import broken_pallas\n")
+    _write(tmp_path, "kernels/badpkg/ops.py",
+           "def broken_pallas(x, n):\n    return x\n"
+           "def other_pallas(x):\n    return x\n"
+           "def _pow2(n):\n    return 1\n")
+    _write(tmp_path, "kernels/badpkg/ref.py", "def broken_ref(x, m):\n    return x\n")
+    res = run_analysis([str(tmp_path / "kernels")], rules=[KernelContractRule()])
+    msgs = [f.message for f in res.fresh]
+    assert len(msgs) == 4
+    assert any("does not re-export from .ref" in m for m in msgs)
+    assert any("no 'other_ref'" in m for m in msgs)
+    assert any("!= 'broken_ref' params" in m for m in msgs)
+    assert any("re-implements shared kernel helper 'pow2'" in m for m in msgs)
+
+
+def test_kernel_contract_missing_ref_file(tmp_path):
+    _write(tmp_path, "kernels/noref/__init__.py", "")
+    _write(tmp_path, "kernels/noref/ops.py", "def f_pallas(x):\n    return x\n")
+    res = run_analysis([str(tmp_path / "kernels")], rules=[KernelContractRule()])
+    assert len(res.fresh) == 1 and "missing ref.py" in res.fresh[0].message
+
+
+# ------------------------------------------------- suppression + baseline
+def test_disable_all_suppresses_every_rule(tmp_path):
+    src = GUARDED_SRC.replace(
+        "return self._fill + 1",
+        "return self._fill + 1  # reprolint: disable=all",
+    )
+    res = lint(tmp_path, src, rules=[GuardedByRule()])
+    assert res.fresh == []
+
+
+def test_baseline_match_and_ratchet(tmp_path):
+    res = lint(tmp_path, GUARDED_SRC, rules=[GuardedByRule()])
+    (f,) = res.fresh
+    entry = BaselineEntry(
+        rule=f.rule, file=f.path, snippet=f.snippet, justification="known"
+    )
+    stale_entry = BaselineEntry(
+        rule=f.rule, file=f.path, snippet="gone_line()", justification="old"
+    )
+    # Matching entry: finding moves to `baselined`, run passes.
+    ok = run_analysis(
+        [str(tmp_path / "mod.py")], rules=[GuardedByRule()],
+        baseline=Baseline(None, [entry]),
+    )
+    assert ok.fresh == [] and len(ok.baselined) == 1 and not ok.failed
+    # A stale entry is itself a failure: the baseline only shrinks.
+    stale = run_analysis(
+        [str(tmp_path / "mod.py")], rules=[GuardedByRule()],
+        baseline=Baseline(None, [entry, stale_entry]),
+    )
+    assert stale.stale_baseline == [stale_entry] and stale.failed
+
+
+def test_baseline_requires_justification(tmp_path):
+    p = tmp_path / "baseline.json"
+    p.write_text(json.dumps({
+        "version": 1,
+        "entries": [{"rule": "r", "file": "f.py", "snippet": "x", "justification": "  "}],
+    }))
+    with pytest.raises(ValueError, match="justification"):
+        load_baseline(str(p))
+
+
+def test_reporters_render(tmp_path):
+    res = lint(tmp_path, GUARDED_SRC, rules=[GuardedByRule()])
+    text = render_text(res)
+    assert "[guarded-by]" in text and "1 finding(s)" in text
+    doc = json.loads(render_json(res))
+    assert doc["failed"] and doc["counts"]["fresh"] == 1
+    assert doc["findings"][0]["rule"] == "guarded-by"
+
+
+def test_parse_error_fails_run(tmp_path):
+    (tmp_path / "broken.py").write_text("def f(:\n")
+    res = run_analysis([str(tmp_path / "broken.py")], rules=[GuardedByRule()])
+    assert res.parse_errors and res.failed
+
+
+# --------------------------------------------------------------- CLI contract
+def _run_cli(*argv, cwd=None):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *argv],
+        capture_output=True, text=True, env=env, cwd=cwd or str(REPO),
+    )
+
+
+def test_cli_exit_codes_and_json(tmp_path):
+    bad = tmp_path / "bad.py"
+    bad.write_text(textwrap.dedent(GUARDED_SRC))
+    proc = _run_cli(str(bad), "--no-baseline", "--format=json")
+    assert proc.returncode == 1
+    doc = json.loads(proc.stdout)
+    assert doc["failed"] and doc["counts"]["fresh"] == 1
+    good = tmp_path / "good.py"
+    good.write_text("x = 1\n")
+    proc = _run_cli(str(good), "--no-baseline")
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+# ----------------------------------------------------------- self-clean gates
+def test_repo_tree_is_reprolint_clean():
+    """The CI gate in library form: the checked-in tree has zero fresh
+    findings against the checked-in baseline, and no baseline entry is
+    stale (the ratchet)."""
+    baseline = load_baseline(default_baseline_path())
+    assert baseline.entries, "expected at least the documented busy() entry"
+    res = run_analysis([str(REPO / "src")], baseline=baseline)
+    assert res.parse_errors == []
+    assert res.fresh == [], render_text(res)
+    assert res.stale_baseline == []
+
+
+def test_guarded_by_catches_removed_lock_in_dist_ingest_copy(tmp_path):
+    """Mutation test on the real plane: strip ONE lock wrapper from a
+    scratch copy of core/dist_ingest.py and guarded-by must fire on the
+    now-unprotected shared state; the unmodified copy stays clean."""
+    src = (REPO / "src/repro/core/dist_ingest.py").read_text()
+    clean = lint(tmp_path, src, name="clean/dist_ingest.py", rules=[GuardedByRule()])
+    assert clean.fresh == []
+
+    marker = 'with self._lock.hold("bookkeeping"):'
+    i = src.index("def telemetry")
+    j = src.index(marker, i)
+    mutated = src[:j] + "if True:" + src[j + len(marker):]
+    res = lint(tmp_path, mutated, name="mut/dist_ingest.py", rules=[GuardedByRule()])
+    assert res.fresh, "removing the telemetry lock hold must trip guarded-by"
+    attrs = " ".join(f.message for f in res.fresh)
+    assert "session_stats" in attrs or "'self.state'" in attrs
+
+
+def test_registry_covers_all_five_rules():
+    names = {cls.name for cls in REGISTRY}
+    assert names == {
+        "guarded-by",
+        "no-sync-in-hot-path",
+        "jit-purity",
+        "no-donate-in-plane",
+        "kernel-contract",
+    }

@@ -410,6 +410,184 @@ def test_disabled_tracing_overhead_under_2pct():
     assert overhead < 0.02, f"disabled-span overhead {overhead:.4%} of a scan"
 
 
+# ------------------------------------------------------------- span sampling
+def test_span_sampling_keeps_every_nth_root_with_children():
+    obs.clear()
+    obs.enable(sample=1 / 3)
+    try:
+        for i in range(9):
+            with obs.span(f"root{i}", cat="t"):
+                with obs.span(f"child{i}", cat="t"):
+                    pass
+    finally:
+        obs.disable()
+        assert obs.get_tracer().sample_n == 1  # disable resets the knob
+    names = [r["name"] for r in obs.get_tracer().records]
+    # Roots 1, 4, 7 (1-based counter % 3 == 1) survive, each with its
+    # child; children exit first so they precede their root on record.
+    assert names == ["child0", "root0", "child3", "root3", "child6", "root6"]
+    recs = {r["name"]: r for r in obs.get_tracer().records}
+    for i in (0, 3, 6):
+        assert recs[f"child{i}"]["parent"] == recs[f"root{i}"]["sid"]
+    obs.clear()
+
+
+def test_span_sampling_dropped_root_children_follow():
+    """A child under a dropped root is dropped even if the tree is deep,
+    and a dropped span's fence/set are pass-through no-ops."""
+    obs.clear()
+    obs.enable(sample=1 / 2)  # keeps roots 1, 3, ... drops 2, 4, ...
+    try:
+        with obs.span("kept", cat="t"):
+            pass
+        with obs.span("dropped", cat="t") as sp:
+            assert sp.fence(41) == 41
+            sp.set(ignored=True)
+            with obs.span("d.child", cat="t"):
+                with obs.span("d.grandchild", cat="t"):
+                    pass
+        # After the dropped tree closes, sampling resumes normally.
+        with obs.span("kept2", cat="t"):
+            pass
+    finally:
+        obs.disable()
+    names = [r["name"] for r in obs.get_tracer().records]
+    assert names == ["kept", "kept2"]
+    obs.clear()
+
+
+def test_span_sampling_full_rate_unchanged():
+    """enable(sample=1.0) and plain enable() keep every span (the default
+    path stays byte-identical in behavior)."""
+    for kwargs in ({}, {"sample": 1.0}, {"sample": None}):
+        obs.clear()
+        obs.enable(**kwargs)
+        try:
+            with obs.span("a", cat="t"):
+                with obs.span("b", cat="t"):
+                    pass
+        finally:
+            obs.disable()
+        assert {r["name"] for r in obs.get_tracer().records} == {"a", "b"}
+    with pytest.raises(ValueError):
+        obs.enable(sample=-0.5)
+    obs.disable()
+    obs.clear()
+
+
+def test_sampled_out_span_overhead_gate():
+    """The sampling companion to the disabled gate: a sampled-OUT span
+    must stay within the same cheap-singleton cost class — no record
+    append, no sid allocation, just a thread-local depth touch."""
+    obs.clear()
+    obs.enable(sample=1 / 100_000)
+    try:
+        n_iter = 50_000
+        t0 = time.perf_counter()
+        for _ in range(n_iter):
+            with obs.span("x", cat="t"):
+                pass
+        per_span = (time.perf_counter() - t0) / n_iter
+    finally:
+        obs.disable()
+    # Only the first root of the period was kept.
+    assert len(obs.get_tracer().records) == 1
+    assert per_span < 50e-6, f"sampled-out span cost {per_span * 1e6:.1f}us"
+    obs.clear()
+
+
+# ----------------------------------------------------- Prometheus exposition
+def _parse_prom(text):
+    """Tiny exposition-format parser: name -> {"type": ..., "samples":
+    {(sample_name, frozenset(labels.items())): value}}."""
+    import re
+
+    out = {}
+    types = {}
+    for line in text.splitlines():
+        if not line:
+            continue
+        if line.startswith("# TYPE "):
+            _, _, name, kind = line.split(" ", 3)
+            types[name] = kind
+            out.setdefault(name, {"type": kind, "samples": {}})
+            continue
+        if line.startswith("#"):
+            continue
+        m = re.match(r"^([a-zA-Z0-9_:]+)(\{(.*)\})? (\S+)$", line)
+        assert m, f"unparseable sample line: {line!r}"
+        sname, _, labelstr, val = m.groups()
+        labels = {}
+        if labelstr:
+            for part in re.findall(r'(\w+)="((?:[^"\\]|\\.)*)"', labelstr):
+                labels[part[0]] = part[1].replace('\\"', '"').replace("\\\\", "\\")
+        family = next((t for t in types if sname.startswith(t)), sname)
+        out.setdefault(family, {"type": types.get(family), "samples": {}})
+        fval = float("inf") if val == "+Inf" else float(val)
+        out[family]["samples"][(sname, frozenset(labels.items()))] = fval
+    return out
+
+
+def test_prometheus_text_roundtrip():
+    reg = MetricsRegistry("t_prom")
+    c = reg.counter("prom_rows_total", "rows ingested")
+    c.inc(5, writer="3")
+    c.inc(2.5, writer="7")
+    g = reg.gauge("prom_fill", "memtable fill fraction")
+    g.set(0.5)
+    h = reg.histogram("prom_lat_seconds", "latency", edges=(0.01, 0.1, 1.0))
+    for v in (0.005, 0.05, 0.5, 5.0, 0.05):
+        h.observe(v, op="scan")
+
+    doc = _parse_prom(obs.to_prometheus_text(reg))
+
+    assert doc["prom_rows_total"]["type"] == "counter"
+    s = doc["prom_rows_total"]["samples"]
+    assert s[("prom_rows_total", frozenset({("writer", "3")}))] == 5.0
+    assert s[("prom_rows_total", frozenset({("writer", "7")}))] == 2.5
+
+    assert doc["prom_fill"]["type"] == "gauge"
+    assert doc["prom_fill"]["samples"][("prom_fill", frozenset())] == 0.5
+
+    assert doc["prom_lat_seconds"]["type"] == "histogram"
+    hs = doc["prom_lat_seconds"]["samples"]
+
+    def bucket(le):
+        return hs[("prom_lat_seconds_bucket", frozenset({("op", "scan"), ("le", le)}))]
+
+    # Cumulative buckets, exact against the observations above.
+    assert bucket("0.01") == 1
+    assert bucket("0.1") == 3
+    assert bucket("1") == 4
+    assert bucket("+Inf") == 5
+    assert hs[("prom_lat_seconds_count", frozenset({("op", "scan")}))] == 5
+    assert hs[("prom_lat_seconds_sum", frozenset({("op", "scan")}))] == pytest.approx(
+        5.605
+    )
+
+
+def test_prometheus_text_escaping_and_empty():
+    reg = MetricsRegistry("t_prom_esc")
+    assert obs.to_prometheus_text(reg) == ""
+    c = reg.counter("esc_total", 'help with "quotes"')
+    c.inc(1, path='a"b\\c')
+    text = obs.to_prometheus_text(reg)
+    assert '# HELP esc_total help with \\"quotes\\"' in text
+    doc = _parse_prom(text)
+    assert doc["esc_total"]["samples"][
+        ("esc_total", frozenset({("path", 'a"b\\c')}))
+    ] == 1.0
+
+
+def test_prometheus_text_all_registries_dedupes_names():
+    a = MetricsRegistry("t_prom_a")
+    b = MetricsRegistry("t_prom_b")
+    a.counter("dup_total").inc(1)
+    b.counter("dup_total").inc(100)
+    text = obs.to_prometheus_text()
+    assert text.count("# TYPE dup_total counter") == 1
+
+
 # ----------------------------------------------------------------- exporters
 def test_write_exporters_roundtrip(tmp_path):
     obs.enable()
