@@ -203,6 +203,122 @@ def device_sweep(
     return out
 
 
+# ------------------------------------------------ measured/group contention
+def group_sweep(
+    workers: int = 4,
+    groups_list=(1, 4),
+    rows_total: int = 24_000,
+    skew=(8, 4, 2, 1),
+    mem_rows: int = 512,
+    max_runs: int = 2,
+    capacity: int = 131_072,
+) -> List[Dict]:
+    """W REAL writer threads vs G tablet-group locks — the lock-split
+    experiment the sharded plane exists for. Both configs run the same 4
+    tablets with the same pre-encoded per-writer streams and writer i
+    pinned to tablet i; only the group split changes.
+
+    The load is SKEWED (`skew` weights rows per writer): writer 0 is the
+    hot client, the regime the paper's backpressure section and the
+    hot-tablet note in data_model.md describe. That skew is what makes
+    the single lock expensive: flush/fold programs run over a whole
+    GROUP's tablet slabs (dense capacity-padded arrays — cost scales
+    with tablets per group, not fill), so with G=1 every blocking major
+    the hot tablet trips folds all four tablets' slabs and every writer
+    queues behind it on the one plane lock; with G=4 the hot group folds
+    its own slab alone and the cold groups' writers never see it.
+    Aggregate rows/s and the per-group lock occupancy books (held +
+    acquire-wait, the `lock_group_*` artifact columns) quantify the
+    split — validate() gates G=4 >= 1.5x G=1 at W=4."""
+    from repro.core import keypack
+    from repro.core.dist_ingest import DistIngestPlane
+    from repro.launch.mesh import make_dev_mesh
+
+    out = []
+    src = SyntheticWebProxySource(seed=53)
+    n_t = workers  # one tablet per writer: disjoint routing by construction
+    store = EventStore(web_proxy_schema(), n_shards=4)  # dictionary carrier
+    rows_w = [rows_total * w // sum(skew) for w in skew]
+    per_writer = []
+    for n_rows in rows_w:
+        lines = src.gen_lines(n_rows, 0, 3600)
+        ts, colvals = parse_web_proxy_lines(lines)
+        cols = store.encode_events(np.asarray(ts, np.int64), colvals)
+        rts = keypack.rev_ts(np.asarray(ts, np.int64)).astype(np.int32)
+        per_writer.append((rts, cols))
+    for n_g in groups_list:
+        mesh = make_dev_mesh(1, 1)
+        plane = DistIngestPlane(
+            mesh,
+            store.schema.n_fields,
+            # Provisioned far beyond the bench rows on purpose: fold cost
+            # is O(capacity) (dense padded slabs), so the slab size sets
+            # how much a group-wide fold costs — the asymmetry under test.
+            capacity=max(capacity, max(rows_w) + mem_rows + 64),
+            tablets_per_device=n_t,
+            mem_rows=mem_rows,
+            max_runs=max_runs,
+            append_rows=min(mem_rows, 512),
+            n_groups=n_g,
+        )
+        # Warm append + minor/major/fold compiles outside the timed
+        # window (groups share one step cache, so one warm covers all).
+        warm = np.arange(n_t * 8, dtype=np.int32)
+        plane.ingest(warm % np.int32(4096), np.zeros((n_t * 8, store.schema.n_fields), np.int32),
+                     warm % np.int32(n_t))
+        plane.warm_compaction()
+        base_rows = int(plane.telemetry()["rows"].sum())
+        plane.blocked_seconds = 0.0
+        for g in plane.groups:
+            g.lock.reset()  # occupancy columns cover the timed window only
+        chunk = 4096
+
+        def work(i):
+            rts, cols = per_writer[i]
+            tab = np.full(min(chunk, len(rts)), i, np.int32)
+            for off in range(0, len(rts), chunk):
+                sl = slice(off, off + chunk)
+                n_sl = len(rts[sl])
+                plane.ingest(rts[sl], cols[sl], tab[:n_sl], writer_id=i)
+
+        threads = [threading.Thread(target=work, args=(i,)) for i in range(workers)]
+        t0 = time.perf_counter()
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        dt = time.perf_counter() - t0
+        tel = plane.telemetry()
+        total = sum(rows_w)
+        occ = [g.lock.snapshot() for g in plane.groups]
+        out.append(
+            {
+                "workers": workers,
+                "groups": n_g,
+                "tablets": n_t,
+                "rows": total,
+                "device_rows": int(tel["rows"].sum()) - base_rows,
+                "rows_per_s": total / dt,
+                "blocked_s": float(plane.blocked_seconds),
+                "major_compactions": int(tel["major"].sum()),
+                "overflow": int(tel["overflow"].sum()),
+                # Per-group lock books over the timed window: held time
+                # (appends + folds that group ran) and acquire-wait (how
+                # long writers queued on THIS lock — the contention the
+                # split removes).
+                "lock_group_held_s": {
+                    f"g{g.gid}": round(float(s["total_held_s"]), 6)
+                    for g, s in zip(plane.groups, occ)
+                },
+                "lock_group_wait_s": {
+                    f"g{g.gid}": round(float(s["total_wait_s"]), 6)
+                    for g, s in zip(plane.groups, occ)
+                },
+            }
+        )
+    return out
+
+
 # ------------------------------------------------- measured/publish latency
 def publish_latency_sweep(
     base_rows_list=(6_000, 60_000),
@@ -462,6 +578,9 @@ def run(quick: bool = False) -> Dict:
         tablets_list=(1, 2) if quick else (1, 2, 4),
         rows_per_worker=4_000 if quick else 10_000,
     )
+    sweep_groups = group_sweep(
+        rows_total=24_000 if quick else 48_000,
+    )
     sweep_publish = publish_latency_sweep(
         base_rows_list=(4_000, 40_000) if quick else (6_000, 60_000),
     )
@@ -473,6 +592,7 @@ def run(quick: bool = False) -> Dict:
         "tablet": tablet,
         "real_sweep": sweep_real,
         "device_sweep": sweep_device,
+        "group_sweep": sweep_groups,
         "publish_sweep": sweep_publish,
         "seal_probe": seal,
         "fig3": sims,
@@ -496,6 +616,13 @@ def emit_csv(res: Dict) -> List[str]:
             f"{1e6 * r['workers'] / max(r['rows_per_s'], 1):.2f},"
             f"rows_per_s={r['rows_per_s']:.0f};blocked_s={r['blocked_s']:.3f};"
             f"minor={r['minor_compactions']};major={r['major_compactions']}"
+        )
+    for r in res.get("group_sweep", []):
+        lines.append(
+            f"fig3_groups_w{r['workers']}_g{r['groups']},"
+            f"{1e6 * r['workers'] / max(r['rows_per_s'], 1):.2f},"
+            f"rows_per_s={r['rows_per_s']:.0f};blocked_s={r['blocked_s']:.3f};"
+            f"wait_s={sum(r['lock_group_wait_s'].values()):.3f}"
         )
     for r in res.get("publish_sweep", []):
         lines.append(
@@ -558,11 +685,29 @@ def emit_json(res: Dict) -> Dict:
             },
         }
 
+    def group_row(r: Dict) -> Dict:
+        return {
+            "workers": r["workers"],
+            "groups": r["groups"],
+            "tablets": r["tablets"],
+            "rows": r["rows"],
+            "rows_per_s": round(r["rows_per_s"], 1),
+            "blocked_ms": round(r["blocked_s"] * 1e3, 2),
+            "major_compactions": r["major_compactions"],
+            "lock_group_held_ms": {
+                k: round(v * 1e3, 2) for k, v in r["lock_group_held_s"].items()
+            },
+            "lock_group_wait_ms": {
+                k: round(v * 1e3, 2) for k, v in r["lock_group_wait_s"].items()
+            },
+        }
+
     return {
         "benchmark": "ingest_scaling",
         "client_rows_per_s": round(res["client"]["rows_per_s"], 1),
         "tablet_rows_per_s": round(res["tablet"]["rows_per_s"], 1),
         "device_sweep": [dev_row(r) for r in res["device_sweep"]],
+        "group_sweep": [group_row(r) for r in res.get("group_sweep", [])],
         "publish_sweep": [
             {
                 "base_rows": r["base_rows"],
@@ -598,6 +743,35 @@ def validate(res: Dict) -> List[str]:
         r["major_compactions"] > 0 for r in res["device_sweep"]
     ):
         fails.append("device sweep never tripped a major compaction")
+    # Sharded plane: the lock split must BUY throughput — 4 concurrent
+    # writers over 4 group locks beat the same workload serialized behind
+    # one lock by >= 1.5x, with no rows lost and the single-lock baseline
+    # booking (strictly) more acquire-wait than all group locks combined.
+    grp = {r["groups"]: r for r in res.get("group_sweep", [])}
+    for r in grp.values():
+        if r["device_rows"] != r["rows"]:
+            fails.append(
+                f"group sweep rows lost: g={r['groups']} "
+                f"{r['device_rows']} != {r['rows']}"
+            )
+        if r["overflow"]:
+            fails.append(f"group sweep tablet overflow: g={r['groups']}")
+    if grp and (1 not in grp or 4 not in grp):
+        fails.append(f"group sweep missing a config: have groups={sorted(grp)}")
+    elif grp:
+        speedup = grp[4]["rows_per_s"] / max(grp[1]["rows_per_s"], 1e-9)
+        if speedup < 1.5:
+            fails.append(
+                f"lock split under 1.5x: G=4 {grp[4]['rows_per_s']:.0f} rows/s "
+                f"vs G=1 {grp[1]['rows_per_s']:.0f} ({speedup:.2f}x)"
+            )
+        wait1 = sum(grp[1]["lock_group_wait_s"].values())
+        wait4 = sum(grp[4]["lock_group_wait_s"].values())
+        if wait4 >= wait1:
+            fails.append(
+                f"group locks waited as much as the single lock: "
+                f"{wait4:.3f}s vs {wait1:.3f}s"
+            )
     # Run-aware publish: NO compaction attributable to publish, every delta
     # row visible to the query-while-ingest cycle, and flat latency — the
     # largest base fill is 10x the smallest, so a publish that still paid

@@ -38,11 +38,35 @@ index maintenance rides the ingest path, never a post-hoc build — the
 index is live at publish() with no rebuild, per the 100M-inserts/sec
 study's design (arXiv:1406.4923).
 
+PLANE SHARDING (per-tablet-group ownership): the plane is decomposed
+into ``n_groups`` independent :class:`TabletGroup` shards. Each group
+owns a CONTIGUOUS range of ``n_tablets / n_groups`` global tablets with
+its OWN OwnedLock, device state, host fill/run mirrors, generation
+tags, and fold-debt accounting — so W concurrent DistBatchWriters whose
+row-hash shards land on disjoint groups append fully concurrently
+instead of serializing behind one plane lock (the D4M 100M-inserts/sec
+curve only climbs when client parallelism is not funneled through a
+single coordination point). The jitted step programs are SHARED across
+groups through one :class:`_PlanePrograms` cache (every group has
+identical slab shapes, so one trace/compile serves all G shards).
+:meth:`DistIngestPlane.publish` composes per-group zero-copy snapshots
+into one DistStore (per-group gens under ``DistStore.gens``) without a
+global stop-the-world: each group seals under only its own lock, and a
+group untouched since its last seal ALIASES its previous snapshot.
+``compact_step`` folds one increment of the MOST-INDEBTED group under
+only that group's lock. With ``n_groups == 1`` (the default) the facade
+degenerates to the former single-lock plane — same lock name, same
+state dict, same publish identity/aliasing guarantees.
+
 Per-tablet device counters (rows, minor/major compactions, per-family
 overflow) record the blocked-writer dynamics; host wall-clock blocked
 seconds accrue PER WRITER (each writer's own tripped-major drains), with
 the plane scalar kept as their sum — the paper's §IV-A per-client
-backpressure curve is directly plottable from telemetry().
+backpressure curve is directly plottable from telemetry(). Exact host
+mirrors of the per-tablet rows/minor/major counters are also snapshot
+into ``plane{n}`` registry gauges at publish()/telemetry() boundaries —
+zero device syncs, the mirrors are maintained in lockstep with the
+device programs.
 
 publish() is a SNAPSHOT, not a fold: it seals the memtables (one
 fill-bounded sort, O(live fill) — the host fill mirror picks the slab
@@ -147,28 +171,35 @@ def _sort_masked(keys, cols, n, sentinel):
     return masked[order], cols[order]
 
 
-class DistIngestPlane:
-    """Device-resident LSM tablet grid + its jitted ingest/compaction
-    programs. T = n_devices * tablets_per_device tablets, each with a
-    memtable slab (mem_rows), max_runs sorted-run slots (mem_rows each)
-    and a base run (capacity rows) — per family (see module docstring)."""
+class _PlanePrograms:
+    """The plane's static configuration + ONE shared cache of jitted step
+    programs (append / minor / major / fold_one / seal variants).
+
+    Every :class:`TabletGroup` of a plane has identical slab shapes (same
+    tablets-per-device-per-group, mem_rows, max_runs, families), so the
+    shard_map programs are shape-identical across groups — caching them
+    here means G shards pay ONE trace + compile per step, not G. The
+    cache has its own small lock (never held while device programs run);
+    lock order is always group.lock -> programs._lock, never reversed."""
 
     def __init__(
         self,
         mesh: Mesh,
         n_fields: int,
         capacity: int,
-        tablets_per_device: int = 1,
-        mem_rows: int = 4096,
-        max_runs: int = 4,
-        append_rows: int = 1024,
-        indexed_fids: Sequence[int] = (),
-        agg_bucket_s: int = DEFAULT_AGG_BUCKET_SECONDS,
-        kernel_backend: str = "auto",
+        tablets_per_device: int,
+        mem_rows: int,
+        max_runs: int,
+        append_rows: int,
+        indexed_fids: Tuple[int, ...],
+        agg_bucket_s: int,
+        kernel_backend: str,
     ):
         self.mesh = mesh
         self.axes = tuple(mesh.axis_names)
         self.n_fields = int(n_fields)
+        # Per-GROUP tablets per device: a group's state arrays shard this
+        # many tablets onto each mesh device.
         self.tablets_per_device = int(tablets_per_device)
         self.n_tablets = _n_devices(mesh) * self.tablets_per_device
         self.capacity = int(capacity)
@@ -179,114 +210,8 @@ class DistIngestPlane:
         self.agg_bucket_s = int(agg_bucket_s)
         self.kernel_backend = kernel_backend
         self.families: Tuple[_Family, ...] = self._make_families()
-        self._steps: Dict[str, object] = {}  # guarded-by: _lock
-        # Exact host-side mirrors of the device memtable fills and run-slot
-        # counts (see module docstring) — updated in lockstep with the
-        # device programs' own guards, never read back from the device.
-        # One mirror serves all families: ix/ag fills are exactly
-        # n_indexed x the event fill per tablet.
-        self._fill = np.zeros(self.n_tablets, np.int64)  # guarded-by: _lock
-        self._runs_host = np.zeros(self.n_tablets, np.int32)  # guarded-by: _lock
-        self._dirty = True  # guarded-by: _lock
-        self._published: Optional[DistStore] = None  # guarded-by: _lock
-        # Generation tag per LSM level (shared by all families — they move
-        # in lockstep): appends bump "mem"; a minor flush bumps "mem" +
-        # "runs"; any fold into the base (full major or one compact_step
-        # increment) bumps "runs" + "base". publish() keys its sealed-
-        # memtable cache on the "mem" generation, so a publish after a
-        # fold-only increment ALIASES the previous sealed arrays instead
-        # of re-running the seal sort — snapshots never pay per-increment
-        # device work for levels the increment didn't touch.
-        self._gen: Dict[str, int] = {"mem": 0, "runs": 0, "base": 0}  # guarded-by: _lock
-        # (mem generation, sealed arrays, seal_rows) of the last seal run.
-        self._sealed_cache: Optional[Tuple[int, Dict[str, jax.Array], int]] = None  # guarded-by: _lock
-        # All plane counters live on a PRIVATE metrics registry (plane
-        # instances in one process never share cells); the legacy names
-        # (seal_events, blocked_seconds, fold_events, ...) remain as
-        # properties over these metrics — see the block after __init__.
-        # Fold accounting: every run->base fold is attributed to whoever
-        # drove it — "ingest" counts BLOCKING majors tripped by a
-        # writer's flush (one per major), and each `source` passed to
-        # compact() ("explicit" callers, "background" for the serve
-        # plane's compactor) counts that call's drain passes. Routine
-        # minor flushes are not folds and are not attributed (the
-        # per-tablet `minor` counter already tracks them). What matters
-        # for the serve plane: the query path NEVER appears here — reads
-        # cannot fold by construction — and telemetry()["fold_events"]
-        # proves it.
-        self.metrics = MetricsRegistry(f"plane{next(_plane_seq)}")
-        self._m_seal = self.metrics.counter(
-            "plane_seal_total", "publishes that ran (event=seal) vs aliased (event=reuse)"
-        )
-        self._m_blocked = self.metrics.counter(
-            "plane_blocked_seconds_total", "writer seconds blocked on tripped majors"
-        )
-        self._m_folds = self.metrics.counter(
-            "plane_fold_events_total", "run->base folds by driving source"
-        )
-        self._m_last_seal_rows = self.metrics.gauge(
-            "plane_last_seal_rows", "event-family slots the last publish sorted"
-        )
-        # Serve-plane sessions report through the same telemetry structure
-        # as ingest writers (record_session); key = session id.
-        self.session_stats: Dict[int, Dict[str, float]] = {}  # guarded-by: _lock
-        # Concurrent DistBatchWriters (paper: many parallel ingest clients)
-        # share one plane: the lock serializes state/counter updates, like
-        # the host Tablet's lock. Writers blocked here while another's
-        # flush compacts is exactly the paper's backpressure coupling.
-        # OwnedLock attributes every hold to an owner class
-        # (ingest_append / publish_seal / fold_increment / ...) for the
-        # occupancy report (repro.obs.occupancy_snapshot).
-        self._lock = OwnedLock("plane_lock")
-        self.state = self._init_state()  # guarded-by: _lock
-
-    # ------------------------------------------------- legacy metric views
-    # Thin views over the plane registry, kept so six PRs of tests and
-    # benches read the same names they always did. blocked_seconds also
-    # accepts `= 0.0` (benches zero it between rounds) — anything else
-    # would silently desync the per-writer cells, so it raises.
-    @property
-    def seal_events(self) -> int:
-        return int(self._m_seal.value(event="seal"))
-
-    @property
-    def seal_reuses(self) -> int:
-        return int(self._m_seal.value(event="reuse"))
-
-    @property
-    def blocked_seconds(self) -> float:
-        return self._m_blocked.total()
-
-    @blocked_seconds.setter
-    def blocked_seconds(self, v: float) -> None:
-        if v != 0:
-            raise ValueError("blocked_seconds can only be reset to 0")
-        self._m_blocked.reset()
-
-    @property
-    def blocked_by_writer(self) -> Dict[int, float]:
-        return {
-            int(dict(key)["writer"]): v for key, v in self._m_blocked.cells().items()
-        }
-
-    @property
-    def fold_events(self) -> Dict[str, int]:
-        return {dict(key)["source"]: int(v) for key, v in self._m_folds.cells().items()}
-
-    @property
-    def last_seal_rows(self) -> int:
-        return int(self._m_last_seal_rows.value())
-
-    @classmethod
-    def for_store(cls, store, mesh: Mesh, capacity: int, **kw) -> "DistIngestPlane":
-        """Plane bound to a host store's schema: maintains index postings
-        and aggregate counts for the store's indexed fields, with the
-        store's aggregate bucketing (so host and dist densities agree)."""
-        kw.setdefault(
-            "indexed_fids", tuple(int(f) for f in store._indexed_field_ids)
-        )
-        kw.setdefault("agg_bucket_s", store.agg_bucket_seconds)
-        return cls(mesh, store.schema.n_fields, capacity, **kw)
+        self._steps: Dict[object, object] = {}  # guarded-by: _lock
+        self._lock = OwnedLock("plane_step_lock")
 
     # ----------------------------------------------------------- families
     def _make_families(self) -> Tuple[_Family, ...]:
@@ -314,7 +239,7 @@ class DistIngestPlane:
             )
         return tuple(fams)
 
-    # ----------------------------------------------------------- state
+    # --------------------------------------------------------------- specs
     def _spec_of(self, name: str) -> P:
         ax = self.axes
         if name.endswith(("_mem_k", "_base_k")):
@@ -332,35 +257,7 @@ class DistIngestPlane:
     def _specs(self, names) -> Dict[str, P]:
         return {n: self._spec_of(n) for n in names}
 
-    def _init_state(self) -> Dict[str, jax.Array]:
-        t, k = self.n_tablets, self.max_runs
-        host: Dict[str, np.ndarray] = {
-            "n_runs": np.zeros((t,), np.int32),
-            "rows": np.zeros((t,), np.int64),
-            "minor": np.zeros((t,), np.int32),
-            "major": np.zeros((t,), np.int32),
-        }
-        for f in self.families:
-            p, m, c = f.name, f.mem_rows, f.capacity
-            host[f"{p}_mem_k"] = np.zeros((t, m), f.key_dtype)
-            host[f"{p}_mem_c"] = np.zeros((t, m, f.width), f.col_dtype)
-            host[f"{p}_mem_n"] = np.zeros((t,), np.int32)
-            host[f"{p}_run_k"] = np.full((t, k, m), f.sentinel, f.key_dtype)
-            host[f"{p}_run_c"] = np.zeros((t, k, m, f.width), f.col_dtype)
-            host[f"{p}_run_n"] = np.zeros((t, k), np.int32)
-            host[f"{p}_base_k"] = np.full((t, c), f.sentinel, f.key_dtype)
-            host[f"{p}_base_c"] = np.zeros((t, c, f.width), f.col_dtype)
-            host[f"{p}_base_n"] = np.zeros((t,), np.int32)
-            host[f"{p}_overflow"] = np.zeros((t,), np.int32)
-        return {
-            name: jax.device_put(arr, NamedSharding(self.mesh, self._spec_of(name)))
-            for name, arr in host.items()
-        }
-
-    def _sub(self, names) -> Dict[str, jax.Array]:  # holds: _lock
-        return {n: self.state[n] for n in names}
-
-    # ------------------------------------------------------ step builders
+    # --------------------------------------------------------- name lists
     def _append_names(self):
         names = ["rows"]
         for f in self.families:
@@ -368,9 +265,69 @@ class DistIngestPlane:
             names += [f"{p}_mem_k", f"{p}_mem_c", f"{p}_mem_n", f"{p}_overflow"]
         return names
 
-    def _append_step(self):  # holds: _lock
-        if "append" in self._steps:
-            return self._steps["append"]
+    def _minor_names(self):
+        names = ["n_runs", "minor"]
+        for f in self.families:
+            p = f.name
+            names += [
+                f"{p}_mem_k", f"{p}_mem_c", f"{p}_mem_n",
+                f"{p}_run_k", f"{p}_run_c", f"{p}_run_n",
+            ]
+        return names
+
+    def _major_names(self):
+        run = ["n_runs", "major"]
+        base = []
+        for f in self.families:
+            p = f.name
+            run += [f"{p}_run_k", f"{p}_run_c", f"{p}_run_n", f"{p}_overflow"]
+            base += [f"{p}_base_k", f"{p}_base_c", f"{p}_base_n"]
+        return run, base
+
+    def _seal_names(self):
+        names = []
+        for f in self.families:
+            p = f.name
+            names += [f"{p}_mem_k", f"{p}_mem_c", f"{p}_mem_n"]
+        return names
+
+    def _seal_bucket(self, fill_max: int) -> int:
+        """Event-family slot count the seal program must sort to cover a
+        memtable fill of fill_max — the live fill rounded up to a power of
+        two (floored at 8) so the number of distinct seal compilations is
+        log2-bounded, clamped to the slab capacity."""
+        return int(min(max(_pow2(max(fill_max, 1)), 8), self.mem_rows))
+
+    # ----------------------------------------------------------- step cache
+    def _get_step(self, key, build):
+        """Shared compile cache: two groups' (or two writers') first
+        flushes racing here must trace once, not twice — the cache lock
+        serializes build + insert (the former in-plane guarded dict,
+        found by reprolint's guarded-by rule)."""
+        with self._lock.hold("step_build"):
+            if key not in self._steps:
+                self._steps[key] = build()
+            return self._steps[key]
+
+    def append_step(self):
+        return self._get_step("append", self._build_append)
+
+    def minor_step(self):
+        return self._get_step("minor", self._build_minor)
+
+    def major_step(self):
+        return self._get_step("major", self._build_major)
+
+    def fold_one_step(self):
+        return self._get_step("fold_one", self._build_fold_one)
+
+    def seal_step(self, seal_rows: int):
+        return self._get_step(
+            ("seal", seal_rows), lambda: self._build_seal(seal_rows)
+        )
+
+    # --------------------------------------------------------- step builders
+    def _build_append(self):
         mesh, tl = self.mesh, self.tablets_per_device
         families = self.families
         fids = self.indexed_fids
@@ -454,22 +411,9 @@ class DistIngestPlane:
         # only the live memtable slabs, which publish() never aliases — a
         # snapshot seals a sorted COPY of the memtable (_sort_level), so
         # no published DistStore can see the donated buffers.
-        self._steps["append"] = jax.jit(smapped, donate_argnums=(0,))  # reprolint: disable=no-donate-in-plane
-        return self._steps["append"]
+        return jax.jit(smapped, donate_argnums=(0,))  # reprolint: disable=no-donate-in-plane
 
-    def _minor_names(self):
-        names = ["n_runs", "minor"]
-        for f in self.families:
-            p = f.name
-            names += [
-                f"{p}_mem_k", f"{p}_mem_c", f"{p}_mem_n",
-                f"{p}_run_k", f"{p}_run_c", f"{p}_run_n",
-            ]
-        return names
-
-    def _minor_step(self):  # holds: _lock
-        if "minor" in self._steps:
-            return self._steps["minor"]
+    def _build_minor(self):
         mesh, k = self.mesh, self.max_runs
         families = self.families
         names = self._minor_names()
@@ -509,21 +453,9 @@ class DistIngestPlane:
         # NOT donated: publish() hands out DistStore views of the run
         # slabs (run-aware reads), and on backends that implement donation
         # a donated minor would delete arrays a caller may still hold.
-        self._steps["minor"] = jax.jit(smapped)
-        return self._steps["minor"]
+        return jax.jit(smapped)
 
-    def _major_names(self):
-        run = ["n_runs", "major"]
-        base = []
-        for f in self.families:
-            p = f.name
-            run += [f"{p}_run_k", f"{p}_run_c", f"{p}_run_n", f"{p}_overflow"]
-            base += [f"{p}_base_k", f"{p}_base_c", f"{p}_base_n"]
-        return run, base
-
-    def _major_step(self):  # holds: _lock
-        if "major" in self._steps:
-            return self._steps["major"]
+    def _build_major(self):
         from ..kernels.merge_runs import merge_sorted_device
 
         mesh, k = self.mesh, self.max_runs
@@ -603,10 +535,9 @@ class DistIngestPlane:
         # backends that implement donation (TPU/GPU) a donated major
         # would delete arrays a caller may still hold. Majors are rare;
         # one copy each is the price of stable published views.
-        self._steps["major"] = jax.jit(smapped)
-        return self._steps["major"]
+        return jax.jit(smapped)
 
-    def _fold_one_step(self):  # holds: _lock
+    def _build_fold_one(self):
         """One INCREMENT of major compaction: every tablet folds its TOP
         run slot (n_runs - 1) into its base — one bounded 2-way merge of
         O(capacity + mem_rows) rows per family via the resumable
@@ -621,8 +552,6 @@ class DistIngestPlane:
         with equal rev_ts are order-free for every query primitive — so
         K increments agree with one compact() as a multiset (asserted
         against the numpy oracle in tests)."""
-        if "fold_one" in self._steps:
-            return self._steps["fold_one"]
         from ..kernels.merge_runs import merge_pair_device
 
         mesh = self.mesh
@@ -685,24 +614,9 @@ class DistIngestPlane:
         )
         # NOT donated, same as the full major: published views alias the
         # run/base buffers and must survive the fold.
-        self._steps["fold_one"] = jax.jit(smapped)
-        return self._steps["fold_one"]
+        return jax.jit(smapped)
 
-    def _seal_names(self):
-        names = []
-        for f in self.families:
-            p = f.name
-            names += [f"{p}_mem_k", f"{p}_mem_c", f"{p}_mem_n"]
-        return names
-
-    def _seal_bucket(self, fill_max: int) -> int:
-        """Event-family slot count the seal program must sort to cover a
-        memtable fill of fill_max — the live fill rounded up to a power of
-        two (floored at 8) so the number of distinct seal compilations is
-        log2-bounded, clamped to the slab capacity."""
-        return int(min(max(_pow2(max(fill_max, 1)), 8), self.mem_rows))
-
-    def _seal_step(self, seal_rows: int):  # holds: _lock
+    def _build_seal(self, seal_rows: int):
         """FILL-BOUNDED sorted snapshot of the memtables — the only
         per-publish device work. Only the first `seal_rows` slots of each
         event memtable (scaled per family: ix/ag slabs are n_indexed x
@@ -714,9 +628,6 @@ class DistIngestPlane:
         and the compiled read programs never re-trace. Reads the live
         memtable slabs (no donation) and writes fresh sealed arrays, so
         later appends can't tear a published view."""
-        key = ("seal", seal_rows)
-        if key in self._steps:
-            return self._steps[key]
         mesh = self.mesh
         families = self.families
         names = self._seal_names()
@@ -764,105 +675,209 @@ class DistIngestPlane:
             out_specs=out_specs,
             check_rep=False,
         )
-        self._steps[key] = jax.jit(smapped)
-        return self._steps[key]
+        return jax.jit(smapped)
 
-    # ------------------------------------------------------------- ingest
-    def _run_minor(self) -> None:  # holds: _lock
-        step = self._minor_step()
-        self.state.update(step(self._sub(self._minor_names())))
+
+class TabletGroup:
+    """One shard of the ingest plane: a contiguous range of
+    ``programs.n_tablets`` global tablets with its OWN lock, device
+    state, host mirrors, generation tags and fold-debt accounting.
+
+    A group is the former whole-plane DistIngestPlane body with the
+    plane-global bits factored out: step programs come from the shared
+    :class:`_PlanePrograms` cache (identical shapes across groups — one
+    compile serves all), and counters land on the plane's shared metrics
+    registry (per-writer blocked cells therefore still sum to the plane
+    scalar no matter how waits split across groups). Everything below is
+    guarded by ``self.lock`` — writers on DIFFERENT groups never contend.
+
+    Global tablet ``t`` belongs to group ``t // n_tablets`` and is this
+    group's local tablet ``t - t0``; all arrays here index local ids."""
+
+    def __init__(
+        self,
+        gid: int,
+        n_groups: int,
+        programs: _PlanePrograms,
+        m_seal,
+        m_blocked,
+        m_folds,
+        m_last_seal_rows,
+    ):
+        self.gid = int(gid)
+        self.programs = programs
+        self.mesh = programs.mesh
+        self.n_tablets = programs.n_tablets  # local (per-group) count
+        self.t0 = self.gid * self.n_tablets  # global id of local tablet 0
+        self._m_seal = m_seal
+        self._m_blocked = m_blocked
+        self._m_folds = m_folds
+        self._m_last_seal_rows = m_last_seal_rows
+        # The single-group plane keeps the historic lock name (occupancy
+        # reports, benches and CI key on "plane_lock"); sharded planes
+        # name each group's lock so the books attribute contention to the
+        # group that serialized it.
+        name = "plane_lock" if n_groups == 1 else f"plane_lock_g{self.gid}"
+        self.lock = OwnedLock(name)
+        # Exact host-side mirrors of the device memtable fills, run-slot
+        # counts and per-tablet counters (see module docstring) — updated
+        # in lockstep with the device programs' own guards, never read
+        # back from the device. One fill mirror serves all families:
+        # ix/ag fills are exactly n_indexed x the event fill per tablet.
+        self._fill = np.zeros(self.n_tablets, np.int64)  # guarded-by: lock
+        self._runs_host = np.zeros(self.n_tablets, np.int32)  # guarded-by: lock
+        self._rows_host = np.zeros(self.n_tablets, np.int64)  # guarded-by: lock
+        self._minor_host = np.zeros(self.n_tablets, np.int32)  # guarded-by: lock
+        self._major_host = np.zeros(self.n_tablets, np.int32)  # guarded-by: lock
+        self._dirty = True  # guarded-by: lock
+        self._published: Optional[DistStore] = None  # guarded-by: lock
+        # Generation tag per LSM level (shared by all families — they move
+        # in lockstep): appends bump "mem"; a minor flush bumps "mem" +
+        # "runs"; any fold into the base (full major or one compact_step
+        # increment) bumps "runs" + "base". snapshot() keys its sealed-
+        # memtable cache on the "mem" generation, so a publish after a
+        # fold-only increment ALIASES the previous sealed arrays instead
+        # of re-running the seal sort — snapshots never pay per-increment
+        # device work for levels the increment didn't touch.
+        self._gen: Dict[str, int] = {"mem": 0, "runs": 0, "base": 0}  # guarded-by: lock
+        # (mem generation, sealed arrays, seal_rows) of the last seal run.
+        self._sealed_cache: Optional[Tuple[int, Dict[str, jax.Array], int]] = None  # guarded-by: lock
+        self.state = self._init_state()  # guarded-by: lock
+
+    def _init_state(self) -> Dict[str, jax.Array]:
+        pr = self.programs
+        t, k = self.n_tablets, pr.max_runs
+        host: Dict[str, np.ndarray] = {
+            "n_runs": np.zeros((t,), np.int32),
+            "rows": np.zeros((t,), np.int64),
+            "minor": np.zeros((t,), np.int32),
+            "major": np.zeros((t,), np.int32),
+        }
+        for f in pr.families:
+            p, m, c = f.name, f.mem_rows, f.capacity
+            host[f"{p}_mem_k"] = np.zeros((t, m), f.key_dtype)
+            host[f"{p}_mem_c"] = np.zeros((t, m, f.width), f.col_dtype)
+            host[f"{p}_mem_n"] = np.zeros((t,), np.int32)
+            host[f"{p}_run_k"] = np.full((t, k, m), f.sentinel, f.key_dtype)
+            host[f"{p}_run_c"] = np.zeros((t, k, m, f.width), f.col_dtype)
+            host[f"{p}_run_n"] = np.zeros((t, k), np.int32)
+            host[f"{p}_base_k"] = np.full((t, c), f.sentinel, f.key_dtype)
+            host[f"{p}_base_c"] = np.zeros((t, c, f.width), f.col_dtype)
+            host[f"{p}_base_n"] = np.zeros((t,), np.int32)
+            host[f"{p}_overflow"] = np.zeros((t,), np.int32)
+        return {
+            name: jax.device_put(arr, NamedSharding(self.mesh, pr._spec_of(name)))
+            for name, arr in host.items()
+        }
+
+    def _sub(self, names) -> Dict[str, jax.Array]:  # holds: lock
+        return {n: self.state[n] for n in names}
+
+    # --------------------------------------------------------- compaction
+    def _run_minor(self) -> None:  # holds: lock
+        pr = self.programs
+        step = pr.minor_step()
+        self.state.update(step(self._sub(pr._minor_names())))
         # Mirror the device guard exactly: a tablet flushes iff it holds
         # rows AND has a free run slot.
-        flushed = (self._fill > 0) & (self._runs_host < self.max_runs)
+        flushed = (self._fill > 0) & (self._runs_host < pr.max_runs)
         self._runs_host += flushed
+        self._minor_host += flushed
         self._fill = np.where(flushed, 0, self._fill)
         if flushed.any():
             self._gen["mem"] += 1  # memtables drained
             self._gen["runs"] += 1  # run slabs gained a slot
 
-    def _run_major(self) -> None:  # holds: _lock
-        step = self._major_step()
-        run_names, base_names = self._major_names()
+    def _run_major(self) -> None:  # holds: lock
+        pr = self.programs
+        step = pr.major_step()
+        run_names, base_names = pr._major_names()
         out_r, out_b = step(self._sub(run_names), self._sub(base_names))
         self.state.update(out_r)
         self.state.update(out_b)
+        self._major_host += self._runs_host > 0
         if self._runs_host.max() > 0:
             self._gen["runs"] += 1
             self._gen["base"] += 1
         self._runs_host[:] = 0
 
-    def _run_fold_one(self) -> None:  # holds: _lock
+    def _run_fold_one(self) -> None:  # holds: lock
         """One increment: every tablet with runs folds its top run slot
-        into its base (see _fold_one_step). Host run mirror drops by one
+        into its base (see _build_fold_one). Host run mirror drops by one
         where it was positive — exactly the device guard."""
-        step = self._fold_one_step()
-        run_names, base_names = self._major_names()
+        pr = self.programs
+        step = pr.fold_one_step()
+        run_names, base_names = pr._major_names()
         out_r, out_b = step(self._sub(run_names), self._sub(base_names))
         self.state.update(out_r)
         self.state.update(out_b)
+        # The increment that folds a tablet's LAST run completes a major.
+        self._major_host += self._runs_host == 1
         if self._runs_host.max() > 0:
             self._gen["runs"] += 1
             self._gen["base"] += 1
         self._runs_host = np.maximum(self._runs_host - 1, 0).astype(self._runs_host.dtype)
 
+    # ------------------------------------------------------------- ingest
     def ingest(
         self, rts: np.ndarray, cols: np.ndarray, tab: np.ndarray, writer_id: int = 0
     ) -> float:
-        """Append a pre-encoded, pre-sharded batch. rts int32 reversed
-        timestamps; cols (n, F) int32 codes; tab (n,) int32 tablet ids.
-        Returns seconds this writer spent blocked on major compactions it
-        tripped (backpressure) — the server-side half of a DistBatchWriter
-        flush. Also accrued to blocked_by_writer[writer_id], with the
-        plane scalar kept as the sum over writers. Ordinary lock wait
-        (peer appends, jit tracing) is deliberately NOT counted: the
-        metric is compaction-attributed, like the host Tablet's."""
+        """Append a pre-encoded batch whose `tab` ids are GROUP-LOCAL
+        (facade callers subtract t0). Returns seconds this writer spent
+        blocked on major compactions it tripped in THIS group; accrued to
+        the plane-shared per-writer blocked counter, so the plane scalar
+        stays the sum over writers no matter how waits split across
+        groups. Ordinary lock wait (peer appends, jit tracing) is
+        deliberately NOT counted: the metric is compaction-attributed,
+        like the host Tablet's (the group lock's own wait books cover
+        lock contention — see obs.occupancy)."""
         n = len(rts)
         if n == 0:
             return 0.0
         rts = np.asarray(rts, np.int32)
         cols = np.asarray(cols, np.int32)
         tab = np.asarray(tab, np.int32)
-        with self._lock.hold("ingest_append"):
-            # Build/fetch the jitted step UNDER the lock: _append_step
-            # caches into the shared self._steps dict, and two writers'
-            # first flushes racing here would otherwise trace twice (or
-            # corrupt the dict) — found by reprolint's guarded-by rule.
-            append = self._append_step()
-            with span("ingest.append", cat="ingest", rows=n, writer=writer_id) as sp:
+        with self.lock.hold("ingest_append"):
+            append = self.programs.append_step()
+            with span(
+                "ingest.append", cat="ingest", rows=n, writer=writer_id,
+                group=self.gid,
+            ) as sp:
                 blocked = self._ingest_locked(append, rts, cols, tab, n)
                 sp.set(blocked_s=blocked)
             self._m_blocked.inc(blocked, writer=writer_id)
             return blocked
 
-    def _ingest_locked(self, append, rts, cols, tab, n: int) -> float:  # holds: _lock
+    def _ingest_locked(self, append, rts, cols, tab, n: int) -> float:  # holds: lock
+        pr = self.programs
         s = self.state
         blocked = 0.0
-        b = self.append_rows
-        names = self._append_names()
+        b = pr.append_rows
+        names = pr._append_names()
         for off in range(0, n, b):
             chunk = min(b, n - off)
             tab_chunk = tab[off : off + chunk]
             cb = np.bincount(tab_chunk, minlength=self.n_tablets)
             # Exact room check from the host-side fill mirror: flush only
             # the moment some tablet's memtable would actually overflow.
-            if np.any(self._fill + cb > self.mem_rows):
-                if np.any((self._fill > 0) & (self._runs_host >= self.max_runs)):
+            if np.any(self._fill + cb > pr.mem_rows):
+                if np.any((self._fill > 0) & (self._runs_host >= pr.max_runs)):
                     # No free run slot for a tablet that must flush: major
                     # compaction first — it BLOCKS the writer that tripped
                     # it, Accumulo's backpressure reproduced on the mesh.
                     # For the occupancy books this stretch of the ingest
                     # hold is fold work, not append work.
                     t0 = time.perf_counter()
-                    with self._lock.reowner("fold_increment"):
-                        with span("ingest.major", cat="ingest"):
+                    with self.lock.reowner("fold_increment"):
+                        with span("ingest.major", cat="ingest", group=self.gid):
                             self._run_major()
                             jax.block_until_ready(self.state["ev_base_n"])
                     blocked += time.perf_counter() - t0
                     self._m_folds.inc(source="ingest")
-                with span("ingest.minor", cat="ingest"):
+                with span("ingest.minor", cat="ingest", group=self.gid):
                     self._run_minor()
             pad_rts = np.zeros((b,), np.int32)
-            pad_cols = np.zeros((b, self.n_fields), np.int32)
+            pad_cols = np.zeros((b, pr.n_fields), np.int32)
             pad_tab = np.full((b,), -1, np.int32)  # -1: no tablet claims it
             pad_rts[:chunk] = rts[off : off + chunk]
             pad_cols[:chunk] = cols[off : off + chunk]
@@ -874,30 +889,32 @@ class DistIngestPlane:
                 )
             )
             self._fill += cb
+            self._rows_host += cb
         self._dirty = True
         self._gen["mem"] += 1  # appends touch only the memtable level
         return blocked
 
     # -------------------------------------------------------------- reads
-    def publish(self) -> DistStore:
-        """Snapshot the plane into a query-visible DistStore — ALL levels
+    def snapshot(self) -> DistStore:
+        """Snapshot this group into a query-visible DistStore — ALL levels
         of every family: base runs, sorted-run slabs, and a sealed (sorted)
         copy of the memtables. NO fold happens here: the run-aware read
-        path searches every level, so publish costs O(live memtable fill)
-        device work (the seal sort) + a metadata flip, independent of base
-        fill AND of memtable capacity —
-        major compaction, threshold-driven during ingest or batched via
-        compact(), is the only point where runs merge into the base.
+        path searches every level, so a snapshot costs O(live memtable
+        fill) device work (the seal sort) + a metadata flip, independent
+        of base fill AND of memtable capacity — major compaction,
+        threshold-driven during ingest or batched via compact(), is the
+        only point where runs merge into the base.
 
         The whole snapshot — seal program, state references, cache flip —
-        happens under the plane lock, so a publish racing concurrent
-        writer ingest can never observe a torn state (a chunk half
-        appended, or memtables sealed mid-compaction): every ingest call
-        mutates state under the same lock. Cheap no-op when nothing was
-        ingested since the last publish."""
-        with span("ingest.publish", cat="ingest"), self._lock.hold("publish_seal"):
+        happens under the GROUP lock only (no global stop-the-world: other
+        groups keep appending), so a snapshot racing concurrent writer
+        ingest can never observe a torn state: every ingest call mutates
+        this group's state under the same lock. Cheap no-op when nothing
+        was ingested since the last snapshot."""
+        with self.lock.hold("publish_seal"):
             if not self._dirty and self._published is not None:
                 return self._published
+            pr = self.programs
             # Fill-bounded seal: the host fill mirror is exact, so the
             # seal program sorts only the live head of each memtable
             # (pow2-bucketed to bound compilations) — a near-empty
@@ -915,14 +932,16 @@ class DistIngestPlane:
                 self._m_last_seal_rows.set_value(seal_rows)
                 self._m_seal.inc(event="reuse")
             else:
-                seal_rows = self._seal_bucket(int(self._fill.max()))
+                seal_rows = pr._seal_bucket(int(self._fill.max()))
                 self._m_last_seal_rows.set_value(seal_rows)
-                with span("ingest.seal", cat="ingest", seal_rows=seal_rows):
-                    sealed = self._seal_step(seal_rows)(self._sub(self._seal_names()))
+                with span(
+                    "ingest.seal", cat="ingest", seal_rows=seal_rows, group=self.gid
+                ):
+                    sealed = pr.seal_step(seal_rows)(self._sub(pr._seal_names()))
                 self._sealed_cache = (gen_mem, sealed, seal_rows)
                 self._m_seal.inc(event="seal")
             s = self.state
-            has_ix = len(self.families) > 1
+            has_ix = len(pr.families) > 1
             self._published = DistStore(
                 rev_ts=s["ev_base_k"],
                 cols=s["ev_base_c"],
@@ -949,36 +968,25 @@ class DistIngestPlane:
                 ag_mem_k=sealed["ag_sealed_k"] if has_ix else None,
                 ag_mem_c=sealed["ag_sealed_c"] if has_ix else None,
                 ag_mem_n=sealed["ag_sealed_n"] if has_ix else None,
-                agg_bucket_s=self.agg_bucket_s if has_ix else None,
+                agg_bucket_s=pr.agg_bucket_s if has_ix else None,
                 gens=dict(self._gen),
             )
             self._dirty = False
             return self._published
 
+    # ------------------------------------------------------------- warmup
     def warm_seal(self) -> None:
-        """Pre-compile (and once-execute) the fill-bounded seal program
-        for every pow2 bucket up to mem_rows — log2-many variants.
-        Serving deployments call this once at startup so no publish ever
-        pays an XLA compile mid-query (a cold bucket otherwise lands its
-        compile time in some session's time-to-first-result)."""
-        with self._lock.hold("warmup"):
+        with self.lock.hold("warmup"):
+            pr = self.programs
             seal_rows = 8
             while True:
-                self._seal_step(seal_rows)(self._sub(self._seal_names()))
-                if seal_rows >= self.mem_rows:
+                pr.seal_step(seal_rows)(self._sub(pr._seal_names()))
+                if seal_rows >= pr.mem_rows:
                     break
-                seal_rows = min(seal_rows * 2, self.mem_rows)
+                seal_rows = min(seal_rows * 2, pr.mem_rows)
 
     def warm_compaction(self) -> None:
-        """Pre-compile (and once-execute) every compaction program —
-        minor flush, incremental fold step, full major — so no later
-        background increment or blocking major pays an XLA compile (a
-        cold fold program otherwise lands its whole compile time inside
-        one \"bounded\" increment). Runs the real programs on the current
-        state: anything staged gets drained exactly like compact(), and
-        is attributed the same way; on a drained plane all three are
-        device no-ops."""
-        with self._lock.hold("warmup"):
+        with self.lock.hold("warmup"):
             staged = bool(int(self._fill.max()) or int(self._runs_host.max()))
             self._run_minor()
             self._run_fold_one()
@@ -987,43 +995,44 @@ class DistIngestPlane:
                 self._dirty = True
                 self._m_folds.inc(source="explicit")
 
+    # -------------------------------------------------------- bookkeeping
     def has_unfolded(self) -> bool:
-        """True when memtables or run slots hold rows — i.e. compact()
-        would actually fold something. Exact from the host-side fill/run
-        mirrors: zero device syncs, so the serve plane's background
-        compactor can poll it from its idle loop for free."""
-        with self._lock.hold("bookkeeping"):
+        """True when this group's memtables or run slots hold rows — i.e.
+        compact() on it would fold something. Exact from the host-side
+        mirrors: zero device syncs."""
+        with self.lock.hold("bookkeeping"):
             return bool(int(self._fill.max()) or int(self._runs_host.max()))
 
     def fold_debt(self) -> int:
-        """Deepest run-slot usage across tablets (host mirror, free): how
-        close ingest is to tripping a blocking major (at max_runs). The
-        background compactor folds urgently above its debt threshold and
-        otherwise waits for a sustained idle window — a major costs
-        seconds of device time at scale, so WHEN it runs is the whole
-        game."""
-        with self._lock.hold("bookkeeping"):
+        """Deepest run-slot usage across this group's tablets (host
+        mirror, free): how close its ingest is to tripping a blocking
+        major (at max_runs). The facade's compact_step picks the
+        most-indebted group by this signal."""
+        with self.lock.hold("bookkeeping"):
             return int(self._runs_host.max())
 
-    def compact(self, source: str = "explicit") -> int:
-        """Batched background fold: drain memtables into runs (minor) and
-        runs into the base (major) for every family. This — plus the
-        threshold-driven majors ingest itself trips — is the ONLY place
-        runs fold into the base; publish() never does. Call it off the
-        query path (the serve plane's BackgroundCompactor, an idle
-        writer) to keep run counts low; queries stay exact either way,
-        the fold only moves where rows live. No-op (and keeps the
-        published-view cache) when there is nothing to fold.
+    def counter_mirrors(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Copies of the exact per-tablet (rows, minor, major) host
+        mirrors — the zero-sync source for the plane's per-tablet
+        registry gauges at publish()/telemetry() boundaries."""
+        with self.lock.hold("bookkeeping"):
+            return self._rows_host.copy(), self._minor_host.copy(), self._major_host.copy()
 
-        `source` attributes the fold in telemetry()["fold_events"]
-        (see __init__); returns the number of minor+major passes run
-        (0 for the no-op), so callers like the compactor can count real
-        folds without a telemetry round trip."""
-        with self._lock.hold("fold_increment"):
+    def gen_snapshot(self) -> Dict[str, int]:
+        with self.lock.hold("bookkeeping"):
+            return dict(self._gen)
+
+    # --------------------------------------------------------------- fold
+    def compact(self, source: str = "explicit") -> int:
+        """Batched background fold of THIS group: drain memtables into
+        runs (minor) and runs into the base (major) for every family —
+        see DistIngestPlane.compact. Returns minor+major passes run (0
+        for the no-op)."""
+        with self.lock.hold("fold_increment"):
             if int(self._fill.max()) == 0 and int(self._runs_host.max()) == 0:
                 return 0  # exact mirrors: nothing in memtables or run slots
             passes = 0
-            with span("ingest.compact", cat="ingest", source=source) as sp:
+            with span("ingest.compact", cat="ingest", source=source, group=self.gid) as sp:
                 for _ in range(3):
                     self._run_minor()
                     self._run_major()
@@ -1038,9 +1047,395 @@ class DistIngestPlane:
             return passes
 
     def compact_step(self, source: str = "explicit") -> int:
+        """ONE bounded increment of compaction for THIS group, under only
+        this group's lock — see DistIngestPlane.compact_step. Returns 1
+        when an increment ran, else 0."""
+        with self.lock.hold("fold_increment"):
+            if int(self._runs_host.max()) > 0:
+                with span(
+                    "ingest.fold_increment", cat="ingest", source=source,
+                    kind="fold", group=self.gid,
+                ):
+                    self._run_fold_one()
+            elif int(self._fill.max()) > 0:
+                with span(
+                    "ingest.fold_increment", cat="ingest", source=source,
+                    kind="minor", group=self.gid,
+                ):
+                    self._run_minor()
+            else:
+                return 0  # exact mirrors: nothing staged anywhere
+            self._m_folds.inc(source=source)
+            self._dirty = True  # published view now points at stale levels
+            return 1
+
+    # ---------------------------------------------------------- telemetry
+    def telemetry_arrays(self) -> Dict[str, np.ndarray]:
+        """Device counters of this group's tablets, fetched under the
+        group lock (local tablet order == a contiguous global slice)."""
+        with self.lock.hold("bookkeeping"):
+            pr = self.programs
+            alias = {
+                "rows": "rows", "minor": "minor", "major": "major",
+                "n_runs": "n_runs", "overflow": "ev_overflow",
+                "mem_n": "ev_mem_n", "base_n": "ev_base_n",
+            }
+            out = {
+                name: np.asarray(jax.device_get(self.state[key]))
+                for name, key in alias.items()
+            }
+            for f in pr.families[1:]:
+                out[f"{f.name}_overflow"] = np.asarray(
+                    jax.device_get(self.state[f"{f.name}_overflow"])
+                )
+                out[f"{f.name}_base_n"] = np.asarray(
+                    jax.device_get(self.state[f"{f.name}_base_n"])
+                )
+            return out
+
+
+class DistIngestPlane:
+    """Device-resident LSM tablet grid + its jitted ingest/compaction
+    programs, sharded into ``n_groups`` independently-locked
+    :class:`TabletGroup`s. T = n_devices * tablets_per_device global
+    tablets; group g owns the contiguous range
+    [g * T/G, (g+1) * T/G), each tablet with a memtable slab (mem_rows),
+    max_runs sorted-run slots (mem_rows each) and a base run (capacity
+    rows) — per family (see module docstring).
+
+    This class is a thin FACADE: it routes batches to groups by tablet
+    id, composes per-group snapshots at publish(), picks the
+    most-indebted group for compact_step(), and aggregates telemetry.
+    All device state and locking live in the groups; with the default
+    ``n_groups=1`` every legacy single-lock behavior (state dict
+    identity, "plane_lock" occupancy books, publish aliasing) is
+    preserved exactly."""
+
+    def __init__(
+        self,
+        mesh: Mesh,
+        n_fields: int,
+        capacity: int,
+        tablets_per_device: int = 1,
+        mem_rows: int = 4096,
+        max_runs: int = 4,
+        append_rows: int = 1024,
+        indexed_fids: Sequence[int] = (),
+        agg_bucket_s: int = DEFAULT_AGG_BUCKET_SECONDS,
+        kernel_backend: str = "auto",
+        n_groups: int = 1,
+    ):
+        if n_groups < 1:
+            raise ValueError(f"n_groups must be >= 1, got {n_groups}")
+        if tablets_per_device % n_groups:
+            raise ValueError(
+                f"n_groups={n_groups} must divide tablets_per_device="
+                f"{tablets_per_device}: each group owns an equal, contiguous "
+                "per-device tablet slice"
+            )
+        self.mesh = mesh
+        self.axes = tuple(mesh.axis_names)
+        self.n_fields = int(n_fields)
+        self.tablets_per_device = int(tablets_per_device)
+        self.n_tablets = _n_devices(mesh) * self.tablets_per_device
+        self.n_groups = int(n_groups)
+        self.tablets_per_group = self.n_tablets // self.n_groups
+        self.capacity = int(capacity)
+        self.mem_rows = int(mem_rows)
+        self.max_runs = int(max_runs)
+        self.append_rows = int(min(append_rows, mem_rows))
+        self.indexed_fids = tuple(int(f) for f in indexed_fids)
+        self.agg_bucket_s = int(agg_bucket_s)
+        self.kernel_backend = kernel_backend
+        # All plane counters live on a PRIVATE metrics registry (plane
+        # instances in one process never share cells) and are SHARED by
+        # every group; the legacy names (seal_events, blocked_seconds,
+        # fold_events, ...) remain as properties over these metrics.
+        # Fold accounting: every run->base fold is attributed to whoever
+        # drove it — "ingest" counts BLOCKING majors tripped by a
+        # writer's flush (one per major), and each `source` passed to
+        # compact() ("explicit" callers, "background" for the serve
+        # plane's compactor) counts that call's drain passes. Routine
+        # minor flushes are not folds and are not attributed (the
+        # per-tablet `minor` counter already tracks them). What matters
+        # for the serve plane: the query path NEVER appears here — reads
+        # cannot fold by construction — and telemetry()["fold_events"]
+        # proves it.
+        self.metrics = MetricsRegistry(f"plane{next(_plane_seq)}")
+        self._m_seal = self.metrics.counter(
+            "plane_seal_total", "publishes that ran (event=seal) vs aliased (event=reuse)"
+        )
+        self._m_blocked = self.metrics.counter(
+            "plane_blocked_seconds_total", "writer seconds blocked on tripped majors"
+        )
+        self._m_folds = self.metrics.counter(
+            "plane_fold_events_total", "run->base folds by driving source"
+        )
+        self._m_last_seal_rows = self.metrics.gauge(
+            "plane_last_seal_rows", "event-family slots the last publish sorted"
+        )
+        # Per-tablet device counters surfaced WITHOUT a device sync: set
+        # from the groups' exact host mirrors at publish()/telemetry()
+        # boundaries only (labels carry the GLOBAL tablet id).
+        self._m_tab_rows = self.metrics.gauge(
+            "plane_tablet_rows", "rows appended per tablet (host mirror)"
+        )
+        self._m_tab_minor = self.metrics.gauge(
+            "plane_tablet_minor", "minor compactions per tablet (host mirror)"
+        )
+        self._m_tab_major = self.metrics.gauge(
+            "plane_tablet_major", "major compactions per tablet (host mirror)"
+        )
+        programs = _PlanePrograms(
+            mesh, n_fields, capacity, self.tablets_per_device // self.n_groups,
+            mem_rows, max_runs, append_rows, self.indexed_fids,
+            self.agg_bucket_s, kernel_backend,
+        )
+        self.programs = programs
+        self.families = programs.families
+        self.groups: Tuple[TabletGroup, ...] = tuple(
+            TabletGroup(
+                g, self.n_groups, programs,
+                self._m_seal, self._m_blocked, self._m_folds,
+                self._m_last_seal_rows,
+            )
+            for g in range(self.n_groups)
+        )
+        # Facade-global bits: session stats and the composite-snapshot
+        # cache sit under a META lock (never held across device work, and
+        # never nested inside a group lock), so they stay race-free while
+        # group locks split the ingest path.
+        self._meta_lock = OwnedLock("plane_meta_lock")
+        # Serve-plane sessions report through the same telemetry structure
+        # as ingest writers (record_session); key = session id.
+        self.session_stats: Dict[int, Dict[str, float]] = {}  # guarded-by: _meta_lock
+        self._composite: Optional[DistStore] = None  # guarded-by: _meta_lock
+
+    # ------------------------------------------------- legacy metric views
+    # Thin views over the plane registry, kept so six PRs of tests and
+    # benches read the same names they always did. blocked_seconds also
+    # accepts `= 0.0` (benches zero it between rounds) — anything else
+    # would silently desync the per-writer cells, so it raises.
+    @property
+    def seal_events(self) -> int:
+        return int(self._m_seal.value(event="seal"))
+
+    @property
+    def seal_reuses(self) -> int:
+        return int(self._m_seal.value(event="reuse"))
+
+    @property
+    def blocked_seconds(self) -> float:
+        return self._m_blocked.total()
+
+    @blocked_seconds.setter
+    def blocked_seconds(self, v: float) -> None:
+        if v != 0:
+            raise ValueError("blocked_seconds can only be reset to 0")
+        self._m_blocked.reset()
+
+    @property
+    def blocked_by_writer(self) -> Dict[int, float]:
+        return {
+            int(dict(key)["writer"]): v for key, v in self._m_blocked.cells().items()
+        }
+
+    @property
+    def fold_events(self) -> Dict[str, int]:
+        return {dict(key)["source"]: int(v) for key, v in self._m_folds.cells().items()}
+
+    @property
+    def last_seal_rows(self) -> int:
+        return int(self._m_last_seal_rows.value())
+
+    # -------------------------------------------- legacy single-group views
+    @property
+    def state(self) -> Dict[str, jax.Array]:
+        """The device state dict — single-group planes only (a sharded
+        plane has one state dict PER GROUP; address plane.groups[g].state
+        explicitly there)."""
+        if self.n_groups != 1:
+            raise RuntimeError(
+                "plane.state is ambiguous with n_groups > 1; "
+                "use plane.groups[g].state"
+            )
+        return self.groups[0].state
+
+    @property
+    def _lock(self) -> OwnedLock:
+        """The legacy plane lock — group 0's lock. Meaningful as THE
+        plane lock only when n_groups == 1 (benches/tests key on it); a
+        sharded plane has one lock per group."""
+        return self.groups[0].lock
+
+    @property
+    def _dirty(self) -> bool:
+        return any(g._dirty for g in self.groups)
+
+    @_dirty.setter
+    def _dirty(self, v: bool) -> None:
+        for g in self.groups:
+            g._dirty = bool(v)
+
+    @property
+    def _fill(self) -> np.ndarray:
+        if self.n_groups == 1:
+            return self.groups[0]._fill
+        return np.concatenate([g._fill for g in self.groups])
+
+    @property
+    def _runs_host(self) -> np.ndarray:
+        if self.n_groups == 1:
+            return self.groups[0]._runs_host
+        return np.concatenate([g._runs_host for g in self.groups])
+
+    @classmethod
+    def for_store(cls, store, mesh: Mesh, capacity: int, **kw) -> "DistIngestPlane":
+        """Plane bound to a host store's schema: maintains index postings
+        and aggregate counts for the store's indexed fields, with the
+        store's aggregate bucketing (so host and dist densities agree)."""
+        kw.setdefault(
+            "indexed_fids", tuple(int(f) for f in store._indexed_field_ids)
+        )
+        kw.setdefault("agg_bucket_s", store.agg_bucket_seconds)
+        return cls(mesh, store.schema.n_fields, capacity, **kw)
+
+    # ------------------------------------------------------------- ingest
+    def ingest(
+        self, rts: np.ndarray, cols: np.ndarray, tab: np.ndarray, writer_id: int = 0
+    ) -> float:
+        """Append a pre-encoded, pre-sharded batch. rts int32 reversed
+        timestamps; cols (n, F) int32 codes; tab (n,) int32 GLOBAL tablet
+        ids. Routes each row to the group owning its tablet (group =
+        tab // tablets_per_group) — rows for different groups append
+        under different locks, so writers whose batches land on disjoint
+        groups proceed fully concurrently. Returns seconds this writer
+        spent blocked on major compactions it tripped (backpressure),
+        summed across the groups this batch touched; also accrued to
+        blocked_by_writer[writer_id], with the plane scalar kept as the
+        sum over writers."""
+        n = len(rts)
+        if n == 0:
+            return 0.0
+        rts = np.asarray(rts, np.int32)
+        cols = np.asarray(cols, np.int32)
+        tab = np.asarray(tab, np.int32)
+        if self.n_groups == 1:
+            return self.groups[0].ingest(rts, cols, tab, writer_id=writer_id)
+        gids = tab // np.int32(self.tablets_per_group)
+        blocked = 0.0
+        for g in self.groups:
+            m = gids == g.gid
+            if not m.any():
+                continue
+            blocked += g.ingest(
+                rts[m], cols[m], (tab[m] - np.int32(g.t0)), writer_id=writer_id
+            )
+        return blocked
+
+    # -------------------------------------------------------------- reads
+    def publish(self) -> DistStore:
+        """Snapshot the plane into a query-visible DistStore — ALL levels
+        of every family, composed from per-group zero-copy snapshots with
+        NO global stop-the-world: each group seals under only its own
+        lock (concurrent writers on other groups never stall), and a
+        group that is clean since its last snapshot ALIASES its previous
+        arrays. Single-group planes return the group's DistStore directly
+        (the legacy zero-copy snapshot, identity-preserving); sharded
+        planes return a COMPOSITE DistStore whose ``groups`` tuple holds
+        the per-group sub-stores in global tablet order, with per-group
+        generation tags under ``gens["g<i>"]`` — the read path
+        (core/dist_query.py) fans out over the sub-stores and each
+        sub-store keeps its own planner density cache, so untouched
+        groups' caches survive publishes of busy ones."""
+        with span("ingest.publish", cat="ingest"):
+            if self.n_groups == 1:
+                out = self.groups[0].snapshot()
+                self._update_tablet_gauges()
+                return out
+            subs = tuple(g.snapshot() for g in self.groups)
+            self._update_tablet_gauges()
+            with self._meta_lock.hold("publish_compose"):
+                cached = self._composite
+                if cached is not None and all(
+                    a is b for a, b in zip(cached.groups, subs)
+                ):
+                    return cached
+                self._composite = DistStore(
+                    mesh=self.mesh,
+                    groups=subs,
+                    gens={
+                        f"g{g.gid}": dict(sub.gens)
+                        for g, sub in zip(self.groups, subs)
+                    },
+                )
+                return self._composite
+
+    def warm_seal(self) -> None:
+        """Pre-compile (and once-execute) the fill-bounded seal program
+        for every pow2 bucket up to mem_rows — log2-many variants.
+        Serving deployments call this once at startup so no publish ever
+        pays an XLA compile mid-query (a cold bucket otherwise lands its
+        compile time in some session's time-to-first-result). The step
+        cache is shared across groups, so later groups replay compiled
+        programs (one device execution each, no new traces)."""
+        for g in self.groups:
+            g.warm_seal()
+
+    def warm_compaction(self) -> None:
+        """Pre-compile (and once-execute) every compaction program —
+        minor flush, incremental fold step, full major — so no later
+        background increment or blocking major pays an XLA compile (a
+        cold fold program otherwise lands its whole compile time inside
+        one \"bounded\" increment). Runs the real programs on each
+        group's current state: anything staged gets drained exactly like
+        compact(), and is attributed the same way; on a drained plane
+        all three are device no-ops."""
+        for g in self.groups:
+            g.warm_compaction()
+
+    def has_unfolded(self) -> bool:
+        """True when ANY group's memtables or run slots hold rows — i.e.
+        compact() would actually fold something. Exact from the host-side
+        fill/run mirrors: zero device syncs, so the serve plane's
+        background compactor can poll it from its idle loop for free."""
+        return any(g.has_unfolded() for g in self.groups)
+
+    def fold_debt(self) -> int:
+        """Deepest run-slot usage across ALL tablets of ALL groups (host
+        mirrors, free): how close ingest is to tripping a blocking major
+        (at max_runs). The background compactor folds urgently above its
+        debt threshold and otherwise waits for a sustained idle window —
+        a major costs seconds of device time at scale, so WHEN it runs
+        is the whole game."""
+        return max(g.fold_debt() for g in self.groups)
+
+    def compact(self, source: str = "explicit") -> int:
+        """Batched background fold of EVERY group: drain memtables into
+        runs (minor) and runs into the base (major) for every family.
+        This — plus the threshold-driven majors ingest itself trips — is
+        the ONLY place runs fold into the base; publish() never does.
+        Call it off the query path (the serve plane's
+        BackgroundCompactor, an idle writer) to keep run counts low;
+        queries stay exact either way, the fold only moves where rows
+        live. No-op (and keeps the published-view caches) when there is
+        nothing to fold.
+
+        `source` attributes the fold in telemetry()["fold_events"]
+        (see __init__); returns the number of minor+major passes run
+        summed over groups (0 for the no-op), so callers like the
+        compactor can count real folds without a telemetry round trip."""
+        return sum(g.compact(source) for g in self.groups)
+
+    def compact_step(self, source: str = "explicit") -> int:
         """ONE bounded increment of compaction — the preemptible unit the
         serve plane's BackgroundCompactor interleaves between session
-        turns. Exactly one device program runs per call:
+        turns. The MOST-INDEBTED group is picked (deepest run-slot
+        usage, ties broken toward staged memtable rows then lower group
+        id) and exactly one device program runs under ONLY that group's
+        lock — a fold increment never stalls writers on the other G-1
+        groups. Per group the increment is the same preemptible unit as
+        before:
 
           * run slots occupied  -> fold every tablet's TOP run slot into
             its base (one 2-way O(capacity + mem_rows) merge per family,
@@ -1059,81 +1454,100 @@ class DistIngestPlane:
         numpy oracle in tests). Returns 1 when an increment ran, else 0;
         increments are attributed to fold_events[source] like compact()
         passes."""
-        with self._lock.hold("fold_increment"):
-            if int(self._runs_host.max()) > 0:
-                with span("ingest.fold_increment", cat="ingest", source=source, kind="fold"):
-                    self._run_fold_one()
-            elif int(self._fill.max()) > 0:
-                with span("ingest.fold_increment", cat="ingest", source=source, kind="minor"):
-                    self._run_minor()
-            else:
-                return 0  # exact mirrors: nothing staged anywhere
-            self._m_folds.inc(source=source)
-            self._dirty = True  # published view now points at stale levels
-            return 1
+        if self.n_groups == 1:
+            return self.groups[0].compact_step(source)
+        # Debt signals are read per group under its own lock; the pick can
+        # race a concurrent writer, so each candidate re-checks under its
+        # lock (compact_step returns 0 if its group drained meanwhile) and
+        # the scan falls through to the next-most-indebted group.
+        ranked = sorted(
+            self.groups,
+            key=lambda g: (g.fold_debt(), g.has_unfolded()),
+            reverse=True,
+        )
+        for g in ranked:
+            if g.compact_step(source):
+                return 1
+        return 0
 
     def record_session(self, session_id: int, stats: Dict[str, float]) -> None:
         """Serve-plane hook: a QuerySession reports its telemetry (batches
         served, time-to-first-result, queue-wait seconds, ...) into the
         plane, so clients of the query-serving plane and ingest writers
         surface through ONE structure — telemetry()["sessions"] next to
-        ["blocked_seconds_per_writer"]. Bounded: only the most recent
-        1024 sessions are retained (insertion order), so per-connection
-        sessions on a long-lived service don't grow the plane without
-        limit."""
-        with self._lock.hold("bookkeeping"):
+        ["blocked_seconds_per_writer"]. Guarded by the facade's meta
+        lock, NOT any group lock: session merges stay race-free no matter
+        which groups concurrent turns touch. Bounded: only the most
+        recent 1024 sessions are retained (insertion order), so
+        per-connection sessions on a long-lived service don't grow the
+        plane without limit."""
+        with self._meta_lock.hold("bookkeeping"):
             self.session_stats.pop(int(session_id), None)  # refresh position
             self.session_stats[int(session_id)] = dict(stats)
             while len(self.session_stats) > 1024:
                 self.session_stats.pop(next(iter(self.session_stats)))
 
+    def _update_tablet_gauges(self) -> None:
+        """Snapshot the groups' exact per-tablet host mirrors into the
+        plane registry gauges (labels = GLOBAL tablet id). Zero device
+        syncs: the mirrors are maintained in lockstep with the device
+        programs, and this runs only at publish()/telemetry() boundaries."""
+        for g in self.groups:
+            rows, minor, major = g.counter_mirrors()
+            for i in range(len(rows)):
+                t = g.t0 + i
+                self._m_tab_rows.set(float(rows[i]), tablet=t)
+                self._m_tab_minor.set(float(minor[i]), tablet=t)
+                self._m_tab_major.set(float(major[i]), tablet=t)
+
     def telemetry(self) -> Dict[str, np.ndarray]:
-        """Per-tablet device counters (the paper's backpressure signals),
-        plus per-writer blocked-seconds (the §IV-A per-client curve).
+        """Per-tablet device counters (the paper's backpressure signals)
+        in GLOBAL tablet order (groups own contiguous ranges, so
+        per-group arrays concatenate in group order), plus per-writer
+        blocked-seconds (the §IV-A per-client curve — the per-writer
+        cells are plane-shared, so they sum to the scalar even when one
+        writer's waits split across several groups).
 
         Since the observability PR the scalar counters here are views of
         the plane's metrics registry (`self.metrics`); this dict remains
         the stable legacy surface, and repro.obs.metrics_snapshot() sees
         the same cells without a device sync."""
-        with self._lock.hold("bookkeeping"):
-            alias = {
-                "rows": "rows", "minor": "minor", "major": "major",
-                "n_runs": "n_runs", "overflow": "ev_overflow",
-                "mem_n": "ev_mem_n", "base_n": "ev_base_n",
-            }
-            out = {
-                name: np.asarray(jax.device_get(self.state[key]))
-                for name, key in alias.items()
-            }
-            for f in self.families[1:]:
-                out[f"{f.name}_overflow"] = np.asarray(
-                    jax.device_get(self.state[f"{f.name}_overflow"])
-                )
-                out[f"{f.name}_base_n"] = np.asarray(
-                    jax.device_get(self.state[f"{f.name}_base_n"])
-                )
-            out["blocked_seconds"] = np.float64(self.blocked_seconds)
-            out["blocked_seconds_per_writer"] = dict(self.blocked_by_writer)
-            # One reporting structure for both planes: ingest writers
-            # above, serve-plane query sessions + fold attribution below.
+        parts = [g.telemetry_arrays() for g in self.groups]
+        out: Dict[str, np.ndarray] = {
+            name: np.concatenate([p[name] for p in parts]) for name in parts[0]
+        }
+        out["blocked_seconds"] = np.float64(self.blocked_seconds)
+        out["blocked_seconds_per_writer"] = dict(self.blocked_by_writer)
+        # One reporting structure for both planes: ingest writers
+        # above, serve-plane query sessions + fold attribution below.
+        with self._meta_lock.hold("bookkeeping"):
             out["sessions"] = {k: dict(v) for k, v in self.session_stats.items()}
-            out["fold_events"] = dict(self.fold_events)
-            # Snapshot-aliasing counters: level generations plus how many
-            # publishes re-ran vs aliased the seal sort (flat seal_events
-            # across fold-only increments == no per-increment device
-            # work, the acceptance bar for bounded-stall compaction).
-            out["level_gen"] = dict(self._gen)
-            out["seal_events"] = int(self.seal_events)
-            out["seal_reuses"] = int(self.seal_reuses)
-            return out
+        out["fold_events"] = dict(self.fold_events)
+        # Snapshot-aliasing counters: level generations plus how many
+        # publishes re-ran vs aliased the seal sort (flat seal_events
+        # across fold-only increments == no per-increment device
+        # work, the acceptance bar for bounded-stall compaction).
+        if self.n_groups == 1:
+            out["level_gen"] = self.groups[0].gen_snapshot()
+        else:
+            out["level_gen"] = {
+                f"g{g.gid}": g.gen_snapshot() for g in self.groups
+            }
+        out["seal_events"] = int(self.seal_events)
+        out["seal_reuses"] = int(self.seal_reuses)
+        self._update_tablet_gauges()
+        return out
 
 
 class DistBatchWriter(BatchWriter):
     """Client-side ingest writer for the device plane (paper §II: one
     BatchWriter per parallel ingest client). Buffers parsed events exactly
     like the host BatchWriter; a flush encodes via the store's dictionaries,
-    shards by row hash, and appends through the plane — blocking while a
-    tripped major compaction drains, which is the measured backpressure.
+    shards by row hash, and appends through the plane — the row hash picks
+    a GLOBAL tablet, whose owning TabletGroup's lock is the only one the
+    append takes, so writers whose hashes land on disjoint groups proceed
+    concurrently; a flush still blocks while a major compaction it
+    tripped drains, which is the measured backpressure.
 
     writer_id keys the plane's per-writer blocked-seconds telemetry (and
     salts the row hash); when omitted, each writer gets a fresh unique id,

@@ -112,12 +112,23 @@ class DistStore:
     from_event_store bulk replay — folded up front, nothing unfolded to
     search — hand-built stores, dry-run shapes); reads then search the
     base alone.
+
+    COMPOSITE snapshots: a sharded DistIngestPlane (n_groups > 1)
+    publishes one DistStore whose ``groups`` tuple holds the per-group
+    sub-snapshots in GLOBAL tablet order (group g owns the contiguous
+    range [g * T/G, (g+1) * T/G)); the level arrays here are then None
+    and every read primitive fans out over the sub-stores, summing
+    counts and concatenating top-k slates host-side. Each sub-store
+    keeps its OWN density_cache, so the planner's memoized densities for
+    an untouched group survive publishes that only re-seal busy groups
+    (sub-snapshots alias across publishes when a group is clean).
+    ``gens`` maps "g<i>" to that group's level-generation dict.
     """
 
-    rev_ts: jax.Array
-    cols: jax.Array
-    counts: jax.Array
-    mesh: Mesh
+    rev_ts: Optional[jax.Array] = None
+    cols: Optional[jax.Array] = None
+    counts: Optional[jax.Array] = None
+    mesh: Optional[Mesh] = None
     run_rev_ts: Optional[jax.Array] = None
     run_cols: Optional[jax.Array] = None
     run_counts: Optional[jax.Array] = None
@@ -145,29 +156,46 @@ class DistStore:
     # sharing a generation for a level ALIAS that level's arrays (the
     # plane's publish reuses untouched buffers across compact_step
     # increments instead of re-copying) — tests assert the identity.
-    # None for hand-built / base-only stores.
-    gens: Optional[Dict[str, int]] = None
+    # None for hand-built / base-only stores. Composite snapshots nest
+    # per-group dicts under "g<i>" keys instead.
+    gens: Optional[Dict[str, object]] = None
+    # Per-group sub-snapshots of a sharded plane publish (None for a
+    # single-group or hand-built store): global tablet order, each a
+    # complete single-group DistStore that reads recurse into.
+    groups: Optional[Tuple["DistStore", ...]] = None
     # Per-snapshot memo for planner density reads (_agg_count_on): a
     # published snapshot is immutable, so a density within it never goes
     # stale; the memo dies with the snapshot at the next publish flip.
     density_cache: Dict[Tuple, int] = field(default_factory=dict, repr=False)
 
     @property
+    def is_composite(self) -> bool:
+        return self.groups is not None
+
+    @property
     def n_tablets(self) -> int:
+        if self.groups is not None:
+            return sum(g.n_tablets for g in self.groups)
         return self.rev_ts.shape[0]
 
     @property
     def capacity(self) -> int:
+        if self.groups is not None:
+            return self.groups[0].capacity
         return self.rev_ts.shape[1]
 
     @property
     def has_index(self) -> bool:
+        if self.groups is not None:
+            return self.groups[0].has_index
         return self.ix_keys is not None
 
     @property
     def has_runs(self) -> bool:
         """True when the snapshot carries run + sealed-memtable levels
         (a plane publish); False for base-only grids."""
+        if self.groups is not None:
+            return self.groups[0].has_runs
         return self.run_rev_ts is not None
 
 
@@ -1231,6 +1259,19 @@ class DistQueryProcessor:
         hit = cache.get(ckey)
         if hit is not None:
             return hit
+        if d.groups is not None:
+            # Composite snapshot: densities sum over the disjoint tablet
+            # groups. Each recursion memoizes in ITS sub-store's cache —
+            # sub-snapshots alias across publishes when their group is
+            # clean, so an untouched group's densities stay warm even as
+            # busy groups re-seal (the composite-level memo above only
+            # lives as long as this exact composition).
+            out = sum(
+                self._agg_count_on(sub, field, value, t_start, t_stop)
+                for sub in d.groups
+            )
+            cache[ckey] = out
+            return out
         code = self.store.dictionaries[field].lookup(value)
         if code is None:
             cache[ckey] = 0
@@ -1274,6 +1315,20 @@ class DistQueryProcessor:
         `dist` pins an already-published snapshot (QueryRun); default
         syncs to the plane's latest."""
         d = dist if dist is not None else self._sync()
+        if d.groups is not None:
+            # Composite snapshot: one device program per tablet group
+            # (each group is its own mesh-wide shard_map — same compiled
+            # step, cached on identical shapes), counts summed and top-k
+            # slates concatenated (BatchScanner semantics are unordered
+            # across tablets, so across groups too).
+            total = 0
+            ts_parts, col_parts = [], []
+            for sub in d.groups:
+                c, ts, cols = self.scan_range(tree, t0, t1, dist=sub)
+                total += c
+                ts_parts.append(ts)
+                col_parts.append(cols)
+            return total, np.concatenate(ts_parts), np.concatenate(col_parts)
         prog = compile_tree(self.store, tree)
         step, (opc, a0, a1, cs) = self._step(prog, d)
         rts_lo = jnp.int32(keypack.rev_ts(t1))
@@ -1348,6 +1403,25 @@ class DistQueryProcessor:
         `truncated` > 0 means a posting/row slab overflowed and the count
         is a lower bound — the executor falls back to filter-scan then."""
         d = dist if dist is not None else self._sync()
+        if d.groups is not None:
+            # Composite snapshot: postings of one (field, value) live in
+            # whichever groups' tablets hold matching rows — every group
+            # is searched, partial counts/truncation/candidates sum.
+            total = n_trunc = n_cands = 0
+            ts_parts, col_parts = [], []
+            for sub in d.groups:
+                c, ts, cols, tr, ca = self.scan_index_range(
+                    plan, tree, t0, t1, dist=sub
+                )
+                total += c
+                n_trunc += tr
+                n_cands += ca
+                ts_parts.append(ts)
+                col_parts.append(cols)
+            return (
+                total, np.concatenate(ts_parts), np.concatenate(col_parts),
+                n_trunc, n_cands,
+            )
         prog = compile_tree(self.store, tree)
         step, (opc, a0, a1, cs) = self._index_step(
             prog, len(plan.index_conds), plan.combine, d
@@ -1512,6 +1586,33 @@ class DistQueryProcessor:
         vt = grouping.value_table
         if vt is None:
             vt = np.ones(1, np.int32)  # unused placeholder (count op)
+        # One resolve + one plan serve every tablet group; a composite
+        # snapshot runs the per-group executor per sub-store (each group
+        # falls back to scan-agg INDEPENDENTLY on its own slab overflow)
+        # and folds the dense per-group partials on device — rows are
+        # disjoint across groups, so sum/count add and min/max fold
+        # elementwise against their identities, cnts always add.
+        subs = d.groups if d.groups is not None else (d,)
+        aggs, cnts = self._agg_range_on(subs[0], plan, grouping, prog, vt, t0, t1, stats)
+        op = grouping.spec.op
+        for sub in subs[1:]:
+            a, c = self._agg_range_on(sub, plan, grouping, prog, vt, t0, t1, stats)
+            if op in ("count", "sum"):
+                aggs = aggs + a
+            elif op == "min":
+                aggs = jnp.minimum(aggs, a)
+            else:
+                aggs = jnp.maximum(aggs, a)
+            cnts = cnts + c
+        return self._materialize_agg(grouping, aggs, cnts)
+
+    # reprolint: hot-path — aggregate_range's per-group device executor
+    def _agg_range_on(self, d: DistStore, plan: QueryPlan,
+                      grouping: ResolvedGrouping, prog: FilterProgram,
+                      vt, t0: int, t1: int, stats=None):
+        """Run one (sub-)snapshot's aggregation and return the DENSE
+        per-group (aggs, cnts) device arrays — the caller folds partials
+        across tablet groups and materializes once."""
         if plan.mode == "index" and d.has_index:
             step, (opc, a0, a1, cs) = self._index_agg_step(
                 prog, grouping, len(plan.index_conds), plan.combine, d
@@ -1527,7 +1628,7 @@ class DistQueryProcessor:
             if stats is not None:
                 stats.index_keys_scanned += int(cands)
             if not int(truncated):
-                return self._materialize_agg(grouping, aggs, cnts)
+                return aggs, cnts
             # Slab overflow: exact filter-scan aggregation below.
         step, (opc, a0, a1, cs) = self._agg_step(prog, grouping, d)
         args = (d.rev_ts, d.cols, d.counts)
@@ -1540,7 +1641,7 @@ class DistQueryProcessor:
             jnp.int32(keypack.rev_ts(t1)), jnp.int32(keypack.rev_ts(t0) + 1),
             jnp.int32(grouping.bucket_lo),
         )
-        return self._materialize_agg(grouping, aggs, cnts)
+        return aggs, cnts
 
     def execute_batched(self, tree, t_start: int, t_stop: int, stats=None):
         """Algorithm 2 over the distributed scan."""

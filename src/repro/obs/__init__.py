@@ -31,6 +31,7 @@ from .trace import (
 from .export import (
     chrome_trace,
     metrics_snapshot,
+    serve_prometheus,
     summary,
     to_prometheus_text,
     validate_chrome_trace,
@@ -56,6 +57,7 @@ __all__ = [
     "get_tracer",
     "metrics_snapshot",
     "occupancy_snapshot",
+    "serve_prometheus",
     "span",
     "summary",
     "to_prometheus_text",

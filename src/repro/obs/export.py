@@ -11,6 +11,9 @@ summary table.
   (version 0.0.4): HELP/TYPE headers, one sample line per label cell,
   histograms as cumulative ``_bucket{le=...}`` series plus ``_sum`` /
   ``_count``. Serve it from any HTTP handler to scrape the plane.
+- :func:`serve_prometheus` — a daemon-thread HTTP pull endpoint serving
+  that text at ``/metrics``, so a real Prometheus server can scrape a
+  live plane without any in-process glue.
 - :func:`summary` — a plain-text table for terminal use.
 """
 
@@ -18,6 +21,7 @@ from __future__ import annotations
 
 import json
 import re
+import threading
 from typing import Any, Dict, List, Optional
 
 from .occupancy import occupancy_snapshot
@@ -27,6 +31,7 @@ from .trace import get_tracer
 __all__ = [
     "chrome_trace",
     "metrics_snapshot",
+    "serve_prometheus",
     "summary",
     "to_prometheus_text",
     "validate_chrome_trace",
@@ -231,6 +236,62 @@ def to_prometheus_text(registry=None) -> str:
                 for key in sorted(cells):
                     lines.append(f"{name}{_prom_labels(key)} {_prom_val(cells[key])}")
     return "\n".join(lines) + "\n" if lines else ""
+
+
+class _PrometheusEndpoint:
+    """Handle returned by :func:`serve_prometheus`. Context-manager and
+    explicit ``stop()`` both shut the server down; the serving thread is
+    a daemon so a forgotten handle never blocks interpreter exit."""
+
+    def __init__(self, server, thread: threading.Thread, host: str) -> None:
+        self._server = server
+        self._thread = thread
+        self.host = host
+        self.port = server.server_address[1]
+        self.url = f"http://{host}:{self.port}/metrics"
+
+    def stop(self) -> None:
+        self._server.shutdown()
+        self._server.server_close()
+        self._thread.join(timeout=5.0)
+
+    def __enter__(self) -> "_PrometheusEndpoint":
+        return self
+
+    def __exit__(self, *exc: object) -> None:
+        self.stop()
+
+
+def serve_prometheus(registry=None, port: int = 0, host: str = "127.0.0.1") -> _PrometheusEndpoint:
+    """Start a daemon-thread HTTP server exposing :func:`to_prometheus_text`
+    at ``/metrics`` (any other path 404s). ``port=0`` binds an ephemeral
+    port; read it back from the returned handle's ``.port`` / ``.url``.
+    Scoped to one registry when given, every live registry otherwise —
+    the text is rendered fresh per scrape, so no state is cached."""
+    from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+
+    class _Handler(BaseHTTPRequestHandler):
+        def do_GET(self) -> None:  # noqa: N802 - http.server API
+            if self.path.split("?", 1)[0] != "/metrics":
+                self.send_error(404, "only /metrics is served")
+                return
+            body = to_prometheus_text(registry).encode("utf-8")
+            self.send_response(200)
+            self.send_header("Content-Type", "text/plain; version=0.0.4; charset=utf-8")
+            self.send_header("Content-Length", str(len(body)))
+            self.end_headers()
+            self.wfile.write(body)
+
+        def log_message(self, format: str, *args: object) -> None:
+            pass  # scrapes are high-frequency; keep stderr quiet
+
+    server = ThreadingHTTPServer((host, port), _Handler)
+    server.daemon_threads = True
+    thread = threading.Thread(
+        target=server.serve_forever, name="prometheus-scrape", daemon=True
+    )
+    thread.start()
+    return _PrometheusEndpoint(server, thread, host)
 
 
 def _fmt_labels(key: str) -> str:

@@ -17,6 +17,16 @@ Per-owner seconds therefore sum to ``total_held`` *exactly* — the 5%
 tolerance in the acceptance criteria covers only the test's independent
 wall-clock re-measurement, not the books.
 
+Besides HELD time, every lock also books ACQUIRE-WAIT time: the wall
+seconds a would-be holder spent inside ``acquire`` before getting the
+lock, per owner class (``total_wait_s`` / ``wait_by_owner_s`` in the
+snapshot). Held time answers "who serialized the device"; wait time
+answers "who was serialized BEHIND whom" — the sharded ingest plane's
+contention columns (``lock_group_*`` in bench_ingest_scaling) and the
+disjoint-group overlap tests read exactly this: writers on different
+tablet groups must show ~zero wait on each other's group locks, while
+the single-lock baseline's waits are the cost the sharding removed.
+
 API mirrors ``threading.Lock`` (acquire/release/context manager) so all
 existing ``with plane._lock:`` call sites keep working; unattributed
 holds are charged to ``unknown``, which CI asserts is absent on the
@@ -49,9 +59,11 @@ class OwnedLock:
         # it is only ever held for a few arithmetic ops.
         self._slock = threading.Lock()
         self.total_held = 0.0
+        self.total_wait = 0.0
         self.acquisitions = 0
         self.by_owner: Dict[str, float] = {}
         self.acq_by_owner: Dict[str, int] = {}
+        self.wait_by_owner: Dict[str, float] = {}
         self._hold_t0: Optional[float] = None
         self._seg_t0: Optional[float] = None
         self._owner: Optional[str] = None
@@ -61,10 +73,14 @@ class OwnedLock:
 
     # -- core protocol ---------------------------------------------------
     def acquire(self, blocking: bool = True, timeout: float = -1, owner: str = "unknown") -> bool:
+        t_wait = time.perf_counter()
         ok = self._lock.acquire(blocking, timeout)
         if ok:
             now = time.perf_counter()
             with self._slock:
+                waited = now - t_wait
+                self.total_wait += waited
+                self.wait_by_owner[owner] = self.wait_by_owner.get(owner, 0.0) + waited
                 self.acquisitions += 1
                 self._hold_t0 = now
                 self._seg_t0 = now
@@ -150,17 +166,21 @@ class OwnedLock:
             return {
                 "name": self.name,
                 "total_held_s": total,
+                "total_wait_s": self.total_wait,
                 "acquisitions": self.acquisitions,
                 "by_owner_s": by_owner,
                 "acq_by_owner": dict(self.acq_by_owner),
+                "wait_by_owner_s": dict(self.wait_by_owner),
             }
 
     def reset(self) -> None:
         with self._slock:
             self.total_held = 0.0
+            self.total_wait = 0.0
             self.acquisitions = 0
             self.by_owner.clear()
             self.acq_by_owner.clear()
+            self.wait_by_owner.clear()
 
 
 def all_locks() -> List[OwnedLock]:
@@ -180,9 +200,12 @@ def occupancy_snapshot() -> Dict[str, Dict[str, object]]:
             out[lk.name] = snap
         else:
             cur["total_held_s"] = float(cur["total_held_s"]) + float(snap["total_held_s"])
+            cur["total_wait_s"] = float(cur["total_wait_s"]) + float(snap["total_wait_s"])
             cur["acquisitions"] = int(cur["acquisitions"]) + int(snap["acquisitions"])
             for k, v in snap["by_owner_s"].items():  # type: ignore[union-attr]
                 cur["by_owner_s"][k] = cur["by_owner_s"].get(k, 0.0) + v  # type: ignore[index]
             for k, v in snap["acq_by_owner"].items():  # type: ignore[union-attr]
                 cur["acq_by_owner"][k] = cur["acq_by_owner"].get(k, 0) + v  # type: ignore[index]
+            for k, v in snap["wait_by_owner_s"].items():  # type: ignore[union-attr]
+                cur["wait_by_owner_s"][k] = cur["wait_by_owner_s"].get(k, 0.0) + v  # type: ignore[index]
     return out

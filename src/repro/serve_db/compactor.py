@@ -44,6 +44,16 @@ consistent) partially-folded LSM, so the worst stall any session's first
 result can park behind is ONE increment, not one major. `increments` /
 `max_increment_s` instrument exactly that bound; the starvation-guard
 test and the CI smoke assert against them.
+
+SHARDED PLANES (n_groups > 1). The compactor is oblivious to sharding by
+design: `plane.fold_debt()` reports the WORST group's run-slot debt (the
+one closest to tripping a blocking major in some writer), and every
+`plane.compact_step()` ranks groups by (debt, has_unfolded) and folds one
+increment in the most-indebted group under THAT group's lock only — so a
+background fold in group 2 never stalls writers appending to groups 0, 1
+or 3, and the one-increment stall bound the starvation guard asserts is
+now also a one-GROUP stall. `compact()` (non-incremental mode) still
+drains every group before returning.
 """
 from __future__ import annotations
 
@@ -188,7 +198,10 @@ class BackgroundCompactor:
         scheduler is re-checked before every increment, so a query
         submitted mid-major preempts at the next increment boundary. The
         drain resumes on later ticks — any prefix of increments leaves a
-        consistent LSM, an interrupted major is just lower fold debt."""
+        consistent LSM, an interrupted major is just lower fold debt.
+        On a sharded plane each compact_step targets the currently
+        most-indebted tablet group (re-ranked every increment), holding
+        only that group's lock on the plane side."""
         progressed = False
         while not self._stop.is_set():
             if svc.busy():

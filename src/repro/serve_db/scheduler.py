@@ -21,7 +21,11 @@ Two policies compose:
             (LM admission rounds).
 
 The scheduler is pure bookkeeping — it owns no threads and runs no device
-programs; the QueryService dispatcher drains it.
+programs; the QueryService dispatcher drains it. Its waits measure QUERY
+contention only: ingest appends never enter this queue (writers hold
+per-tablet-group plane locks, not the device lock), so on a sharded
+plane `max_first_turn_wait` keeps bounding first-result stalls by one
+compaction increment regardless of how many writers are live.
 """
 from __future__ import annotations
 

@@ -30,6 +30,16 @@ Every query run is pinned to the publish() snapshot it started on
 (core/dist_query.QueryRun), so a fold or a concurrent publish can never
 change an in-flight session's results — sessions see a consistent LSM
 state per query, and fresh ingest becomes visible at the next query.
+
+`_device_lock` serializes QUERY work only. Ingest never takes it: on a
+sharded plane (`DistIngestPlane(n_groups=G)`) writers append under
+per-tablet-group locks, so W `DistBatchWriter`s feed the plane live
+while sessions stream — the paper's "query under ingest" regime — and
+the only cross-plane coupling left is the compactor's non-blocking
+device-lock probe before each fold increment. Snapshot pinning is
+unchanged for composite stores: publish() composes per-group zero-copy
+snapshots (each group's gens ride along under its own key), and a run
+pinned to a composite sees every group frozen at its own generation.
 """
 from __future__ import annotations
 

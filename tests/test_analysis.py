@@ -393,8 +393,8 @@ def test_guarded_by_catches_removed_lock_in_dist_ingest_copy(tmp_path):
     clean = lint(tmp_path, src, name="clean/dist_ingest.py", rules=[GuardedByRule()])
     assert clean.fresh == []
 
-    marker = 'with self._lock.hold("bookkeeping"):'
-    i = src.index("def telemetry")
+    marker = 'with self._meta_lock.hold("bookkeeping"):'
+    i = src.index("def telemetry(")
     j = src.index(marker, i)
     mutated = src[:j] + "if True:" + src[j + len(marker):]
     res = lint(tmp_path, mutated, name="mut/dist_ingest.py", rules=[GuardedByRule()])

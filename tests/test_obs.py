@@ -606,3 +606,66 @@ def test_write_exporters_roundtrip(tmp_path):
     assert obs.validate_chrome_trace(tdoc) == []
     assert mdoc["schema_version"] == 1
     assert "lock_occupancy" in mdoc
+
+
+# ----------------------------------------------------- Prometheus endpoint
+def test_serve_prometheus_start_scrape_stop():
+    """The pull endpoint serves the exposition text at /metrics on an
+    ephemeral port, 404s other paths, and stops cleanly (twice over:
+    explicit stop and context manager)."""
+    from urllib.error import HTTPError
+    from urllib.request import urlopen
+
+    reg = MetricsRegistry("t_prom_http")
+    reg.counter("scrapes_total", "scrapes").inc(3, path="/metrics")
+    ep = obs.serve_prometheus(reg)
+    try:
+        assert ep.port > 0
+        body = urlopen(ep.url, timeout=5).read().decode()
+        assert body == obs.to_prometheus_text(reg)
+        assert 'scrapes_total{path="/metrics"} 3' in body
+        with pytest.raises(HTTPError) as exc:
+            urlopen(f"http://{ep.host}:{ep.port}/other", timeout=5)
+        assert exc.value.code == 404
+    finally:
+        ep.stop()
+    with pytest.raises(OSError):
+        urlopen(f"http://{ep.host}:{ep.port}/metrics", timeout=1)
+    with obs.serve_prometheus(reg) as ep2:
+        assert urlopen(ep2.url, timeout=5).status == 200
+
+
+# ------------------------------------------------------- lock wait accounting
+def test_owned_lock_books_acquire_wait():
+    """total_wait_s/wait_by_owner_s accumulate the time a would-be holder
+    spent inside acquire(): a sole acquirer books ~zero wait, a thread
+    blocked behind a deliberate hold books at least the hold time."""
+    lk = obs.OwnedLock("t_wait_lock")
+    with lk.hold("solo"):
+        pass
+    solo = lk.snapshot()
+    assert solo["total_wait_s"] < 0.05  # uncontended: microseconds
+    hold_s = 0.15
+    started = threading.Event()
+
+    def holder():
+        with lk.hold("hog"):
+            started.set()
+            time.sleep(hold_s)
+
+    t = threading.Thread(target=holder)
+    t.start()
+    started.wait()
+    with lk.hold("waiter"):
+        pass
+    t.join()
+    snap = lk.snapshot()
+    assert snap["wait_by_owner_s"]["waiter"] > hold_s / 2
+    assert abs(
+        sum(snap["wait_by_owner_s"].values()) - snap["total_wait_s"]
+    ) < 1e-9
+    # Merged report carries the same keys; reset clears them.
+    merged = obs.occupancy_snapshot()["t_wait_lock"]
+    assert merged["total_wait_s"] == snap["total_wait_s"]
+    lk.reset()
+    assert lk.snapshot()["total_wait_s"] == 0.0
