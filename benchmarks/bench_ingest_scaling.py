@@ -447,8 +447,14 @@ def seal_latency_probe(mem_rows: int = 65536, reps: int = 5) -> Dict:
     def timed_publishes() -> float:
         out = []
         for _ in range(reps):
-            with plane._lock.hold("bookkeeping"):
-                plane._dirty = True  # force a re-seal of the same state
+            for g in plane.groups:
+                with g.lock.hold("bookkeeping"):
+                    g._dirty = True  # force a re-seal of the same state
+                    # Defeat the generation-keyed seal reuse: with the mem
+                    # gen unchanged, publish() would alias the cached
+                    # sealed arrays and this probe would time only the
+                    # snapshot flip, not the fill-bounded sort.
+                    g._sealed_cache = None
             t0 = time.perf_counter()
             ds = plane.publish()
             jax.block_until_ready(ds.mem_rev_ts)

@@ -138,3 +138,12 @@ def emit_csv(res: Dict) -> List[str]:
         f"kernel_merge_runs,{res['merge_runs_us']:.0f},rows_per_s={res['merge_runs_rows_per_s']:.3g}",
         f"kernel_merge_runs_concat_sort,{res['merge_runs_concat_sort_us']:.0f},baseline=retired_placeholder",
     ]
+
+def emit_json(res: Dict) -> Dict:
+    """Canonical artifact (BENCH_kernels.json via benchmarks/run.py):
+    per-kernel microseconds and throughput, rounded for stable diffs."""
+    return {
+        "schema_version": 1,
+        "benchmark": "kernels",
+        "kernels": {k: round(float(v), 2) for k, v in sorted(res.items())},
+    }

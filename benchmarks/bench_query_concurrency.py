@@ -115,9 +115,10 @@ def _oracle_counts(store, mix) -> Dict[str, int]:
 
 def _session_pass(svc, mix, out: Dict, name: str):
     """One client: stream the whole query mix through one session,
-    recording per-query TTFR, total latency and counts."""
+    recording per-query TTFR, total latency, counts, and the committed
+    QueryProfile (the TTFR anatomy the breakdown columns report)."""
     s = svc.session(name)
-    ttfr, totals, counts, waits = [], [], {}, []
+    ttfr, totals, counts, waits, profiles = [], [], {}, [], []
     for q in mix:
         sq = s.submit(q["scheme"], 0, FOUR_HOURS, q["tree"])
         n = sq.count()
@@ -125,11 +126,13 @@ def _session_pass(svc, mix, out: Dict, name: str):
         ttfr.append(sq.first_result_s)
         totals.append(sq.total_s)
         waits.append(sq.queue_wait_s)
+        profiles.append(sq.profile.as_dict())
     s.close()
     out["ttfr"] = ttfr
     out["totals"] = totals
     out["counts"] = counts
     out["queue_wait_s"] = float(sum(waits))
+    out["profiles"] = profiles
 
 
 def _round(svc, mix, n_sessions: int, ingest_feed=None) -> Dict:
@@ -176,6 +179,31 @@ def _round(svc, mix, n_sessions: int, ingest_feed=None) -> Dict:
         "ttfr_p99": float(np.percentile(all_ttfr, 99)),
         "queue_wait_s": float(sum(o["queue_wait_s"] for o in outs)),
         "counts": [o["counts"] for o in outs],
+        # TTFR anatomy (QueryProfile): mean seconds per first-result
+        # stage across every query of the round, plus the worst
+        # stage-sum-vs-measured-TTFR gap (the tiling check validate()
+        # asserts at 4 sessions).
+        **_breakdown([pr for o in outs for pr in o["profiles"]]),
+    }
+
+
+_STAGES = ("admission", "plan", "density_fence", "device_step", "epilogue", "deliver")
+
+
+def _breakdown(profiles: List[Dict]) -> Dict:
+    gaps_rel, gaps_us = [0.0], [0.0]
+    for pr in profiles:
+        if pr["ttfr_s"] != pr["ttfr_s"] or pr["ttfr_s"] <= 0:  # NaN/never-first
+            continue
+        gap = abs(sum(pr[f"{st}_s"] for st in _STAGES) - pr["ttfr_s"])
+        gaps_rel.append(gap / pr["ttfr_s"])
+        gaps_us.append(gap * 1e6)
+    return {
+        "ttfr_breakdown_s": {
+            st: float(np.mean([pr[f"{st}_s"] for pr in profiles])) for st in _STAGES
+        },
+        "breakdown_gap_max_rel": float(max(gaps_rel)),
+        "breakdown_gap_max_us": float(max(gaps_us)),
     }
 
 
@@ -301,7 +329,14 @@ def emit_csv(res: Dict) -> List[str]:
             f"ttfr_p99_us={r['ttfr_p99'] * 1e6:.0f};"
             f"ttfr_max_us={r['ttfr_max'] * 1e6:.0f};"
             f"queries={r['queries']};wall_s={r['wall_s']:.2f};"
-            f"queue_wait_s={r['queue_wait_s']:.2f}"
+            f"queue_wait_s={r['queue_wait_s']:.2f};"
+            # TTFR anatomy columns (mean per stage, QueryProfile):
+            f"admission_us={r['ttfr_breakdown_s']['admission'] * 1e6:.0f};"
+            f"plan_us={r['ttfr_breakdown_s']['plan'] * 1e6:.0f};"
+            f"fence_us={r['ttfr_breakdown_s']['density_fence'] * 1e6:.0f};"
+            f"device_us={r['ttfr_breakdown_s']['device_step'] * 1e6:.0f};"
+            f"epilogue_us={r['ttfr_breakdown_s']['epilogue'] * 1e6:.0f};"
+            f"deliver_us={r['ttfr_breakdown_s']['deliver'] * 1e6:.0f}"
         )
     fe = ";".join(f"{k}={v}" for k, v in sorted(res["fold_events"].items()))
     lines.append(
@@ -330,10 +365,19 @@ def emit_json(res: Dict) -> Dict:
             "queue_wait_s": round(r["queue_wait_s"], 4),
             "wall_s": round(r["wall_s"], 3),
             "queries": r["queries"],
+            # TTFR anatomy: mean microseconds per first-result stage
+            # (QueryProfile; the six stages tile each query's TTFR).
+            "ttfr_breakdown_us": {
+                st: round(v * 1e6, 1)
+                for st, v in sorted(r["ttfr_breakdown_s"].items())
+            },
+            "breakdown_gap_max_rel": round(r["breakdown_gap_max_rel"], 4),
+            "breakdown_gap_max_us": round(r["breakdown_gap_max_us"], 1),
         }
 
     return {
-        "schema_version": 1,
+        # v2: adds per-stage TTFR breakdown columns per round.
+        "schema_version": 2,
         "benchmark": "query_concurrency",
         "n_rows": res["n_rows"],
         "mix": res["mix"],
@@ -403,6 +447,17 @@ def validate(res: Dict) -> List[str]:
             f"live-ingest p99 TTFR {live4['ttfr_p99'] * 1e3:.1f}ms exceeds "
             f"2x at-rest p99 {rest4['ttfr_p99'] * 1e3:.1f}ms at 4 sessions"
         )
+    # TTFR anatomy tiles the measurement: at 4 concurrent sessions every
+    # query's six-stage sum lands within 5% of its measured TTFR (a 75us
+    # absolute floor keeps clock-read slack from failing sub-ms queries).
+    for r in (rest4, live4):
+        if r["breakdown_gap_max_rel"] > 0.05 and r["breakdown_gap_max_us"] > 75.0:
+            tag = "live-ingest" if r["ingest"] else "at-rest"
+            fails.append(
+                f"TTFR breakdown does not tile at 4 sessions ({tag}): worst "
+                f"gap {r['breakdown_gap_max_rel']:.2%} "
+                f"({r['breakdown_gap_max_us']:.0f}us)"
+            )
     # Background compaction happened, and nothing folded on the query path.
     if res["compactor_folds"] < 1:
         fails.append("background compactor never folded during the sweep")

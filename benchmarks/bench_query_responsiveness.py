@@ -96,3 +96,26 @@ def validate(results: List[Dict]) -> List[str]:
     ):
         fails.append("QC: index total runtime not better than scan")
     return fails
+
+def emit_json(results: List[Dict]) -> Dict:
+    """Canonical artifact (BENCH_query_responsiveness.json via
+    benchmarks/run.py): Table I / Fig 5 milestone latencies per
+    query x scheme."""
+    return {
+        "schema_version": 1,
+        "benchmark": "query_responsiveness",
+        "results": [
+            {
+                "query": r["query"],
+                "domain": r["domain"],
+                "scheme": r["scheme"],
+                "rows": r["rows"],
+                "batches": r["batches"],
+                "total_ms": round(r["total_s"] * 1e3, 3),
+                "latency_ms": {
+                    str(m): round(v * 1e3, 3) for m, v in sorted(r["latency"].items())
+                },
+            }
+            for r in results
+        ],
+    }

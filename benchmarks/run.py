@@ -12,6 +12,11 @@ the paper's qualitative claims. Tables map to the paper as:
               sessions over the serve plane, at rest and under live ingest
     table2_*  Table II query total runtime
     kernel_*  (ours)  store kernel throughput
+
+Every benchmarks/bench_*.py module is wired through this harness — CSV
+lines, validate() failures (where the module defines them), and a
+checked-in BENCH_<name>.json artifact (common.write_artifact) per
+module. None are manual-only.
 """
 from __future__ import annotations
 
@@ -45,6 +50,9 @@ def main() -> None:
     r1 = bench_query_responsiveness.run(bs)
     lines += bench_query_responsiveness.emit_csv(r1)
     failures += [f"responsiveness: {f}" for f in bench_query_responsiveness.validate(r1)]
+    print("# wrote", write_artifact("query_responsiveness",
+                                    bench_query_responsiveness.emit_json(r1)),
+          file=sys.stderr, flush=True)
 
     print("# table II: query runtime ...", file=sys.stderr, flush=True)
     r2 = bench_query_runtime.run(bs)
@@ -73,6 +81,8 @@ def main() -> None:
     print("# kernels ...", file=sys.stderr, flush=True)
     r4 = bench_kernels.run()
     lines += bench_kernels.emit_csv(r4)
+    print("# wrote", write_artifact("kernels", bench_kernels.emit_json(r4)),
+          file=sys.stderr, flush=True)
 
     print("name,us_per_call,derived")
     for line in lines:

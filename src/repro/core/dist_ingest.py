@@ -703,6 +703,8 @@ class TabletGroup:
         m_blocked,
         m_folds,
         m_last_seal_rows,
+        m_group_stall=None,
+        m_group_stall_events=None,
     ):
         self.gid = int(gid)
         self.programs = programs
@@ -713,6 +715,8 @@ class TabletGroup:
         self._m_blocked = m_blocked
         self._m_folds = m_folds
         self._m_last_seal_rows = m_last_seal_rows
+        self._m_group_stall = m_group_stall
+        self._m_group_stall_events = m_group_stall_events
         # The single-group plane keeps the historic lock name (occupancy
         # reports, benches and CI key on "plane_lock"); sharded planes
         # name each group's lock so the books attribute contention to the
@@ -846,6 +850,11 @@ class TabletGroup:
                 blocked = self._ingest_locked(append, rts, cols, tab, n)
                 sp.set(blocked_s=blocked)
             self._m_blocked.inc(blocked, writer=writer_id)
+            if blocked > 0.0 and self._m_group_stall is not None:
+                # Group-attributed stall event: same seconds as the
+                # per-writer cells, keyed by WHERE the major tripped.
+                self._m_group_stall.inc(blocked, group=self.gid)
+                self._m_group_stall_events.inc(group=self.gid)
             return blocked
 
     def _ingest_locked(self, append, rts, cols, tab, n: int) -> float:  # holds: lock
@@ -1168,6 +1177,18 @@ class DistIngestPlane:
         self._m_blocked = self.metrics.counter(
             "plane_blocked_seconds_total", "writer seconds blocked on tripped majors"
         )
+        # Group-attributed view of the same stalls: the per-writer cells
+        # answer WHO paid, these answer WHERE — a hot tablet group whose
+        # majors keep tripping shows up as one label here (and as the SLO
+        # watchdog's compaction-stall rule input).
+        self._m_group_stall = self.metrics.counter(
+            "plane_group_stall_seconds_total",
+            "writer seconds blocked on tripped majors, by tablet group",
+        )
+        self._m_group_stall_events = self.metrics.counter(
+            "plane_group_stall_events_total",
+            "ingest appends that tripped a blocking major, by tablet group",
+        )
         self._m_folds = self.metrics.counter(
             "plane_fold_events_total", "run->base folds by driving source"
         )
@@ -1198,6 +1219,8 @@ class DistIngestPlane:
                 g, self.n_groups, programs,
                 self._m_seal, self._m_blocked, self._m_folds,
                 self._m_last_seal_rows,
+                m_group_stall=self._m_group_stall,
+                m_group_stall_events=self._m_group_stall_events,
             )
             for g in range(self.n_groups)
         )

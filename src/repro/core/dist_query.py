@@ -1037,9 +1037,10 @@ class _PinnedSource:
     batches will execute against, even while publishes and background
     compactions race the query (per-call isolation for the serve plane)."""
 
-    def __init__(self, proc: "DistQueryProcessor", dist: DistStore):
+    def __init__(self, proc: "DistQueryProcessor", dist: DistStore, profile=None):
         self._proc = proc
         self._dist = dist
+        self._profile = profile  # serve_db QueryProfile: density stage clock
 
     @property
     def schema(self):
@@ -1050,7 +1051,12 @@ class _PinnedSource:
         return self._proc.store.dictionaries
 
     def agg_count(self, field: str, value: str, t_start: int, t_stop: int) -> int:
-        return self._proc._agg_count_on(self._dist, field, value, t_start, t_stop)
+        if self._profile is None:
+            return self._proc._agg_count_on(self._dist, field, value, t_start, t_stop)
+        t0 = time.perf_counter()
+        out = self._proc._agg_count_on(self._dist, field, value, t_start, t_stop)
+        self._profile.density_acc_s += time.perf_counter() - t0
+        return out
 
 
 class QueryRun:
@@ -1078,14 +1084,22 @@ class QueryRun:
         use_index: bool = True,
         batched: bool = True,
         stats=None,
+        profile=None,
     ):
         self.proc = proc
         self.tree = tree
         self.t_start = t_start
         self.t_stop = t_stop
         self.stats = stats
+        # serve_db QueryProfile (or None): the execution layer adds its
+        # density reads and device-program sections into the profile's
+        # accumulators so the serve plane can tile TTFR into stages.
+        self.profile = profile
         self.dist = proc._sync()  # pinned for the whole run
-        source = _PinnedSource(proc, self.dist) if self.dist.has_index else proc.store
+        source = (
+            _PinnedSource(proc, self.dist, profile=profile)
+            if self.dist.has_index else proc.store
+        )
         with span("query.plan", cat="query") as sp:
             self.plan = plan_query(
                 source, tree, t_start, t_stop, w=proc.w,
@@ -1126,7 +1140,8 @@ class QueryRun:
         t0 = time.perf_counter()
         with span("query.step", cat="query", mode=self.plan.mode) as sp:
             blk = self.proc._exec_range(
-                self.plan, self.tree, int(lo), int(hi), self.stats, dist=self.dist
+                self.plan, self.tree, int(lo), int(hi), self.stats,
+                dist=self.dist, profile=self.profile,
             )
             sp.set(rows=int(blk.count))
         runtime = time.perf_counter() - t0
@@ -1309,11 +1324,13 @@ class DistQueryProcessor:
         return step, (opc, a0, a1, cs)
 
     # reprolint: hot-path — the per-batch device program of every scan scheme
-    def scan_range(self, tree, t0: int, t1: int, dist: Optional[DistStore] = None):
+    def scan_range(self, tree, t0: int, t1: int, dist: Optional[DistStore] = None,
+                   profile=None):
         """One range scan across all tablets and all LSM levels. Returns
         (global_count, top-k rows per tablet as (ts, cols) numpy arrays).
         `dist` pins an already-published snapshot (QueryRun); default
-        syncs to the plane's latest."""
+        syncs to the plane's latest. `profile` (serve_db QueryProfile)
+        accumulates the device-program section into device_acc_s."""
         d = dist if dist is not None else self._sync()
         if d.groups is not None:
             # Composite snapshot: one device program per tablet group
@@ -1324,7 +1341,7 @@ class DistQueryProcessor:
             total = 0
             ts_parts, col_parts = [], []
             for sub in d.groups:
-                c, ts, cols = self.scan_range(tree, t0, t1, dist=sub)
+                c, ts, cols = self.scan_range(tree, t0, t1, dist=sub, profile=profile)
                 total += c
                 ts_parts.append(ts)
                 col_parts.append(cols)
@@ -1341,6 +1358,7 @@ class DistQueryProcessor:
         # this batch's device wait to nothing (and np.asarray on a device
         # array is exactly such a sync) — found by reprolint's
         # no-sync-in-hot-path rule.
+        tdev = time.perf_counter()
         with span("query.scan_range", cat="query") as sp:
             total, top_ts, top_cols = step(
                 *args,
@@ -1350,6 +1368,8 @@ class DistQueryProcessor:
             count = int(sp.fence(total))
             ts = np.asarray(sp.fence(top_ts))
             cols = np.asarray(sp.fence(top_cols))
+        if profile is not None:
+            profile.device_acc_s += time.perf_counter() - tdev
         valid = ts != int(INVALID_TS)
         return count, keypack.unrev_ts(ts[valid]), cols[valid]
 
@@ -1394,7 +1414,7 @@ class DistQueryProcessor:
 
     # reprolint: hot-path — the per-batch device program of the index schemes
     def scan_index_range(self, plan: QueryPlan, tree, t0: int, t1: int,
-                         dist: Optional[DistStore] = None):
+                         dist: Optional[DistStore] = None, profile=None):
         """One index-mode range across all tablets (paper Fig 2 on-mesh):
         postings lookup per condition per level, device-side
         intersect/union, candidate-row fetch from every level, and the
@@ -1411,7 +1431,7 @@ class DistQueryProcessor:
             ts_parts, col_parts = [], []
             for sub in d.groups:
                 c, ts, cols, tr, ca = self.scan_index_range(
-                    plan, tree, t0, t1, dist=sub
+                    plan, tree, t0, t1, dist=sub, profile=profile
                 )
                 total += c
                 n_trunc += tr
@@ -1430,6 +1450,7 @@ class DistQueryProcessor:
         # Span + fenced materialization (this path had NEITHER: its
         # device wait was invisible to tracing and charged to the caller
         # as host time — found by reprolint's no-sync-in-hot-path rule).
+        tdev = time.perf_counter()
         with span("query.scan_index_range", cat="query") as sp:
             total, top_ts, top_cols, truncated, cands = step(
                 *self._index_args(d),
@@ -1441,17 +1462,19 @@ class DistQueryProcessor:
             cols = np.asarray(sp.fence(top_cols))
             n_trunc = int(sp.fence(truncated))
             n_cands = int(sp.fence(cands))
+        if profile is not None:
+            profile.device_acc_s += time.perf_counter() - tdev
         valid = ts != int(INVALID_TS)
         return (count, keypack.unrev_ts(ts[valid]), cols[valid], n_trunc, n_cands)
 
     # ---------------------------------------------------- planned execution
     # reprolint: hot-path
     def _exec_range(self, plan: QueryPlan, tree, t0: int, t1: int, stats=None,
-                    dist: Optional[DistStore] = None) -> DistBatch:
+                    dist: Optional[DistStore] = None, profile=None) -> DistBatch:
         d = dist if dist is not None else self.dist
         if plan.mode == "index" and d.has_index:
             count, ts, cols, truncated, cands = self.scan_index_range(
-                plan, tree, t0, t1, dist=d
+                plan, tree, t0, t1, dist=d, profile=profile
             )
             if stats is not None:
                 stats.index_keys_scanned += cands
@@ -1459,7 +1482,7 @@ class DistQueryProcessor:
                 return DistBatch(count, ts, cols)
             # Slab overflow: redo this range with the exact filter-scan
             # step (results identical, just without the candidate cap).
-        count, ts, cols = self.scan_range(tree, t0, t1, dist=d)
+        count, ts, cols = self.scan_range(tree, t0, t1, dist=d, profile=profile)
         return DistBatch(count, ts, cols)
 
     def execute(

@@ -9,6 +9,15 @@ Three layers (see docs/observability.md):
 plus exporters (JSON snapshot, Chrome/Perfetto trace, terminal table).
 """
 
+from .flight import (
+    FlightRecorder,
+    flight_clear,
+    flight_disable,
+    flight_dump,
+    flight_enable,
+    flight_enabled,
+    get_flight,
+)
 from .occupancy import OwnedLock, all_locks, occupancy_snapshot
 from .registry import (
     Counter,
@@ -38,23 +47,42 @@ from .export import (
     write_chrome_trace,
     write_metrics_json,
 )
+from .watchdog import (
+    WatchRule,
+    Watchdog,
+    counter_delta_rule,
+    gauge_rule,
+    lock_wait_rule,
+)
 
 __all__ = [
     "Counter",
+    "FlightRecorder",
     "Gauge",
     "Histogram",
     "MetricsRegistry",
     "OwnedLock",
     "Tracer",
+    "WatchRule",
+    "Watchdog",
     "all_locks",
     "all_registries",
     "chrome_trace",
     "clear",
+    "counter_delta_rule",
     "disable",
     "enable",
     "enabled",
+    "flight_clear",
+    "flight_disable",
+    "flight_dump",
+    "flight_enable",
+    "flight_enabled",
+    "gauge_rule",
+    "get_flight",
     "get_registry",
     "get_tracer",
+    "lock_wait_rule",
     "metrics_snapshot",
     "occupancy_snapshot",
     "serve_prometheus",

@@ -267,25 +267,54 @@ def serve_prometheus(registry=None, port: int = 0, host: str = "127.0.0.1") -> _
     at ``/metrics`` (any other path 404s). ``port=0`` binds an ephemeral
     port; read it back from the returned handle's ``.port`` / ``.url``.
     Scoped to one registry when given, every live registry otherwise —
-    the text is rendered fresh per scrape, so no state is cached."""
+    the text is rendered fresh per scrape, so no state is cached.
+
+    Concurrency contract (tests hammer this from many threads during
+    live ingest): the text is rendered from per-cell locked snapshots,
+    so every histogram cell a scrape sees is internally consistent
+    (cumulative buckets monotone, +Inf bucket == count) even while
+    writers observe concurrently; a scraper that disconnects mid-write
+    is swallowed (no traceback, no dead handler thread); and stop()
+    closes the listening socket before returning, so the port is
+    immediately rebindable."""
     from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 
     class _Handler(BaseHTTPRequestHandler):
         def do_GET(self) -> None:  # noqa: N802 - http.server API
-            if self.path.split("?", 1)[0] != "/metrics":
-                self.send_error(404, "only /metrics is served")
+            try:
+                if self.path.split("?", 1)[0] != "/metrics":
+                    self.send_error(404, "only /metrics is served")
+                    return
+                # Render BEFORE the status line: a mid-render failure
+                # must produce a clean 500, not a half-sent 200.
+                body = to_prometheus_text(registry).encode("utf-8")
+            except (BrokenPipeError, ConnectionResetError):
+                return  # scraper gone; nothing to answer
+            except Exception as e:  # defensive: never kill the endpoint
+                try:
+                    self.send_error(500, f"metrics render failed: {e}")
+                except OSError:
+                    pass
                 return
-            body = to_prometheus_text(registry).encode("utf-8")
-            self.send_response(200)
-            self.send_header("Content-Type", "text/plain; version=0.0.4; charset=utf-8")
-            self.send_header("Content-Length", str(len(body)))
-            self.end_headers()
-            self.wfile.write(body)
+            try:
+                self.send_response(200)
+                self.send_header(
+                    "Content-Type", "text/plain; version=0.0.4; charset=utf-8"
+                )
+                self.send_header("Content-Length", str(len(body)))
+                self.end_headers()
+                self.wfile.write(body)
+            except (BrokenPipeError, ConnectionResetError, OSError):
+                pass  # scraper disconnected mid-write; drop silently
 
         def log_message(self, format: str, *args: object) -> None:
             pass  # scrapes are high-frequency; keep stderr quiet
 
-    server = ThreadingHTTPServer((host, port), _Handler)
+    class _Server(ThreadingHTTPServer):
+        def handle_error(self, request, client_address) -> None:
+            pass  # per-connection errors are handled in do_GET; no stderr spew
+
+    server = _Server((host, port), _Handler)
     server.daemon_threads = True
     thread = threading.Thread(
         target=server.serve_forever, name="prometheus-scrape", daemon=True

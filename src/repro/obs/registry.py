@@ -162,7 +162,8 @@ class Histogram(_Metric):
         if list(e) != sorted(e):
             raise ValueError(f"histogram edges must be sorted: {e}")
         self.edges = e
-        # cell: [bucket_counts(len(edges)+1), sum, count, min, max]
+        # cell: [bucket_counts(len(edges)+1), sum, count, min, max,
+        #        exemplar (trace_id, value) | None]
         self._cells: Dict[LabelKey, List] = {}
 
     def _bucket_index(self, v: float) -> int:
@@ -178,7 +179,14 @@ class Histogram(_Metric):
                 lo = mid + 1
         return lo
 
-    def observe(self, v: float, **labels: object) -> None:
+    def observe(
+        self, v: float, exemplar: Optional[str] = None, **labels: object
+    ) -> None:
+        """Record one value. ``exemplar`` attaches a trace id to the cell
+        (kept policy: the exemplar of the WORST observation so far — the
+        one an SLO investigation wants to pull from the flight recorder);
+        it rides along in snapshot()/metrics_snapshot, not in the
+        Prometheus 0.0.4 text (which has no exemplar syntax)."""
         if not self.registry.enabled:
             return
         v = float(v)
@@ -187,7 +195,8 @@ class Histogram(_Metric):
         with self._lock:
             cell = self._cells.get(key)
             if cell is None:
-                cell = [[0] * (len(self.edges) + 1), 0.0, 0, v, v]
+                # cell: [buckets, sum, count, min, max, exemplar]
+                cell = [[0] * (len(self.edges) + 1), 0.0, 0, v, v, None]
                 self._cells[key] = cell
             cell[0][idx] += 1
             cell[1] += v
@@ -196,6 +205,8 @@ class Histogram(_Metric):
                 cell[3] = v
             if v > cell[4]:
                 cell[4] = v
+            if exemplar is not None and (cell[5] is None or v >= cell[5][1]):
+                cell[5] = (str(exemplar), v)
 
     def snapshot(self, **labels: object) -> Optional[Dict[str, object]]:
         key = _label_key(labels)
@@ -203,13 +214,16 @@ class Histogram(_Metric):
             cell = self._cells.get(key)
             if cell is None:
                 return None
-            return {
+            out = {
                 "buckets": list(cell[0]),
                 "sum": cell[1],
                 "count": cell[2],
                 "min": cell[3],
                 "max": cell[4],
             }
+            if cell[5] is not None:
+                out["exemplar"] = {"trace_id": cell[5][0], "value": cell[5][1]}
+            return out
 
     def count(self, **labels: object) -> int:
         snap = self.snapshot(**labels)

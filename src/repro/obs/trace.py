@@ -35,6 +35,8 @@ import time
 from collections import deque
 from typing import Any, Callable, Deque, Dict, List, Optional
 
+from .flight import get_flight
+
 __all__ = [
     "Tracer",
     "clear",
@@ -157,6 +159,7 @@ class Tracer:
         self._threads: Dict[int, str] = {}
         self._threads_lock = threading.Lock()
         self._drop = _DropSpan(self)
+        self._flight = get_flight()
 
     # -- internals -------------------------------------------------------
     def _next_sid(self) -> int:
@@ -209,6 +212,16 @@ class Tracer:
         if sp.fence_s:
             rec["fence_s"] = sp.fence_s
         self.records.append(rec)
+        # Forward every kept record to the flight recorder (its window
+        # stays continuous whether tracing is on or off); sids share a
+        # namespace inside a dump — flight-native sids start far above
+        # the tracer counter, so linkage never collides.
+        fr = self._flight
+        if fr.enabled:
+            fr.record(
+                sp.name, sp.cat, sp.sid, sp.parent, sp.tid,
+                sp.t0, dur, sp.fence_s, sp.args,
+            )
 
     # -- public ----------------------------------------------------------
     def span(self, name: str, cat: str = "", **args: object):
@@ -216,10 +229,22 @@ class Tracer:
             return _NULL
         if self.sample_n > 1:
             if getattr(self._tls, "drop_depth", 0) > 0:
-                return self._drop  # child of a dropped root
+                return self._dropped(name, cat, args)  # child of dropped root
             if not self._stack() and not self._sample_root():
-                return self._drop  # root not sampled this period
+                return self._dropped(name, cat, args)  # root not sampled
         return _Span(self, name, cat, dict(args))
+
+    def _dropped(self, name: str, cat: str, args: Dict[str, Any]):
+        """A span the sampler rejects: normally the cheap drop singleton,
+        but when the flight recorder is on it records there anyway — the
+        flight window is bounded by TIME, not rate, so sampling must not
+        punch holes in it. The flight span maintains the tracer's
+        drop-depth exactly like the singleton, so children still follow
+        their root's fate in the sampled trace."""
+        fr = self._flight
+        if fr.enabled:
+            return fr.span(name, cat, dict(args) if args else None, drop_tls=self._tls)
+        return self._drop
 
     def add_complete(
         self,
@@ -232,7 +257,15 @@ class Tracer:
     ) -> None:
         """Record a span retroactively from (start, duration) timestamps
         measured elsewhere — used for lock-hold segments, which are timed
-        by OwnedLock whether or not tracing was on when they began."""
+        by OwnedLock whether or not tracing was on when they began. The
+        flight recorder receives these too (when enabled), so incident
+        dumps carry lock tracks even with tracing off."""
+        fr = self._flight
+        if fr.enabled:
+            fr.record_complete(
+                name, cat, tid if tid is not None else threading.get_ident(),
+                t0, dur, dict(args),
+            )
         if not self.enabled:
             return
         if tid is None:
@@ -269,8 +302,14 @@ def get_tracer() -> Tracer:
 
 def span(name: str, cat: str = "", **args: object):
     """Open a span on the global tracer (no-op singleton when disabled;
-    drop singleton when sampled out — see module docstring)."""
+    drop singleton when sampled out — see module docstring). When the
+    FLIGHT RECORDER is enabled, a disabled tracer yields a recording
+    flight span instead of the null singleton: the last-N-seconds window
+    exists whether or not anyone turned tracing on."""
     if not _tracer.enabled:
+        fr = _tracer._flight
+        if fr.enabled:
+            return fr.span(name, cat, dict(args) if args else None)
         return _NULL
     return _tracer.span(name, cat, **args)
 

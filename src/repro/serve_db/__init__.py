@@ -3,6 +3,7 @@ batches over ONE shared DistIngestPlane, with background compaction off
 the query path. See docs/serving_db.md. (The LM serve engine lives in
 repro.serving — different workload, same Alg-1 admission law.)"""
 from .compactor import BackgroundCompactor  # noqa: F401
+from .profile import QueryProfile, ttfr_event_probe  # noqa: F401
 from .scheduler import FairScheduler, QueryEntry, TurnQuantum  # noqa: F401
 from .service import QueryService  # noqa: F401
 from .session import QuerySession, ResultBatch, StreamingQuery  # noqa: F401

@@ -80,6 +80,8 @@ class QueryEntry:
     stats: object = None
     run: object = None
     ready_at: float = 0.0
+    popped_at: float = 0.0  # when pop_turn released it (profile: splits
+    # admission into scheduler-queue wait vs device-lock acquire)
     seq: int = 0
     kw: dict = field(default_factory=dict)
 
@@ -161,8 +163,10 @@ class FairScheduler:
                 entry = self._fresh.popleft()
             elif self._cont:
                 entry = self._cont.popleft()
-            if entry is not None and on_pop is not None:
-                on_pop()
+            if entry is not None:
+                entry.popped_at = time.perf_counter()
+                if on_pop is not None:
+                    on_pop()
             return entry
 
     def log_turn(

@@ -65,10 +65,15 @@ SCHEME_FLAGS = {
 
 class _OneShotRun:
     """Adapter: a single-dispatch query (aggregate / density) as a
-    one-step run, so the scheduler treats it like any other turn."""
+    one-step run, so the scheduler treats it like any other turn. The
+    whole dispatch is charged to the profile's device section (both
+    adapted paths — aggregate_range, agg_count — are single fenced
+    device programs; their host epilogues are the remainder of the
+    step, which the service books separately)."""
 
-    def __init__(self, fn):
+    def __init__(self, fn, profile=None):
         self._fn = fn
+        self._profile = profile
         self._done = False
 
     @property
@@ -76,7 +81,10 @@ class _OneShotRun:
         return self._done
 
     def step(self):
+        t0 = time.perf_counter()
         out = self._fn()
+        if self._profile is not None:
+            self._profile.device_acc_s += time.perf_counter() - t0
         self._done = True
         return out
 
@@ -234,7 +242,7 @@ class QueryService:
                     count=int(res.counts.sum()), blocks=[res],
                 )
 
-            return _OneShotRun(fn)
+            return _OneShotRun(fn, profile=sq.profile)
         if sq.scheme == "density":
             field_, value = sq.tree  # (field, value) packed by submit
             src = self.store if backend == "host" else self.proc
@@ -245,7 +253,7 @@ class QueryService:
                     seq=0, lo=sq.t_start, hi=sq.t_stop, count=int(d)
                 )
 
-            return _OneShotRun(fn)
+            return _OneShotRun(fn, profile=sq.profile)
         flags = SCHEME_FLAGS[sq.scheme]
         if backend == "host":
             return HostQueryRun(
@@ -254,7 +262,7 @@ class QueryService:
             )
         return QueryRun(
             self.proc, sq.tree, sq.t_start, sq.t_stop,
-            stats=entry.stats, **flags,
+            stats=entry.stats, profile=sq.profile, **flags,
         )
 
     @staticmethod
@@ -284,18 +292,33 @@ class QueryService:
         # keys the starvation guard on first-result turns (seq0 == 0)
         # and their queue wait — the stall incremental compaction bounds.
         seq0, wait0 = entry.seq, wait_s
+        # TTFR anatomy (profile.py): the stage boundaries below are read
+        # off ONE thread's clock, back to back, so the first-result
+        # stages tile the measured TTFR (bench asserts the sum is within
+        # 5%). Admission closes when this turn starts.
+        prof = entry.stream.profile
+        if entry.stream.first_result_at is None:
+            prof.admission_s = t0 - entry.stream.submitted_at
+            if entry.popped_at:
+                prof.admission_queue_s = entry.popped_at - entry.stream.submitted_at
         if entry.run is None:
             # Built here, on the dispatcher, under the device lock:
             # planning reads densities off the mesh (device work), and it
             # counts toward this query's time-to-first-result like every
             # other serving cost. For the occupancy books this stretch of
             # the hold is density/planning work, not batch stepping.
+            tp0 = time.perf_counter()
             with self._device_lock.reowner("density_read"):
                 with span(
                     "serve.plan", cat="serve",
                     session=entry.session.session_id, scheme=entry.stream.scheme,
                 ):
                     entry.run = self._build_run(entry)
+            # plan = run construction minus the density reads the
+            # execution layer accumulated inside it (the fenced d_i
+            # lookups are their own stage — the paper's follower cost).
+            prof.density_fence_s = prof.density_acc_s
+            prof.plan_s = (time.perf_counter() - tp0) - prof.density_fence_s
             if entry.run.done:  # provably-empty plan: zero batches
                 entry.stream._finish()
                 self._report_session(entry.session)
@@ -308,13 +331,28 @@ class QueryService:
         budget = quantum.budget()
         served = 0
         while served < budget and not entry.run.done:
+            first = entry.stream.first_result_at is None
+            dev0 = prof.device_acc_s
             start = time.perf_counter()
             blk = entry.run.step()
             end = time.perf_counter()
             if blk is None:
                 break
+            # Device section accumulated by the execution layer during
+            # step(); everything else in the step is host epilogue
+            # (top-k merges, valid-row filters, batcher bookkeeping).
+            dev = prof.device_acc_s - dev0
+            prof.note_step(dev, (end - start) - dev, first)
+            td0 = time.perf_counter()
             with span("serve.deliver", cat="serve", session=entry.session.session_id):
                 entry.stream._deliver(self._as_result(entry, blk, wait_s, end - start))
+            if first:
+                # deliver closes at the first_result_at stamp _deliver
+                # just wrote — the same instant TTFR is measured against.
+                prof.note_deliver(entry.stream.first_result_at - td0, True)
+                prof.commit(entry.stream.first_result_s)
+            else:
+                prof.note_deliver(time.perf_counter() - td0, False)
             wait_s = 0.0  # later batches of this turn never waited
             entry.seq += 1
             served += 1
@@ -349,6 +387,7 @@ class QueryService:
                     with span(
                         "serve.turn", cat="serve",
                         session=entry.session.session_id,
+                        qid=entry.stream.qid,
                     ):
                         self._run_turn(entry)
             except BaseException as e:  # deliver, don't kill the dispatcher

@@ -31,6 +31,8 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from .profile import QueryProfile
+
 _DONE = object()  # stream sentinel
 
 
@@ -59,7 +61,10 @@ class ResultBatch:
 
 class StreamingQuery:
     """Handle on one submitted query: a thread-safe stream of ResultBatch
-    plus per-query telemetry (time-to-first-result, queue wait)."""
+    plus per-query telemetry (time-to-first-result, queue wait) and a
+    :class:`~repro.serve_db.profile.QueryProfile` decomposing the TTFR
+    into serve-path stages (filled in by the dispatcher as the query
+    moves; complete once the first result is delivered)."""
 
     def __init__(self, qid: int, scheme: str, t_start: int, t_stop: int, tree):
         self.qid = qid
@@ -67,6 +72,7 @@ class StreamingQuery:
         self.t_start = t_start
         self.t_stop = t_stop
         self.tree = tree
+        self.profile = QueryProfile(qid, scheme)
         self.submitted_at = time.perf_counter()
         self.first_result_at: Optional[float] = None
         self.finished_at: Optional[float] = None

@@ -669,3 +669,400 @@ def test_owned_lock_books_acquire_wait():
     assert merged["total_wait_s"] == snap["total_wait_s"]
     lk.reset()
     assert lk.snapshot()["total_wait_s"] == 0.0
+
+
+# ------------------------------------------------------------ flight recorder
+def test_flight_ring_wraparound_evicts_oldest():
+    """A private recorder with an 8-slot ring keeps exactly the 8 newest
+    spans; older records are overwritten in place and sids never repeat."""
+    fr = obs.FlightRecorder(per_thread=8)
+    for i in range(20):
+        with fr.span(f"s{i}", cat="t"):
+            pass
+    recs = fr.records()
+    assert [r["name"] for r in recs] == [f"s{i}" for i in range(12, 20)]
+    assert len({r["sid"] for r in recs}) == 8
+    # Flight sids live in their own namespace, far above tracer sids.
+    assert all(r["sid"] >= (1 << 40) for r in recs)
+
+
+def test_flight_dump_roundtrips_validator_with_evicted_parents():
+    """dump() must validate even when the ring evicted (or has not yet
+    recorded) a kept child's parent: the dangling parent ref is cleared.
+    Once the parent record lands, kept children link to it again."""
+    fr = obs.FlightRecorder(per_thread=4)
+    with fr.span("root", cat="t"):
+        for i in range(6):
+            with fr.span(f"c{i}", cat="t"):
+                pass
+        # Root is still open -> not recorded -> every kept child's parent
+        # points outside the dump. The dump must clear those refs.
+        mid = fr.dump(window_s=60.0)
+        assert obs.validate_chrome_trace(mid) == []
+        xs = [e for e in mid["traceEvents"] if e.get("ph") == "X"]
+        assert [e["name"] for e in xs] == ["c2", "c3", "c4", "c5"]
+        assert all("parent" not in e["args"] for e in xs)
+    doc = fr.dump(window_s=60.0)
+    assert obs.validate_chrome_trace(doc) == []
+    xs = [e for e in doc["traceEvents"] if e.get("ph") == "X"]
+    # records() orders by span START, so the long-open root sorts first
+    assert [e["name"] for e in xs] == ["root", "c3", "c4", "c5"]
+    root_sid = next(e["args"]["sid"] for e in xs if e["name"] == "root")
+    for e in xs:
+        if e["name"] != "root":
+            assert e["args"]["parent"] == root_sid
+    # Thread metadata rides along for Perfetto lane names.
+    assert any(e.get("ph") == "M" for e in doc["traceEvents"])
+
+
+def test_flight_captures_serve_plane_with_tracing_disabled():
+    """The acceptance shape: tracing OFF for the whole run, flight ON —
+    the dump still covers ingest, fold, and serve spans and validates."""
+    assert not obs.enabled()
+    obs.flight_clear()
+    obs.flight_enable()
+    try:
+        store, plane = _serve_fixture(n=2_000)
+        plane.compact(source="explicit")
+        with QueryService(store, plane, compaction_interval=0.01) as svc:
+            s = svc.session("flight0")
+            s.submit("batched_index", 0, T_SPAN, Eq("domain", "a.com")).drain(
+                timeout=120.0
+            )
+        doc = obs.flight_dump(window_s=600.0)
+    finally:
+        obs.flight_disable()
+        obs.flight_clear()
+    assert obs.validate_chrome_trace(doc) == []
+    names = {e["name"] for e in doc["traceEvents"] if e.get("ph") == "X"}
+    assert "serve.turn" in names
+    assert any(n.startswith("ingest.") for n in names)
+    assert "ingest.compact" in names  # the fold path
+    assert any(n.startswith("query.") for n in names)
+
+
+def test_flight_enabled_overhead_under_2pct():
+    """Same budget as the disabled-tracing gate: with the flight recorder
+    armed (tracing still off), per-span cost stays < 2% of a scan step."""
+    store, plane = _serve_fixture(n=2_000)
+    dq = DistQueryProcessor(store, plane=plane)
+    assert not obs.enabled()
+    dq.scan_range(None, 0, T_SPAN)  # warm compiles
+    scan_times = []
+    for _ in range(10):
+        t0 = time.perf_counter()
+        dq.scan_range(None, 0, T_SPAN)
+        scan_times.append(time.perf_counter() - t0)
+    scan_s = float(np.median(scan_times))
+
+    obs.flight_clear()
+    obs.flight_enable()
+    try:
+        n_iter = 100_000
+        t0 = time.perf_counter()
+        for _ in range(n_iter):
+            with obs.span("x", cat="t"):
+                pass
+        span_s = (time.perf_counter() - t0) / n_iter
+    finally:
+        obs.flight_disable()
+        obs.flight_clear()
+    overhead = 10 * span_s / scan_s
+    assert overhead < 0.02, f"flight-span overhead {overhead:.4%} of a scan"
+
+
+def test_flight_captures_sampled_out_spans():
+    """With tracing sampling at 1/3, the tracer keeps every 3rd root but
+    the flight window keeps ALL of them — its bound is time, not rate."""
+    obs.flight_clear()
+    obs.flight_enable()
+    obs.clear()
+    obs.enable(sample=1 / 3)
+    try:
+        for i in range(9):
+            with obs.span(f"fr{i}", cat="t"):
+                with obs.span(f"fk{i}", cat="t"):
+                    pass
+    finally:
+        obs.disable()
+    fnames = {r["name"] for r in obs.get_flight().records()}
+    obs.flight_disable()
+    obs.flight_clear()
+    assert {f"fr{i}" for i in range(9)} <= fnames
+    assert {f"fk{i}" for i in range(9)} <= fnames
+    troots = [r for r in obs.get_tracer().records if r["name"].startswith("fr")]
+    assert len(troots) == 3  # the sampler's view is still 1-in-3
+
+
+# ----------------------------------------------------------------- watchdog
+def test_watchdog_tick_writes_incident_bundle(tmp_path):
+    """Synchronous tick(): below threshold -> nothing; p99 breach ->
+    exactly one bundle (incident.json + validating trace.json +
+    parseable metrics.json); cooldown suppresses the repeat."""
+    reg = MetricsRegistry("t_wd_bundle")
+    pending = []
+
+    def probe():
+        out = list(pending)
+        pending.clear()
+        return out
+
+    rule = obs.WatchRule(
+        "ttfr_p99", probe, 0.5, window_s=30.0, agg="p99", cooldown_s=3600.0
+    )
+    wd = obs.Watchdog(
+        [rule], incident_dir=str(tmp_path / "inc"), registry=reg,
+        flight_window_s=60.0,
+    )
+    obs.flight_clear()
+    obs.flight_enable()
+    try:
+        with obs.span("incident_context", cat="t"):
+            pass
+        wd.tick()  # no events yet: no breach
+        assert wd.incidents() == []
+        pending.append((time.perf_counter(), 1.25))
+        wd.tick()
+    finally:
+        obs.flight_disable()
+        obs.flight_clear()
+    incs = wd.incidents()
+    assert len(incs) == 1 and incs[0]["kind"] == "incident"
+    assert incs[0]["rule"] == "ttfr_p99"
+    assert incs[0]["value"] == pytest.approx(1.25)
+
+    bundle = incs[0]["bundle"]
+    rec = json.loads(open(f"{bundle}/incident.json").read())
+    assert rec["threshold"] == 0.5 and rec["agg"] == "p99"
+    trace = json.loads(open(f"{bundle}/trace.json").read())
+    assert obs.validate_chrome_trace(trace) == []
+    assert any(
+        e.get("name") == "incident_context" for e in trace["traceEvents"]
+    )
+    snap = json.loads(open(f"{bundle}/metrics.json").read())
+    assert snap["kind"] == "obs_metrics_snapshot"
+
+    # Registry surface: one incident, rule gauges populated.
+    assert reg.counter("watchdog_incidents_total", "").value(rule="ttfr_p99") == 1
+    assert reg.gauge("watchdog_rule_breached", "").value(rule="ttfr_p99") == 1.0
+
+    # Cooldown: the window still holds the breach sample, but no new
+    # bundle is written inside cooldown_s.
+    wd.tick()
+    assert len(wd.incidents()) == 1
+
+
+def test_watchdog_rule_kinds_and_probe_error(tmp_path):
+    """gauge/delta rule constructors breach on real metric movement, and
+    a raising probe is recorded as probe_error without killing the tick."""
+    reg = MetricsRegistry("t_wd_kinds")
+    g = reg.gauge("stall_seconds", "worst increment")
+    c = reg.counter("blocked_seconds_total", "writer blocked")
+
+    def bad_probe():
+        raise RuntimeError("probe exploded")
+
+    wd = obs.Watchdog(
+        [
+            obs.gauge_rule("stall", g, 0.5, cooldown_s=3600.0),
+            obs.counter_delta_rule(
+                "blocked", c, 1.0, window_s=30.0, cooldown_s=3600.0
+            ),
+            obs.WatchRule("boom", bad_probe, 1.0, agg="gauge"),
+        ],
+        incident_dir=str(tmp_path / "inc"),
+        registry=reg,
+    )
+    wd.tick()  # baseline: nothing breaches, boom errors
+    assert [i["rule"] for i in wd.incidents() if i["kind"] == "probe_error"] == [
+        "boom"
+    ]
+    assert wd.values()["stall"] == 0.0 and wd.values()["blocked"] == 0.0
+
+    g.set(0.75)
+    c.inc(5.0, writer="w0")
+    wd.tick()
+    fired = {i["rule"] for i in wd.incidents() if i.get("kind") == "incident"}
+    assert fired == {"stall", "blocked"}
+    assert wd.values()["stall"] == pytest.approx(0.75)
+    assert wd.values()["blocked"] == pytest.approx(5.0)  # delta over window
+    # Both bundles exist on disk with the full triple.
+    for inc in wd.incidents():
+        if inc.get("kind") != "incident":
+            continue
+        for part in ("incident.json", "trace.json", "metrics.json"):
+            assert json.loads(open(f"{inc['bundle']}/{part}").read()) is not None
+
+
+# ------------------------------------------------------------- query profile
+def test_query_profile_breakdown_sums_to_ttfr():
+    """Every served stream carries a committed QueryProfile whose six
+    first-result stages tile the measured TTFR to within 5%, and the
+    stage histograms carry trace-id exemplars."""
+    store, plane = _serve_fixture()
+    with QueryService(store, plane, compaction_interval=0.01) as svc:
+        sessions = [svc.session(name=f"p{i}") for i in range(4)]
+        streams = []
+        for i, s in enumerate(sessions):
+            tree = Eq("domain", ["a.com", "b.com", "c.com", "rare.net"][i])
+            streams.append(s.submit("batched_index", 0, T_SPAN, tree))
+            streams.append(s.submit("batched_scan", 0, T_SPAN, None))
+        for sq in streams:
+            sq.drain(timeout=120.0)
+    for sq in streams:
+        p = sq.profile
+        assert p.committed and p.ttfr_s is not None and p.ttfr_s > 0
+        stages = p.stages()
+        assert set(stages) == set(
+            ("admission", "plan", "density_fence", "device_step",
+             "epilogue", "deliver")
+        )
+        assert all(v >= 0.0 for v in stages.values()), stages
+        gap = abs(p.breakdown_sum_s() - p.ttfr_s)
+        assert gap <= 0.05 * p.ttfr_s, (
+            f"{p.scheme} q{p.qid}: stages {p.breakdown_sum_s():.6f}s vs "
+            f"ttfr {p.ttfr_s:.6f}s ({gap / p.ttfr_s:.2%} off)"
+        )
+        # The queue sub-split never exceeds the whole admission stage.
+        assert p.admission_queue_s <= p.admission_s + 1e-6
+        assert p.steps_total >= 1 and p.device_total_s >= p.device_step_s
+
+    import re
+
+    h = obs.get_registry().histogram("query_profile_seconds", "")
+    cell = h.snapshot(stage="device_step", scheme="batched_index")
+    assert cell is not None and cell["count"] >= 1
+    assert re.fullmatch(r"q\d+", cell["exemplar"]["trace_id"])
+    th = obs.get_registry().histogram("query_profile_ttfr_seconds", "")
+    tcell = th.snapshot(scheme="batched_scan")
+    assert tcell is not None and re.fullmatch(r"q\d+", tcell["exemplar"]["trace_id"])
+
+
+# -------------------------------------------------- /metrics under hammering
+def _assert_hist_families_consistent(parsed):
+    """Every histogram family in one scrape is internally consistent:
+    cumulative buckets monotone in le, +Inf bucket equals _count."""
+    for name, fam in parsed.items():
+        if fam["type"] != "histogram":
+            continue
+        buckets, counts = {}, {}
+        for (sname, labels), val in fam["samples"].items():
+            ld = dict(labels)
+            if sname.endswith("_bucket"):
+                le = ld.pop("le")
+                key = frozenset(ld.items())
+                edge = float("inf") if le == "+Inf" else float(le)
+                buckets.setdefault(key, []).append((edge, val))
+            elif sname.endswith("_count"):
+                counts[frozenset(ld.items())] = val
+        for key, bs in buckets.items():
+            bs.sort()
+            vals = [v for _, v in bs]
+            assert vals == sorted(vals), f"{name}: non-monotone buckets"
+            assert bs[-1][0] == float("inf"), f"{name}: missing +Inf bucket"
+            assert vals[-1] == counts[key], f"{name}: +Inf bucket != count"
+
+
+def test_serve_prometheus_concurrent_scrapes_during_ingest():
+    """Hammer /metrics from several threads while a writer feeds the live
+    plane: every scrape parses, every histogram snapshot is internally
+    consistent, no thread raises, and the port is released on stop()."""
+    import socket
+    from urllib.request import urlopen
+
+    store, plane = _serve_fixture(n=2_000)
+    ep = obs.serve_prometheus()  # all registries, incl. the live plane's
+    stop = threading.Event()
+    errors = []
+
+    def writer_loop():
+        w = DistBatchWriter(store, plane, batch_rows=256)
+        rng = np.random.default_rng(5)
+        budget = 1_800
+        try:
+            while not stop.is_set() and budget > 0:
+                m = 128
+                bts = np.sort(rng.integers(0, T_SPAN, m))
+                bvals = {
+                    "domain": rng.choice(
+                        ["a.com", "b.com", "c.com", "rare.net"],
+                        p=[0.6, 0.25, 0.13, 0.02], size=m,
+                    ).tolist(),
+                    "method": rng.choice(["GET", "POST"], size=m).tolist(),
+                    "status": rng.choice(
+                        ["200", "404"], size=m, p=[0.8, 0.2]
+                    ).tolist(),
+                }
+                w.add(bts, bvals)
+                budget -= m
+        except Exception as e:  # surfaced below; must not die silently
+            errors.append(e)
+        finally:
+            w.close()
+
+    scrapes = [0] * 4
+
+    def scrape_loop(i):
+        deadline = time.perf_counter() + 1.2
+        try:
+            while time.perf_counter() < deadline:
+                body = urlopen(ep.url, timeout=10).read().decode()
+                _assert_hist_families_consistent(_parse_prom(body))
+                scrapes[i] += 1
+        except Exception as e:
+            errors.append(e)
+
+    threads = [threading.Thread(target=writer_loop)] + [
+        threading.Thread(target=scrape_loop, args=(i,)) for i in range(4)
+    ]
+    try:
+        for t in threads:
+            t.start()
+    finally:
+        for t in threads[1:]:
+            t.join()
+        stop.set()
+        threads[0].join()
+        ep.stop()
+    assert not errors, errors
+    assert all(n > 0 for n in scrapes)
+    # Port fully released: a fresh socket can bind it immediately.
+    s = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    s.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+    try:
+        s.bind((ep.host, ep.port))
+    finally:
+        s.close()
+
+
+# --------------------------------------------------------------- daemon smoke
+def test_serve_daemon_main_produces_incident(tmp_path, capsys):
+    """`python -m repro.serve_db` end to end, in-process: a tight TTFR
+    SLO must yield exit 0, the machine-readable header lines, and a
+    validating incident bundle."""
+    from repro.serve_db.__main__ import main
+
+    try:
+        rc = main(
+            [
+                "--rows", "1200", "--sessions", "2", "--writers", "1",
+                "--duration", "1.5", "--incident-dir", str(tmp_path / "inc"),
+                "--ttfr-slo", "0.000001", "--window", "5", "--tick", "0.1",
+                "--groups", "1", "--tablets-per-device", "2",
+            ]
+        )
+    finally:
+        obs.flight_disable()  # main() arms the global recorder
+        obs.flight_clear()
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "METRICS_URL=http://" in out
+    assert f"INCIDENT_DIR={tmp_path / 'inc'}" in out
+    bundles = sorted((tmp_path / "inc").glob("*_ttfr_p99"))
+    assert bundles, out
+    trace = json.loads((bundles[0] / "trace.json").read_text())
+    assert obs.validate_chrome_trace(trace) == []
+    assert any(e.get("ph") == "X" for e in trace["traceEvents"])
+    snap = json.loads((bundles[0] / "metrics.json").read_text())
+    assert snap["kind"] == "obs_metrics_snapshot"
+    assert "INCIDENT=" in out
